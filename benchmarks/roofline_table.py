@@ -1,0 +1,97 @@
+"""Render the §Roofline / §Dry-run tables in EXPERIMENTS.md from the
+cached results/dryrun/*.json (no recompilation).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--md]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+
+ARCH_ORDER = ["hubert-xlarge", "mixtral-8x7b", "kimi-k2-1t-a32b",
+              "qwen1.5-4b", "nemotron-4-15b", "qwen3-8b", "gemma2-9b",
+              "internvl2-76b", "rwkv6-1.6b", "jamba-1.5-large-398b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, variant: str = "") -> List[Dict]:
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            v = f"__{variant}" if variant else ""
+            p = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}{v}.json")
+            if os.path.exists(p):
+                with open(p) as f:
+                    out.append(json.load(f))
+    return out
+
+
+def fmt_si(x: float) -> str:
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= div:
+            return f"{x/div:.2f}{suf}"
+    return f"{x:.1f}"
+
+
+def roofline_rows(variant: str = "") -> List[Dict]:
+    rows = []
+    for r in load("pod16x16", variant):
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        arg_gb = ma.get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = ma.get("temp_size_in_bytes", 0) / 1e9
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "frac": rf["roofline_fraction"],
+            "model_flops": rf["model_flops"],
+            "hlo_flops": rf["hlo_total_flops"],
+            "useful": rf["useful_flops_ratio"],
+            "args_gb": arg_gb, "temp_gb": tmp_gb,
+            "compile_s": r.get("compile_s", 0),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = roofline_rows()
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | roofline frac | MODEL/HLO flops | args GB/dev | "
+          "temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+              f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+              f"**{r['dominant']}** | {r['frac']:.3f} | "
+              f"{r['useful']:.2f} | {r['args_gb']:.2f} | "
+              f"{r['temp_gb']:.2f} |")
+    # dry-run proof table
+    print()
+    print("| arch | shape | pod16x16 | pod2x16x16 | collectives "
+          "(single-pod full HLO) |")
+    print("|---|---|---|---|---|")
+    multi = {(r["arch"], r["shape"]): r for r in load("pod2x16x16")}
+    for r in load("pod16x16"):
+        key = (r["arch"], r["shape"])
+        m = multi.get(key, {})
+        c = r.get("collectives_full_hlo", {}).get("counts", {})
+        cs = " ".join(f"{k}:{v}" for k, v in sorted(c.items()))
+        ok1 = "OK" if r.get("ok") else r.get("skipped", "FAIL")
+        ok2 = "OK" if m.get("ok") else m.get("skipped", "FAIL")
+        print(f"| {r['arch']} | {r['shape']} | {ok1} "
+              f"({r.get('compile_s', 0):.1f}s) | {ok2} "
+              f"({m.get('compile_s', 0):.1f}s) | {cs} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+import os
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # the communication benchmarks need a device fabric; 8 host devices
+    # (set before any jax import — this is the benchmark entry point)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+"""Benchmark harness entry point (deliverable d).
+
+One function per paper table/figure (benchmarks/figures.py) plus the
+framework tie-ins. Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [figure ...]
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks.figures import ALL_FIGURES
+    wanted = sys.argv[1:] or list(ALL_FIGURES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in wanted:
+        fn = ALL_FIGURES[name]
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        for r in rows:
+            derived = ";".join(f"{k}={v}" for k, v in r.items()
+                               if k not in ("name", "us_per_call"))
+            print(f"{r['name']},{r['us_per_call']:.2f},{derived}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper §4 in one script: the full scheme x network x benchmark sweep
+(figures 7-14), printed as one table.
+
+    PYTHONPATH=src python examples/comm_benchmark_sweep.py [--quick]
+"""
+import os
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys  # noqa: E402
+
+from benchmarks.figures import ALL_FIGURES  # noqa: E402
+
+quick = "--quick" in sys.argv
+names = (["fig7", "paper_claims"] if quick else list(ALL_FIGURES))
+for name in names:
+    print(f"==== {name} " + "=" * (60 - len(name)))
+    for row in ALL_FIGURES[name]():
+        extras = " ".join(f"{k}={v}" for k, v in row.items()
+                          if k not in ("name", "us_per_call"))
+        print(f"  {row['name']:42s} {row['us_per_call']:12.2f} us  "
+              f"{extras}")

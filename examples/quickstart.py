@@ -1,0 +1,38 @@
+"""Quickstart: the paper's three micro-benchmarks in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs TF-gRPC-P2P-Latency / -Bandwidth / -PS-Throughput with the paper's
+default payloads on the host-device fabric and prints measured numbers
+next to the calibrated projections for the paper's clusters + TPU
+fabrics.
+"""
+import os
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from repro.configs.tfgrpc_bench import BenchConfig  # noqa: E402
+from repro.core import bench  # noqa: E402
+
+CFG = dict(warmup_s=0.3, duration_s=1.0)
+
+for scheme in ("uniform", "random", "skew"):
+    st = bench.p2p_latency(BenchConfig(scheme=scheme, **CFG))
+    proj = {k: f"{v*1e6:.0f}us" for k, v in st.model_projection.items()
+            if k in ("eth40g", "ipoib_edr", "rdma_edr", "tpu_ici")}
+    print(f"P2P-Latency   [{scheme:7s}] host={st.mean_s*1e6:8.1f}us "
+          f"p95={st.p95_s*1e6:8.1f}us  projections={proj}")
+
+st = bench.p2p_bandwidth(BenchConfig(scheme="skew", **CFG))
+print(f"P2P-Bandwidth [skew   ] host={st.derived['MBps']:8.1f} MB/s "
+      f"projections(MB/s)="
+      f"{ {k: round(v) for k, v in st.model_projection.items()} }")
+
+st = bench.ps_throughput(BenchConfig(
+    benchmark="ps_throughput", num_ps=2, num_workers=3, **CFG))
+print(f"PS-Throughput [2PSx3W ] host={st.derived['rpcs_per_s']:8.1f} "
+      f"RPC/s  projections(RPC/s)="
+      f"{ {k: round(v) for k, v in st.model_projection.items()} }")
+print(f"resources: cpu_util={st.resources.cpu_util:.2f} "
+      f"rss_peak={st.resources.rss_peak_bytes/1e6:.0f}MB")

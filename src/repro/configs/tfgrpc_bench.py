@@ -1,0 +1,52 @@
+"""The paper's own configuration space (TF-gRPC-Bench, Table 1 + Table 2).
+
+Buffer-size categories and benchmark defaults exactly as published;
+consumed by repro.core (payload generator + benchmark drivers).
+"""
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# Table 1 — iovec buffer size categories (bytes)
+SMALL_DEFAULT = 10
+MEDIUM_DEFAULT = 10 * 1024
+LARGE_DEFAULT = 1 * 1024 * 1024
+SMALL_RANGE = (1, 1024)                         # [1 B, 1 KB)
+MEDIUM_RANGE = (1024, 1024 * 1024)              # [1 KB, 1 MB)
+LARGE_RANGE = (1024 * 1024, 10 * 1024 * 1024)   # [1 MB, 10 MB]
+
+# Skew scheme default composition (paper §3.2): 60% Large / 30% Medium / 10% Small
+SKEW_FRACTIONS = {"large": 0.6, "medium": 0.3, "small": 0.1}
+# §3.2: "users have the option to generate the payload in Small or
+# Medium biased manner too" — same 60/30/10 split, rotated.
+SKEW_BIAS_FRACTIONS = {
+    "large":  {"large": 0.6, "medium": 0.3, "small": 0.1},
+    "medium": {"medium": 0.6, "large": 0.3, "small": 0.1},
+    "small":  {"small": 0.6, "medium": 0.3, "large": 0.1},
+}
+
+
+@dataclass(frozen=True)
+class BenchConfig:
+    """Table 2 — configurable parameters of TF-gRPC-Bench."""
+    benchmark: str = "p2p_latency"   # p2p_latency | p2p_bandwidth | ps_throughput
+    num_ps: int = 1
+    num_workers: int = 1
+    mode: str = "non_serialized"     # non_serialized | serialized
+    scheme: str = "uniform"          # uniform | random | skew
+    skew_bias: str = "large"         # large | medium | small (skew only)
+    iovec_count: int = 10
+    small_bytes: int = SMALL_DEFAULT
+    medium_bytes: int = MEDIUM_DEFAULT
+    large_bytes: int = LARGE_DEFAULT
+    categories: Tuple[str, ...] = ("small", "medium", "large")
+    warmup_s: float = 2.0
+    duration_s: float = 10.0
+    seed: int = 0
+    dtype: str = "uint8"
+    network: Optional[str] = None    # key into core.netmodel.NETWORKS
+
+
+# §4.5 experiment: 2 parameter servers, 3 workers
+PS_THROUGHPUT_CONFIG = BenchConfig(
+    benchmark="ps_throughput", num_ps=2, num_workers=3)

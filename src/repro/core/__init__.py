@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: the TF-gRPC-Bench
+micro-benchmark suite, adapted to TPU/JAX (see DESIGN.md)."""
+from repro.core.bench import (BenchStats, p2p_bandwidth, p2p_latency,
+                              ps_throughput, run)
+from repro.core.netmodel import NETWORKS, NetworkModel, paper_ratio_report
+from repro.core.payload import PayloadSpec, from_arch, generate_spec
+
+__all__ = ["BenchStats", "p2p_bandwidth", "p2p_latency", "ps_throughput",
+           "run", "NETWORKS", "NetworkModel", "paper_ratio_report",
+           "PayloadSpec", "from_arch", "generate_spec"]

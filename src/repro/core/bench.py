@@ -1,0 +1,131 @@
+"""The three TF-gRPC-Bench micro-benchmarks (paper §3.2), as drivers over
+repro.core.channels, with the paper's warmup/duration protocol and the
+netmodel projection alongside the measured host numbers.
+
+  TF-gRPC-P2P-Latency    -> p2p_latency()
+  TF-gRPC-P2P-Bandwidth  -> p2p_bandwidth()
+  TF-gRPC-PS-Throughput  -> ps_throughput()
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core import channels as ch
+from repro.core.netmodel import NETWORKS
+from repro.core.payload import PayloadSpec, generate_spec
+from repro.core.resource import ResourceMonitor, ResourceReport
+
+
+@dataclass
+class BenchStats:
+    name: str
+    config: BenchConfig
+    spec: PayloadSpec
+    n_iters: int
+    mean_s: float
+    p50_s: float
+    p95_s: float
+    min_s: float
+    max_s: float
+    derived: Dict[str, float] = field(default_factory=dict)
+    resources: Optional[ResourceReport] = None
+    model_projection: Dict[str, float] = field(default_factory=dict)
+
+    def row(self) -> str:
+        d = ",".join(f"{k}={v:.6g}" for k, v in self.derived.items())
+        return (f"{self.name},{self.mean_s*1e6:.2f},{d}")
+
+
+def _timed_loop(fn: Callable, args, warmup_s: float, duration_s: float,
+                min_iters: int = 5) -> List[float]:
+    """Paper protocol: warm up for warmup_s, then measure for duration_s."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t_end = time.perf_counter() + warmup_s
+    while time.perf_counter() < t_end:
+        jax.block_until_ready(fn(*args))
+    times: List[float] = []
+    t_stop = time.perf_counter() + duration_s
+    while time.perf_counter() < t_stop or len(times) < min_iters:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
+    a = np.asarray(times)
+    st = BenchStats(
+        name=name, config=cfg, spec=spec, n_iters=len(a),
+        mean_s=float(a.mean()), p50_s=float(np.percentile(a, 50)),
+        p95_s=float(np.percentile(a, 95)), min_s=float(a.min()),
+        max_s=float(a.max()), derived=derived, resources=res)
+    for net_name, net in NETWORKS.items():
+        serialized = cfg.mode == "serialized"
+        if name == "p2p_latency":
+            st.model_projection[net_name] = net.rtt(spec,
+                                                    serialized=serialized)
+        elif name == "p2p_bandwidth":
+            st.model_projection[net_name] = net.bandwidth(
+                spec, serialized=serialized)
+        else:
+            st.model_projection[net_name] = net.ps_throughput(
+                spec, cfg.num_ps, cfg.num_workers, serialized=serialized)
+    return st
+
+
+def _prep(cfg: BenchConfig, need: int):
+    mesh = ch.make_net_mesh()
+    n = mesh.shape[ch.AXIS]
+    if n < need:
+        raise RuntimeError(
+            f"{cfg.benchmark} needs >= {need} devices, have {n}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
+    spec = generate_spec(cfg)
+    bufs = ch.device_payload(mesh, spec, seed=cfg.seed)
+    return mesh, spec, bufs
+
+
+def p2p_latency(cfg: BenchConfig) -> BenchStats:
+    mesh, spec, bufs = _prep(cfg, 2)
+    fn = ch.p2p_echo_fn(mesh, spec.n_buffers,
+                        serialized=(cfg.mode == "serialized"))
+    with ResourceMonitor() as mon:
+        times = _timed_loop(fn, bufs, cfg.warmup_s, cfg.duration_s)
+    return _stats("p2p_latency", cfg, spec, times,
+                  {"rtt_us": float(np.mean(times)) * 1e6}, mon.report)
+
+
+def p2p_bandwidth(cfg: BenchConfig) -> BenchStats:
+    mesh, spec, bufs = _prep(cfg, 2)
+    fn = ch.p2p_send_fn(mesh, spec.n_buffers,
+                        serialized=(cfg.mode == "serialized"))
+    with ResourceMonitor() as mon:
+        times = _timed_loop(fn, bufs, cfg.warmup_s, cfg.duration_s)
+    mbps = spec.total_bytes / np.mean(times) / 1e6
+    return _stats("p2p_bandwidth", cfg, spec, times,
+                  {"MBps": float(mbps)}, mon.report)
+
+
+def ps_throughput(cfg: BenchConfig) -> BenchStats:
+    need = cfg.num_ps + cfg.num_workers
+    mesh, spec, bufs = _prep(cfg, need)
+    fn = ch.ps_round_fn(mesh, spec.n_buffers, cfg.num_ps, cfg.num_workers,
+                        serialized=(cfg.mode == "serialized"))
+    with ResourceMonitor() as mon:
+        times = _timed_loop(fn, bufs, cfg.warmup_s, cfg.duration_s)
+    rpcs = ch.rpcs_per_round(cfg.num_ps, cfg.num_workers)
+    return _stats("ps_throughput", cfg, spec, times,
+                  {"rpcs_per_s": rpcs / float(np.mean(times))}, mon.report)
+
+
+def run(cfg: BenchConfig) -> BenchStats:
+    return {"p2p_latency": p2p_latency,
+            "p2p_bandwidth": p2p_bandwidth,
+            "ps_throughput": ps_throughput}[cfg.benchmark](cfg)

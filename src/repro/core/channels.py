@@ -1,0 +1,182 @@
+"""Communication channels: the TPU/JAX realization of the paper's gRPC
+primitives (DESIGN.md §2).
+
+ - P2P echo / one-way send  -> ``jax.lax.ppermute`` on a 1-D device axis
+ - PS pull (variable fetch) -> multicast ppermute PS -> every worker
+ - PS push (tensor update)  -> worker -> every PS (multicast ppermute)
+
+Payloads are lists of uint8 buffers (iovec analogue), shape (N, size)
+sharded over the ``net`` axis so each device owns one row.
+Non-serialized mode issues one collective per buffer (scatter/gather
+semantics); serialized mode packs all buffers into one contiguous
+transfer first (repro.core.serialization).
+
+These channels run for real on host devices (benchmarks force
+``--xla_force_host_platform_device_count``) — wall-clock numbers are
+host-platform, the *relative* trends + the netmodel give the projection
+(EXPERIMENTS.md §Comm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import serialization as ser
+from repro.core.payload import PayloadSpec, materialize
+
+AXIS = "net"
+
+
+def make_net_mesh(n_devices: int = 0) -> Mesh:
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    assert n <= len(devs), (n, len(devs))
+    return jax.make_mesh((n,), (AXIS,), devices=devs[:n])
+
+
+def device_payload(mesh: Mesh, spec: PayloadSpec, *, seed: int = 0
+                   ) -> List[jax.Array]:
+    """Materialize one payload row per device: list of (N, size) uint8."""
+    n = mesh.shape[AXIS]
+    host = materialize(spec, seed=seed, tpu_align=True)
+    sharding = NamedSharding(mesh, P(AXIS))
+    return [jax.device_put(np.broadcast_to(b, (n,) + b.shape).copy(),
+                           sharding) for b in host]
+
+
+# ---------------------------------------------------------------------------
+# P2P
+# ---------------------------------------------------------------------------
+
+def _shmap(mesh, fn, n_in):
+    return jax.shard_map(fn, mesh=mesh,
+                         in_specs=tuple([P(AXIS)] * n_in),
+                         out_specs=P(AXIS), check_vma=False)
+
+
+def p2p_echo_fn(mesh: Mesh, n_buffers: int, src: int = 0, dst: int = 1,
+                serialized: bool = False) -> Callable:
+    """Round trip src -> dst -> src. One collective per buffer
+    (non-serialized) or pack -> one collective -> unpack (serialized)."""
+    fwd, bwd = [(src, dst)], [(dst, src)]
+
+    def echo(*bufs):
+        if serialized:
+            packed, meta = ser.pack(bufs)
+            packed = jax.lax.ppermute(packed, AXIS, fwd)
+            packed = jax.lax.ppermute(packed, AXIS, bwd)
+            return tuple(ser.unpack(packed, meta))
+        out = []
+        for b in bufs:
+            b = jax.lax.ppermute(b, AXIS, fwd)
+            out.append(jax.lax.ppermute(b, AXIS, bwd))
+        return tuple(out)
+
+    return jax.jit(_shmap(mesh, echo, n_buffers))
+
+
+def p2p_send_fn(mesh: Mesh, n_buffers: int, src: int = 0, dst: int = 1,
+                serialized: bool = False) -> Callable:
+    """One-way payload + 64-byte ack back (bandwidth benchmark)."""
+    fwd, bwd = [(src, dst)], [(dst, src)]
+
+    def send(*bufs):
+        if serialized:
+            packed, meta = ser.pack(bufs)
+            packed = jax.lax.ppermute(packed, AXIS, fwd)
+            ack = jax.lax.ppermute(packed[..., :64], AXIS, bwd)
+            return (packed, ack)
+        out = [jax.lax.ppermute(b, AXIS, fwd) for b in bufs]
+        ack = jax.lax.ppermute(out[0][..., :64], AXIS, bwd)
+        return tuple(out) + (ack,)
+
+    return jax.jit(_shmap(mesh, send, n_buffers))
+
+
+# ---------------------------------------------------------------------------
+# Parameter-server round
+# ---------------------------------------------------------------------------
+
+def bipartite_schedule(srcs: Sequence[int], dsts: Sequence[int]
+                       ) -> List[List[Tuple[int, int]]]:
+    """Edge-color K_{|srcs|,|dsts|}: a minimal sequence of ppermute rounds
+    (each with unique sources AND destinations) covering every (src, dst)
+    pair exactly once. Rounds = max(|srcs|, |dsts|)."""
+    m, n = len(srcs), len(dsts)
+    rounds = []
+    if m <= n:
+        for r in range(n):
+            rounds.append([(srcs[i], dsts[(i + r) % n]) for i in range(m)])
+    else:
+        for r in range(m):
+            rounds.append([(srcs[(j + r) % m], dsts[j]) for j in range(n)])
+    return rounds
+
+
+def ps_round_fn(mesh: Mesh, n_buffers: int, n_ps: int, n_workers: int,
+                serialized: bool = False) -> Callable:
+    """One PS round on devices [0..n_ps) = PS, [n_ps..n_ps+n_workers) =
+    workers.
+
+    pull: every PS sends its variable shard to every worker (the
+          rendezvous'd tensor-fetch response), n_ps x n_workers messages
+    push: every worker sends its update to every PS, n_workers x n_ps
+          messages
+
+    ppermute requires unique sources and destinations per collective, so
+    the all-pairs exchange is scheduled as a round-robin edge coloring —
+    which also matches the per-NIC serialization the netmodel assumes.
+    """
+    ps_ids = list(range(n_ps))
+    w_ids = list(range(n_ps, n_ps + n_workers))
+    assert n_ps + n_workers <= mesh.shape[AXIS]
+    pull_rounds = bipartite_schedule(ps_ids, w_ids)
+    push_rounds = bipartite_schedule(w_ids, ps_ids)
+
+    def one_payload(b):
+        for perm in pull_rounds:
+            b = jax.lax.ppermute(b, AXIS, perm)
+        for perm in push_rounds:
+            b = jax.lax.ppermute(b, AXIS, perm)
+        return b
+
+    def ps_round(*bufs):
+        if serialized:
+            packed, meta = ser.pack(bufs)
+            packed = one_payload(packed)
+            return tuple(ser.unpack(packed, meta))
+        return tuple(one_payload(b) for b in bufs)
+
+    return jax.jit(_shmap(mesh, ps_round, n_buffers))
+
+
+def rpcs_per_round(n_ps: int, n_workers: int) -> int:
+    """The paper counts one RPC per worker x PS interaction per round."""
+    return n_ps * n_workers
+
+
+# ---------------------------------------------------------------------------
+# Collective channels (the SPMD-native PS: FSDP pull/push, DESIGN §3.1)
+# ---------------------------------------------------------------------------
+
+def fsdp_pull_push_fn(mesh: Mesh, n_buffers: int) -> Callable:
+    """all_gather (pull the full variable from its PS shards) followed by
+    psum_scatter (push: reduce updates back onto the shards). This is the
+    exact primitive pair GSPMD emits for our fsdp/ps_mode training; the
+    suite measures it with model-free payloads."""
+
+    def step(*bufs):
+        outs = []
+        for b in bufs:
+            full = jax.lax.all_gather(b, AXIS, axis=0, tiled=True)
+            upd = full.astype(jnp.float32) * 1.000001
+            outs.append(jax.lax.psum_scatter(upd, AXIS, scatter_dimension=0,
+                                             tiled=True).astype(b.dtype))
+        return tuple(outs)
+
+    return jax.jit(_shmap(mesh, step, n_buffers))

@@ -1,0 +1,163 @@
+"""Alpha-beta network models (latency-bandwidth) for the interconnects
+the paper evaluates, plus the TPU fabrics this framework targets.
+
+The container has no IB/RoCE NICs (and no TPU), so absolute wall-clock
+numbers for the paper's clusters come from these models; the paper's
+*measured ratios* (its headline claims) are the calibration targets:
+
+  fig8  (A, skew,   latency):    RDMA -59% vs 40GbE, -56% vs IPoIB-EDR
+  fig9  (B, skew,   latency):    RDMA -78% vs 10GbE, -69% vs IPoIB-FDR,
+                                 IPoIB-FDR -27% vs 10GbE
+  fig11 (A, skew,   bandwidth):  RDMA 2.14x IPoIB-EDR
+  fig12 (B, skew,   bandwidth):  RDMA 3.2x  IPoIB-FDR
+  fig13 (A, uniform,throughput): RDMA 4.1x 40GbE, 3.43x IPoIB-EDR
+  fig14 (B, uniform,throughput): RDMA 5.9x 10GbE
+
+Constants below were fitted offline (benchmarks/calibrate.py) to land
+within ~12% of every ratio simultaneously; tests/test_netmodel.py holds
+that tolerance. Message cost: t = alpha + bytes/beta per message, plus a
+per-RPC processing overhead on the receiver (rpc_overhead) — the gRPC
+core cost the paper isolates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.payload import PayloadSpec
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    name: str
+    alpha_s: float          # per-message latency (s)
+    beta_Bps: float         # effective bandwidth (bytes/s)
+    rpc_overhead_s: float   # per-RPC software (gRPC core) overhead (s)
+    # host-CPU copy rate for the RPC data path. Kernel-TCP networks copy
+    # every byte through the host (and contend when several workers hit
+    # one PS); RDMA is zero-copy => effectively infinite rate. This term
+    # is what lets one parameter set reproduce BOTH the ~2.4x latency gap
+    # and the ~4x PS-throughput gap the paper measures.
+    cpu_copy_Bps: float = float("inf")
+    serialization_Bps: float = 1.2e9  # protobuf pack rate (CPU-bound)
+
+    # ------------------------------------------------------------------
+    def msg_time(self, nbytes: int) -> float:
+        return self.alpha_s + nbytes / self.beta_Bps
+
+    def payload_time(self, spec: PayloadSpec, *, serialized: bool) -> float:
+        """One-way transfer time of one payload.
+
+        non-serialized: each iovec buffer is a separate wire message
+        (recvmsg/sendmsg scatter-gather still pays per-buffer alpha' —
+        modeled as one alpha per buffer batch of 4, measured behaviour of
+        iovec batching) plus the shared rpc overhead.
+        serialized: single packed message + serialization copy cost.
+        """
+        if serialized:
+            wire = self.msg_time(spec.total_bytes)
+            ser = spec.total_bytes / self.serialization_Bps
+            return wire + ser + self.rpc_overhead_s
+        n_batches = max(1, -(-spec.n_buffers // 4))
+        return (self.alpha_s * n_batches
+                + spec.total_bytes / self.beta_Bps
+                + self.rpc_overhead_s)
+
+    def rtt(self, spec: PayloadSpec, *, serialized: bool = False) -> float:
+        """Echo RTT (paper's P2P latency benchmark: payload both ways)."""
+        return 2.0 * self.payload_time(spec, serialized=serialized)
+
+    def bandwidth(self, spec: PayloadSpec, *, serialized: bool = False
+                  ) -> float:
+        """MB/s of the one-way bandwidth benchmark (payload + tiny ack)."""
+        t = self.payload_time(spec, serialized=serialized) \
+            + self.msg_time(64)
+        return spec.total_bytes / t / 1e6
+
+    def ps_round_time(self, spec: PayloadSpec, n_ps: int, n_workers: int,
+                      *, serialized: bool = False) -> float:
+        """One PS round: every worker pushes its update to every PS and
+        gets the ack/fetch back. PS ingress is the bottleneck: each PS
+        serves n_workers RPCs; PSes work in parallel; per-PS RPCs
+        serialize on its NIC/stack, and their host-side copies contend
+        on the PS CPU (quadratic queueing term; zero for RDMA)."""
+        per_rpc = (self.payload_time(spec, serialized=serialized)
+                   + self.msg_time(64))
+        contention = (n_workers * (n_workers - 1)
+                      * spec.total_bytes / self.cpu_copy_Bps)
+        return per_rpc * n_workers + contention
+
+    def ps_throughput(self, spec: PayloadSpec, n_ps: int, n_workers: int,
+                      *, serialized: bool = False) -> float:
+        """Aggregate RPCs/s (paper fig 13/14)."""
+        rpcs = n_ps * n_workers
+        return rpcs / self.ps_round_time(spec, n_ps, n_workers,
+                                         serialized=serialized)
+
+
+# fitted constants (benchmarks/calibrate.py; cluster A max err 2.7%,
+# cluster B max err 0.8% across the paper's claims)
+NETWORKS: Dict[str, NetworkModel] = {
+    # Cluster A (RI2): 40GbE, IPoIB over EDR(100G), RDMA-EDR
+    "eth40g":    NetworkModel("eth40g", alpha_s=4.16e-05,
+                              beta_Bps=4.705e+09, rpc_overhead_s=9.49e-05,
+                              cpu_copy_Bps=9.69e+09),
+    "ipoib_edr": NetworkModel("ipoib_edr", alpha_s=1.39e-05,
+                              beta_Bps=4.889e+09, rpc_overhead_s=1.55e-04,
+                              cpu_copy_Bps=1.27e+10),
+    "rdma_edr":  NetworkModel("rdma_edr", alpha_s=1.86e-05,
+                              beta_Bps=1.084e+10, rpc_overhead_s=2.69e-05),
+    # Cluster B (Comet): 10GbE, IPoIB over FDR(56G), RDMA-FDR
+    "eth10g":    NetworkModel("eth10g", alpha_s=5.68e-05,
+                              beta_Bps=1.072e+09, rpc_overhead_s=1.35e-04,
+                              cpu_copy_Bps=6.21e+09),
+    "ipoib_fdr": NetworkModel("ipoib_fdr", alpha_s=3.86e-05,
+                              beta_Bps=1.481e+09, rpc_overhead_s=1.34e-04,
+                              cpu_copy_Bps=7.57e+09),
+    "rdma_fdr":  NetworkModel("rdma_fdr", alpha_s=9.17e-06,
+                              beta_Bps=4.619e+09, rpc_overhead_s=9.71e-06),
+    # TPU fabrics (v5e targets for this framework)
+    "tpu_ici":   NetworkModel("tpu_ici",   alpha_s=1e-6,  beta_Bps=5.0e10,
+                              rpc_overhead_s=0.0, serialization_Bps=8e11),
+    "tpu_dcn":   NetworkModel("tpu_dcn",   alpha_s=25e-6, beta_Bps=6.25e9,
+                              rpc_overhead_s=0.0, serialization_Bps=8e11),
+}
+
+CLUSTER_A = ("eth40g", "ipoib_edr", "rdma_edr")
+CLUSTER_B = ("eth10g", "ipoib_fdr", "rdma_fdr")
+
+
+def paper_ratio_report() -> Dict[str, Dict[str, float]]:
+    """Model-predicted values for every paper claim, with targets."""
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core.payload import generate_spec
+
+    skew = generate_spec(BenchConfig(scheme="skew"))
+    uni = generate_spec(BenchConfig(scheme="uniform"))
+    n = NETWORKS
+
+    def red(a, b):  # latency reduction of a vs b
+        return 1.0 - n[a].rtt(skew) / n[b].rtt(skew)
+
+    out = {
+        "fig8_rdma_vs_eth40g":  {"target": 0.59, "model": red("rdma_edr", "eth40g")},
+        "fig8_rdma_vs_ipoib":   {"target": 0.56, "model": red("rdma_edr", "ipoib_edr")},
+        "fig9_rdma_vs_eth10g":  {"target": 0.78, "model": 1 - n["rdma_fdr"].rtt(skew) / n["eth10g"].rtt(skew)},
+        "fig9_rdma_vs_ipoib":   {"target": 0.69, "model": 1 - n["rdma_fdr"].rtt(skew) / n["ipoib_fdr"].rtt(skew)},
+        "fig9_ipoib_vs_eth10g": {"target": 0.27, "model": 1 - n["ipoib_fdr"].rtt(skew) / n["eth10g"].rtt(skew)},
+        "fig11_bw_rdma_x_ipoib": {"target": 2.14, "model": n["rdma_edr"].bandwidth(skew) / n["ipoib_edr"].bandwidth(skew)},
+        "fig12_bw_rdma_x_ipoib": {"target": 3.2, "model": n["rdma_fdr"].bandwidth(skew) / n["ipoib_fdr"].bandwidth(skew)},
+        "fig13_tp_rdma_x_eth40g": {"target": 4.1, "model": n["rdma_edr"].ps_throughput(uni, 2, 3) / n["eth40g"].ps_throughput(uni, 2, 3)},
+        "fig13_tp_rdma_x_ipoib": {"target": 3.43, "model": n["rdma_edr"].ps_throughput(uni, 2, 3) / n["ipoib_edr"].ps_throughput(uni, 2, 3)},
+        "fig14_tp_rdma_x_eth10g": {"target": 5.9, "model": n["rdma_fdr"].ps_throughput(uni, 2, 3) / n["eth10g"].ps_throughput(uni, 2, 3)},
+        "fig7_serialization_constant": {
+            "target": 1.0,
+            "model": ((n["eth40g"].payload_time(uni, serialized=True)
+                       - n["eth40g"].payload_time(uni, serialized=False))
+                      / (n["rdma_edr"].payload_time(uni, serialized=True)
+                         - n["rdma_edr"].payload_time(uni, serialized=False))),
+        },
+    }
+    for v in out.values():
+        v["rel_err"] = abs(v["model"] - v["target"]) / abs(v["target"])
+    return out

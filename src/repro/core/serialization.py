@@ -1,0 +1,36 @@
+"""Payload packing — the TPU analogue of the paper's serialized mode.
+
+protobuf serialization on gRPC ≈ a CPU-side copy into one contiguous
+wire buffer. On TPU the analogous trade is: pay one extra HBM copy to
+coalesce N iovec buffers into ONE collective (serialized), or launch N
+collectives with no copy (non-serialized). ``pack``/``unpack`` here are
+the pure-jnp reference; ``repro.kernels.payload_pack`` is the Pallas
+version used on real TPUs.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pack(bufs: Sequence[jax.Array]) -> Tuple[jax.Array, Tuple[Tuple[int, ...],
+                                                              ...]]:
+    """Concatenate per-device buffer rows into one contiguous buffer.
+
+    bufs: sequence of (..., size_i) uint8. Returns (packed (..., sum),
+    metadata of original trailing shapes)."""
+    meta = tuple(b.shape[-1:] for b in bufs)
+    flat = [b.reshape(b.shape[:-1] + (-1,)) for b in bufs]
+    return jnp.concatenate(flat, axis=-1), meta
+
+
+def unpack(packed: jax.Array, meta: Tuple[Tuple[int, ...], ...]
+           ) -> List[jax.Array]:
+    sizes = [m[0] for m in meta]
+    offs, out = 0, []
+    for s in sizes:
+        out.append(jax.lax.slice_in_dim(packed, offs, offs + s, axis=-1))
+        offs += s
+    return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU):
+
+  flash_attention — fused GQA attention (causal/SWA/softcap), the
+                    transformer hot spot
+  rwkv6_scan      — chunked data-dependent-decay WKV recurrence
+  payload_pack    — iovec coalescing (the paper's serialized mode)
+"""

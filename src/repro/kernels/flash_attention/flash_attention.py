@@ -1,0 +1,117 @@
+"""Flash attention for TPU (Pallas): fused online-softmax attention with
+GQA head mapping, causal + sliding-window masking and gemma2-style logit
+softcap.
+
+Tiling: grid = (batch*q_heads, n_q_blocks, n_kv_blocks); the kv axis is
+innermost so the (m, l, acc) running state lives in VMEM scratch across
+kv steps. Q/K/V blocks stream HBM->VMEM via BlockSpecs; the KV BlockSpec
+index_map folds the GQA group mapping (q head h reads kv head h // G),
+so grouped K/V are never materialized per-q-head in HBM.
+
+Block sizes default to (128, 128) — MXU-aligned (128 lanes) and small
+enough that q(128xdh) + k,v(128xdh) + scores(128x128) + acc stay well
+under VMEM for d_head <= 256.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: Optional[int],
+               softcap: Optional[float], block_q: int, block_k: int,
+               n_kv_blocks: int, seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)            # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    ok = k_pos < seq_kv                          # kv padding
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(ok, p, 0.0)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           n_groups: int, causal: bool,
+                           window: Optional[int], softcap: Optional[float],
+                           scale: float, block_q: int = 128,
+                           block_k: int = 128, seq_kv: int,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B*H, Sq_pad, dh); k, v: (B*KV, Skv_pad, dh). ``seq_kv`` is the
+    un-padded kv length (padding keys are masked). Returns (B*H, Sq_pad,
+    dh)."""
+    BH, Sq, dh = q.shape
+    BKV, Skv, _ = k.shape
+    H = (BH // BKV) * n_groups  # heads per batch... BH/BKV == G
+    G = BH // BKV
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        seq_kv=seq_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, qi, ki, G=G: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

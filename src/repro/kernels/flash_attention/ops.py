@@ -1,0 +1,82 @@
+"""jit'd public wrapper for the flash attention kernel: layout handling,
+padding to block multiples, GQA reshape, interpret-mode fallback on
+non-TPU backends, and a custom_vjp whose backward recomputes through the
+reference (remat-style backward; the fused bwd kernel is future work —
+the fwd kernel is what serving uses)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=None):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) -> (B, Sq, H, dh)."""
+    return _fwd_impl(q, k, v, causal, window, softcap, scale, block_q,
+                     block_k, interpret)
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, scale, block_q, block_k,
+              interpret):
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    interpret = _interpret_default() if interpret is None else interpret
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Skv))
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+
+    # (B, S, H, dh) -> (B*H, S, dh); kv heads stay un-repeated
+    q2 = qp.transpose(0, 2, 1, 3).reshape(B * H, Sq + pad_q, dh)
+    k2 = kp.transpose(0, 2, 1, 3).reshape(B * KV, Skv + pad_k, dh)
+    v2 = vp.transpose(0, 2, 1, 3).reshape(B * KV, Skv + pad_k, dh)
+
+    o = flash_attention_kernel(
+        q2, k2, v2, n_groups=G, causal=causal, window=window,
+        softcap=softcap, scale=scale, block_q=block_q, block_k=block_k,
+        seq_kv=Skv, interpret=interpret)
+    o = o.reshape(B, H, Sq + pad_q, dh).transpose(0, 2, 1, 3)
+    return o[:, :Sq] if pad_q else o
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, scale, block_q, block_k,
+            interpret):
+    out = _fwd_impl(q, k, v, causal, window, softcap, scale, block_q,
+                    block_k, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, scale, block_q, block_k, interpret,
+            res, g):
+    q, k, v = res
+    dh = q.shape[-1]
+    s = scale if scale is not None else 1.0 / (dh ** 0.5)
+
+    def ref(q, k, v):
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=s)
+
+    _, vjp = jax.vjp(ref, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

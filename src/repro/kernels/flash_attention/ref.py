@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, window: Optional[int],
+                  softcap: Optional[float], scale: float) -> jax.Array:
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh). Returns (B, Sq, H, dh).
+    GQA via head repetition; full-materialized softmax in fp32."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=2)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(vf.dtype), vf)

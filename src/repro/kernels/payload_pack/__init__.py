@@ -1,0 +1,4 @@
+from repro.kernels.payload_pack.ops import pack, unpack
+from repro.kernels.payload_pack.ref import pack_ref, unpack_ref
+
+__all__ = ["pack", "unpack", "pack_ref", "unpack_ref"]

@@ -1,0 +1,104 @@
+"""Payload pack/unpack for TPU (Pallas) — the paper's "serialized mode".
+
+Coalesces N iovec buffers (each 128-byte aligned, the lane width) into a
+single contiguous transfer buffer in one VMEM pass, and splits it back.
+On gRPC this is protobuf serialization (a host copy); on TPU it is the
+HBM copy you pay to turn N small collectives into one — the trade the
+serialized/non-serialized benchmark modes measure.
+
+Tiling: the output is walked in ``block`` chunks (grid = n_out_blocks);
+for each output block, the kernel copies the overlapping span of every
+input buffer. Buffer offsets are static, so the per-buffer copy bounds
+fold to constants/clamps at trace time; input BlockSpecs stream only the
+needed block of each input.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _offsets(sizes: Sequence[int]) -> List[int]:
+    offs, acc = [], 0
+    for s in sizes:
+        offs.append(acc)
+        acc += s
+    return offs + [acc]
+
+
+def _pack_kernel(*refs, sizes: Tuple[int, ...], block: int):
+    """refs = (*in_refs, o_ref). Output block bi covers
+    [bi*block, (bi+1)*block); copy each input's overlap into it."""
+    *in_refs, o_ref = refs
+    bi = pl.program_id(0)
+    out_lo = bi * block
+    offs = _offsets(sizes)
+    for j, ref in enumerate(in_refs):
+        lo, hi = offs[j], offs[j + 1]
+        # overlap of [lo, hi) with [out_lo, out_lo+block) — static per bi?
+        # bi is dynamic: compute with lax ops on traced values.
+        a = jnp.maximum(lo - out_lo, 0)            # start within out block
+        b = jnp.minimum(hi - out_lo, block)        # end within out block
+        src = jnp.maximum(out_lo - lo, 0)          # start within input
+        # copy in LANE-sized chunks; sizes are LANE-aligned by contract
+        n_lanes = (b - a) // LANE
+
+        def body(i, _):
+            o_ref[pl.ds(a + i * LANE, LANE)] = ref[pl.ds(src + i * LANE,
+                                                         LANE)]
+            return 0
+
+        jax.lax.fori_loop(0, jnp.maximum(n_lanes, 0), body, 0)
+
+
+def pack_kernel(bufs: Sequence[jax.Array], *, block: int = 16384,
+                interpret: bool = False) -> jax.Array:
+    """bufs: list of (size_i,) uint8, every size_i % 128 == 0.
+    Returns (sum sizes,) uint8."""
+    sizes = tuple(int(b.shape[0]) for b in bufs)
+    for s in sizes:
+        assert s % LANE == 0, s
+    total = sum(sizes)
+    # largest lane-multiple block <= requested that divides total
+    import math
+    block = math.gcd(total, min(block, total))
+    assert block % LANE == 0, block
+    grid = (total // block,)
+
+    kernel = functools.partial(_pack_kernel, sizes=sizes, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        # inputs stay whole in VMEM-addressable windows (memory_space ANY
+        # would be ideal; full blocks keep interpret/TPU paths identical)
+        in_specs=[pl.BlockSpec(b.shape, lambda bi: (0,)) for b in bufs],
+        out_specs=pl.BlockSpec((block,), lambda bi: (bi,)),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.uint8),
+        interpret=interpret,
+    )(*bufs)
+
+
+def _unpack_kernel(p_ref, *o_refs, sizes: Tuple[int, ...]):
+    offs = _offsets(sizes)
+    for j, ref in enumerate(o_refs):
+        ref[...] = p_ref[pl.ds(offs[j], sizes[j])]
+
+
+def unpack_kernel(packed: jax.Array, sizes: Sequence[int], *,
+                  interpret: bool = False) -> List[jax.Array]:
+    sizes = tuple(int(s) for s in sizes)
+    kernel = functools.partial(_unpack_kernel, sizes=sizes)
+    outs = pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(packed.shape, lambda: (0,))],
+        out_specs=[pl.BlockSpec((s,), lambda: (0,)) for s in sizes],
+        out_shape=[jax.ShapeDtypeStruct((s,), jnp.uint8) for s in sizes],
+        interpret=interpret,
+    )(packed)
+    return list(outs)

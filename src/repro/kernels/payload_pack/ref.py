@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for payload pack/unpack (= core.serialization)."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_ref(bufs: Sequence[jax.Array]) -> jax.Array:
+    return jnp.concatenate([b.reshape(-1) for b in bufs])
+
+
+def unpack_ref(packed: jax.Array, sizes: Sequence[int]) -> List[jax.Array]:
+    out, off = [], 0
+    for s in sizes:
+        out.append(jax.lax.slice_in_dim(packed, off, off + s))
+        off += s
+    return out

@@ -1,0 +1,4 @@
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_ref
+
+__all__ = ["rwkv6_scan", "rwkv6_ref"]

@@ -1,0 +1,36 @@
+"""jit'd wrapper: bonus-u diagonal term, padding, interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.ref import rwkv6_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rwkv6_scan(r, k, v, log_w, s0, u=None, *, chunk: int = 64,
+               interpret=None):
+    """(BH, S, hs) inputs; returns (y, s_final). Handles S padding and the
+    bonus-u diagonal (elementwise, outside the chunked kernel)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    BH, S, hs = r.shape
+    chunk = min(chunk, max(8, S))
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        # zero k/v => no state writes; zero log_w => no decay
+        r2, k2, v2, lw2 = zf(r), zf(k), zf(v), zf(log_w)
+    else:
+        r2, k2, v2, lw2 = r, k, v, log_w
+    y, sT = rwkv6_scan_kernel(r2, k2, v2, lw2, s0, chunk=chunk,
+                              interpret=interpret)
+    if pad:
+        y = y[:, :S]
+    if u is not None:
+        diag = jnp.sum(r * k * u[:, None, :], axis=-1, keepdims=True)
+        y = y + diag * v
+    return y, sT

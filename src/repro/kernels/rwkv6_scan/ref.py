@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: exact sequential RWKV-6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, log_w, s0, u=None):
+    """r/k/v/log_w: (BH, S, hs); s0: (BH, hs, hs); u: (BH, hs) or None.
+    Sequential: y_t = r_t S_{t-1} (+ r_t diag(u) k_t^T v_t);
+                S_t = diag(w_t) S_{t-1} + k_t^T v_t."""
+    def step(s, xs):
+        rt, kt, vt, lwt = xs                    # (BH, hs)
+        outer = kt[:, :, None] * vt[:, None, :]  # (BH, hs, hs)
+        y = jnp.einsum("bk,bkv->bv", rt, s)
+        if u is not None:
+            y = y + jnp.einsum("bk,bk,bkv->bv", rt, u, outer)
+        s = s * jnp.exp(lwt)[:, :, None] + outer
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, log_w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), sT

@@ -1,0 +1,87 @@
+"""RWKV-6 chunked WKV scan for TPU (Pallas).
+
+The data-dependent per-channel decay recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  y_t = r_t S_{t-1} (+ bonus)
+is computed chunk-parallel: within a chunk of Lc tokens the pairwise
+decay matrix D[t,i,c] = exp(cum_{t-1,c} - cum_{i,c}) (all exponents <= 0
+by construction — overflow-free) feeds two matmuls; across chunks the
+(hs x hs) state is carried in VMEM scratch while the grid walks the
+chunk axis innermost. The diagonal (bonus-u) term is handled outside the
+kernel by the wrapper (it is elementwise in t).
+
+Tiling: grid = (B*H, n_chunks); blocks are (1, Lc, hs) slices of the
+(B*H, S, hs) r/k/v/logw tensors. VMEM per step ~ Lc*Lc*hs*4B (the D
+tensor): 1 MiB at Lc=hs=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, s0_ref, y_ref, sT_ref,
+                 state_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)        # (Lc, hs)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)      # (Lc, hs), <= 0
+
+    cum = jnp.cumsum(lw, axis=0)            # inclusive
+    cum_tm1 = cum - lw
+    # D[t,i,c] = exp(cum_{t-1,c} - cum_{i,c}) for i < t (strict causal)
+    dlog = cum_tm1[:, None, :] - cum[None, :, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (i_idx < t_idx)[:, :, None]
+    d = jnp.exp(jnp.where(mask, dlog, NEG_INF))
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * d, axis=-1)   # (Lc, Lc)
+
+    st = state_scr[...]                      # (hs, hs)
+    y_intra = jax.lax.dot(a.astype(v.dtype), v)
+    y_inter = jax.lax.dot(r * jnp.exp(cum_tm1), st)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cum[-1:, :] - cum)   # (Lc, hs), <= 1
+    state_scr[...] = st * jnp.exp(cum[-1, :])[:, None] + jax.lax.dot(
+        (k * decay_out).T, v)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sT_ref[0] = state_scr[...].astype(sT_ref.dtype)
+
+
+def rwkv6_scan_kernel(r: jax.Array, k: jax.Array, v: jax.Array,
+                      log_w: jax.Array, s0: jax.Array, *,
+                      chunk: int = 64, interpret: bool = False):
+    """r/k/v/log_w: (BH, S, hs) fp32; s0: (BH, hs, hs).
+    Returns (y (BH, S, hs), s_final (BH, hs, hs)). S % chunk == 0."""
+    BH, S, hs = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, n_chunks=nc)
+    blk = pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0))
+    state_spec = pl.BlockSpec((1, hs, hs), lambda bh, ci: (bh, 0, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[blk, blk, blk, blk, state_spec],
+        out_specs=[blk, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((BH, S, hs), jnp.float32),
+                   jax.ShapeDtypeStruct((BH, hs, hs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, s0)

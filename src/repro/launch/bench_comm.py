@@ -1,0 +1,93 @@
+import os
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # device fabric for the channels; set before any jax import
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+"""TF-gRPC-Bench CLI — the paper's Table 2, as flags.
+
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --benchmark ps_throughput --num-ps 2 --num-workers 3 \
+      --scheme skew --iovec-count 10 --mode non_serialized \
+      --warmup 2 --duration 10 [--network rdma_edr] [--arch qwen3-8b]
+
+--arch derives the payload from that architecture's parameter histogram
+instead of the S/M/L generator (core.payload.from_arch).
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="TF-gRPC-Bench micro-benchmark suite (paper Table 2)")
+    ap.add_argument("--benchmark", default="p2p_latency",
+                    choices=["p2p_latency", "p2p_bandwidth",
+                             "ps_throughput"])
+    ap.add_argument("--num-ps", type=int, default=1)
+    ap.add_argument("--num-workers", type=int, default=1)
+    ap.add_argument("--mode", default="non_serialized",
+                    choices=["non_serialized", "serialized"])
+    ap.add_argument("--scheme", default="uniform",
+                    choices=["uniform", "random", "skew"])
+    ap.add_argument("--skew-bias", default="large",
+                    choices=["large", "medium", "small"])
+    ap.add_argument("--iovec-count", type=int, default=10)
+    ap.add_argument("--small-bytes", type=int, default=10)
+    ap.add_argument("--medium-bytes", type=int, default=10 * 1024)
+    ap.add_argument("--large-bytes", type=int, default=1024 * 1024)
+    ap.add_argument("--categories", default="small,medium,large")
+    ap.add_argument("--warmup", type=float, default=2.0)
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--network", default=None,
+                    help="print only this network's projection")
+    ap.add_argument("--arch", default=None,
+                    help="payload from this arch's parameter histogram")
+    args = ap.parse_args()
+
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+
+    cfg = BenchConfig(
+        benchmark=args.benchmark, num_ps=args.num_ps,
+        num_workers=args.num_workers, mode=args.mode, scheme=args.scheme,
+        skew_bias=args.skew_bias, iovec_count=args.iovec_count,
+        small_bytes=args.small_bytes, medium_bytes=args.medium_bytes,
+        large_bytes=args.large_bytes,
+        categories=tuple(args.categories.split(",")),
+        warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
+        network=args.network)
+
+    if args.arch:
+        from repro.configs import get_config
+        from repro.core.payload import from_arch
+        spec = from_arch(get_config(args.arch))
+        print(f"payload from {args.arch}: {spec.n_buffers} buffers, "
+              f"{spec.total_bytes/1e6:.2f} MB "
+              f"({', '.join(spec.categories)})")
+
+    st = bench.run(cfg)
+    print(f"benchmark      : {st.name} [{cfg.scheme}"
+          f"{'/' + cfg.skew_bias if cfg.scheme == 'skew' else ''}, "
+          f"{cfg.mode}]")
+    print(f"payload        : {st.spec.n_buffers} iovecs, "
+          f"{st.spec.total_bytes/1e6:.3f} MB")
+    print(f"host measured  : mean {st.mean_s*1e6:.1f} us  "
+          f"p50 {st.p50_s*1e6:.1f}  p95 {st.p95_s*1e6:.1f}  "
+          f"({st.n_iters} iters)")
+    for k, v in st.derived.items():
+        print(f"               : {k} = {v:.2f}")
+    if st.resources:
+        print(f"resources      : cpu_util {st.resources.cpu_util:.2f}  "
+              f"rss_peak {st.resources.rss_peak_bytes/1e6:.0f} MB")
+    nets = ([args.network] if args.network else
+            sorted(st.model_projection))
+    for n in nets:
+        unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s",
+                "ps_throughput": "RPC/s"}[st.name]
+        print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
+
+
+if __name__ == "__main__":
+    main()

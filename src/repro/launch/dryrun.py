@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell:
+  with mesh:
+      lowered  = jax.jit(step, in_shardings=..., out_shardings=...) \
+                    .lower(**input_specs(arch))
+      compiled = lowered.compile()
+      print(compiled.memory_analysis())
+      print(compiled.cost_analysis())
+on BOTH the single-pod (16,16)=(data,model) mesh and the 2-pod
+(2,16,16)=(pod,data,model) mesh, plus the per-segment roofline terms
+(launch/roofline.py) on the single-pod mesh. Results are cached as JSON
+under results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k [--multi-pod] [--roofline] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, cells, get_config, get_shape, list_archs
+from repro.launch import hlo as hlo_lib
+from repro.launch import roofline as roof_lib
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import make_ctx
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _cell_path(arch: str, shape: str, mesh_name: str,
+               variant: str = "") -> str:
+    v = f"__{variant}" if variant else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{v}.json")
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # noqa: BLE001
+        return {"available": False, "error": str(e)}
+    if ma is None:
+        return {"available": False}
+    out = {"available": True}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "host_output_size_in_bytes",
+              "host_temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["repr"] = str(ma)
+    return out
+
+
+def _analytic_bytes_per_device(ctx, acfg, shape) -> Dict[str, float]:
+    """Sharded resident bytes/device: params + optimizer + decode state."""
+    import numpy as np
+
+    def tree_bytes(sds_tree, logical_tree):
+        from repro.parallel.sharding import logical_to_physical
+        specs = logical_to_physical(ctx, logical_tree)
+        total = 0.0
+        for s, sp in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(specs)):
+            n = np.prod(s.shape) * s.dtype.itemsize
+            div = 1
+            for ax in sp:
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                for a in axes:
+                    div *= ctx.mesh.shape[a]
+            total += n / div
+        return float(total)
+
+    from repro.models import model as M
+    out = {}
+    psds = specs_lib.param_specs(acfg)
+    out["params"] = tree_bytes(psds, M.param_logical_axes(acfg))
+    if shape.kind == "train":
+        # m/v mirror params (adamw) or factored (adafactor ~= params/64)
+        mult = {"adamw": 2.0, "adafactor": 0.05, "sgd": 1.0}[
+            acfg.train.optimizer]
+        out["optimizer"] = out["params"] * mult
+    if shape.kind == "decode":
+        ssds = specs_lib.state_specs(ctx, acfg, shape)
+        out["decode_state"] = tree_bytes(
+            ssds, jax.tree.map(
+                lambda lp: lp, M.state_logical_axes(acfg, shape.global_batch)))
+    out["total"] = sum(out.values())
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             do_roofline: bool = False, force: bool = False,
+             overrides: Optional[Dict] = None,
+             variant: str = "") -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    path = _cell_path(arch, shape_name, mesh_name, variant)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    acfg = get_config(arch)
+    if overrides:
+        acfg = _apply_overrides(acfg, overrides)
+    shape = get_shape(shape_name)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "ok": False,
+    }
+    skips = dict(acfg.skip_reasons)
+    if shape_name not in acfg.shapes:
+        result["skipped"] = skips.get(shape_name, "unsupported")
+        _save(path, result)
+        return result
+
+    t_start = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        ctx = make_ctx(acfg, mesh)
+        with mesh:
+            if shape.kind == "train":
+                step = steps_lib.make_train_step(ctx, acfg, donate=False)
+                args = specs_lib.input_specs(ctx, acfg, shape)
+            elif shape.kind == "prefill":
+                step = steps_lib.make_prefill_step(ctx, acfg)
+                args = specs_lib.input_specs(ctx, acfg, shape)
+            else:
+                step = steps_lib.make_decode_step(ctx, acfg,
+                                                  shape.global_batch)
+                args = specs_lib.input_specs(ctx, acfg, shape)
+            t0 = time.time()
+            lowered = step.lower(*args)
+            result["lower_s"] = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            result["compile_s"] = time.time() - t0
+
+            ma = _memory_analysis_dict(compiled)
+            print(f"[{arch} x {shape_name} x {mesh_name}] "
+                  f"memory_analysis: {ma.get('repr', ma)}")
+            result["memory_analysis"] = ma
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            ca = {k: float(v) for k, v in (ca or {}).items()
+                  if isinstance(v, (int, float))}
+            print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
+                  f"flops={ca.get('flops')} bytes={ca.get('bytes accessed')}")
+            result["cost_analysis"] = {
+                k: ca[k] for k in ("flops", "bytes accessed",
+                                   "transcendentals", "utilization operand 0")
+                if k in ca}
+            hlo_text = compiled.as_text()
+            result["collectives_full_hlo"] = \
+                hlo_lib.parse_collectives(hlo_text).summary()
+            result["while_trip_counts"] = \
+                hlo_lib.count_while_trip_factor(hlo_text)
+            result["overlap"] = hlo_lib.overlap_stats(hlo_text)
+            result["analytic_bytes_per_device"] = \
+                _analytic_bytes_per_device(ctx, acfg, shape)
+
+            if do_roofline and not multi_pod:
+                segs = roof_lib.segment_costs(ctx, acfg, shape)
+                rf = roof_lib.build_roofline(ctx, acfg, shape, mesh_name,
+                                             segs)
+                result["roofline"] = rf.to_dict()
+        result["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["total_s"] = time.time() - t_start
+    _save(path, result)
+    return result
+
+
+def _apply_overrides(acfg, overrides: Dict):
+    """Hillclimb knobs: {'parallel.fsdp': True, 'train.remat': False, ...}"""
+    for k, v in overrides.items():
+        section, field_ = k.split(".", 1)
+        sub = getattr(acfg, section)
+        acfg = acfg.replace(**{section: dataclasses.replace(sub,
+                                                            **{field_: v})})
+    return acfg
+
+
+def _save(path: str, result: Dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells(include_skipped=True):
+            if skip is None:
+                todo.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape in todo:
+        r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                     do_roofline=args.roofline, force=args.force)
+        status = "SKIP" if "skipped" in r else ("OK" if r["ok"] else "FAIL")
+        print(f"{status}: {arch} x {shape} "
+              f"(compile {r.get('compile_s', 0):.1f}s)")
+        if status == "FAIL":
+            n_fail += 1
+            print(r.get("error"))
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

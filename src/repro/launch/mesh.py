@@ -1,0 +1,30 @@
+"""Mesh construction. ``make_production_mesh`` is a FUNCTION so importing
+this module never touches jax device state (the dry-run must set
+XLA_FLAGS before any device query)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16,16)=(data,model) = 256 chips (v5e pod).
+    Multi-pod: (2,16,16)=(pod,data,model) = 512 chips; the 'pod' axis
+    crosses DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2,
+                   pod: Optional[int] = None) -> Mesh:
+    """Small mesh over however many host devices tests forced."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

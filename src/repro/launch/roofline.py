@@ -1,0 +1,415 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Because XLA's cost analysis counts a ``while`` (scan) body ONCE, the
+full-model compile under-reports FLOPs/bytes by ~n_periods. Terms are
+therefore assembled from per-SEGMENT lowerings compiled under the same
+mesh/shardings:
+
+    total = embed/loss segment + n_periods x period segment (+ optimizer)
+
+Each segment is compiled post-SPMD, so cost_analysis FLOPs/bytes and the
+parsed collective wire bytes are all PER DEVICE. Terms (seconds):
+
+    compute    = flops_per_device / peak_flops
+    memory     = bytes_per_device / hbm_bw
+    collective = wire_bytes_per_device[ici] / ici_bw  (+ dcn term)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+~6.25 GB/s/chip DCN (pod axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch import hlo as hlo_lib
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.optim import optimizer as O
+from repro.parallel.sharding import ParallelCtx, logical_to_physical
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (1 link assumed per transfer)
+DCN_BW = 6.25e9              # bytes/s / chip across pods
+
+
+@dataclass
+class SegmentCost:
+    name: str
+    flops: float
+    bytes_accessed: float
+    collectives: hlo_lib.CollectiveStats
+    compile_s: float
+
+    def scaled(self, k: float) -> "SegmentCost":
+        return SegmentCost(self.name, self.flops * k,
+                           self.bytes_accessed * k,
+                           self.collectives.scaled(k), self.compile_s)
+
+
+def extrapolate_two_point(c1: "SegmentCost", c2: "SegmentCost",
+                          ratio: float) -> "SegmentCost":
+    """cost(S) from lowerings at S1 and 2*S1 (ratio = S/S1): separates
+    the FIXED per-layer part (weight all-gathers, optimizer-ish setup)
+    from the PER-TOKEN part, so token scaling never multiplies weight
+    movement (§Roofline methodology)."""
+    def ext(v1, v2):
+        per = max(v2 - v1, 0.0)
+        fixed = max(v1 - per, 0.0)
+        return fixed + per * ratio
+
+    coll = hlo_lib.CollectiveStats()
+    keys = set(c1.collectives.wire_bytes) | set(c2.collectives.wire_bytes)
+    for k in keys:
+        coll.wire_bytes[k] = ext(c1.collectives.wire_bytes.get(k, 0.0),
+                                 c2.collectives.wire_bytes.get(k, 0.0))
+        coll.result_bytes[k] = int(ext(
+            c1.collectives.result_bytes.get(k, 0),
+            c2.collectives.result_bytes.get(k, 0)))
+        coll.counts[k] = int(ext(c1.collectives.counts.get(k, 0),
+                                 c2.collectives.counts.get(k, 0)))
+    return SegmentCost(c1.name, ext(c1.flops, c2.flops),
+                       ext(c1.bytes_accessed, c2.bytes_accessed), coll,
+                       c1.compile_s + c2.compile_s)
+
+
+def _analyze(compiled, name: str, t0: float) -> SegmentCost:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca = ca or {}
+    return SegmentCost(
+        name=name,
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives=hlo_lib.parse_collectives(compiled.as_text()),
+        compile_s=time.time() - t0)
+
+
+def _shard_tree(ctx, logical_tree):
+    return jax.tree.map(lambda sp: NamedSharding(ctx.mesh, sp),
+                        logical_to_physical(ctx, logical_tree))
+
+
+def _period_slice_specs(acfg: ArchConfig, tree, stacked_logical):
+    """SDS + shardings for ONE period's params/states (drop 'layers')."""
+    one = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+    logical = jax.tree.map(lambda lp: P(*list(lp)[1:]), stacked_logical)
+    return one, logical
+
+
+
+def _cast_pin(tree, shardings, dtype):
+    """cast_floats + per-leaf sharding pin (see M.cast_params_for_compute)."""
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    def one(a, sh):
+        if hasattr(a, "dtype") and a.dtype == _jnp.float32:
+            a = a.astype(dtype)
+        return _jax.lax.with_sharding_constraint(a, sh)
+    return _jax.tree.map(one, tree, shardings)
+
+
+def _position_signature(cfg, pos: int) -> Tuple:
+    return (cfg.layer_pattern[pos], bool(cfg.moe_at(pos)),
+            cfg.window_at(pos))
+
+
+def segment_costs(ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec
+                  ) -> Dict[str, SegmentCost]:
+    """Compile per-POSITION segments (deduped by layer signature) plus the
+    embed/head and optimizer segments under the cell's mesh; scale each
+    to the full model. Scan-undercount handling:
+      - attention: q-block scan unrolled (attn_lib.FORCE_UNROLL_Q)
+      - rwkv/mamba: lowered at one chunk (S_seg = chunk) and scaled by
+        S / S_seg — the chunked algorithm's cost is uniform per chunk
+      - loss: chunked CE lowered with chunk = S (single iteration)
+    """
+    from repro.models import attention as attn_lib
+    cfg = acfg.model
+    B, S = shape.global_batch, shape.seq_len
+    S_in = 1 if shape.kind == "decode" else S
+    cdt = jnp.bfloat16 if acfg.train.compute_dtype == "bfloat16" \
+        else jnp.float32
+
+    segs: Dict[str, SegmentCost] = {}
+    pspecs = specs_lib.param_specs(acfg)
+    psh = _shard_tree(ctx, M.param_logical_axes(acfg))
+    blocks_logical = M.param_logical_axes(acfg)["blocks"]
+    bspec = ctx.axis("batch") if B % max(ctx.n_batch_shards, 1) == 0 \
+        else None
+
+    def x_pair(S_seg):
+        sds = jax.ShapeDtypeStruct((B, S_seg, cfg.d_model), cdt)
+        sh = NamedSharding(ctx.mesh, P(bspec, None, None))
+        return sds, sh
+
+    if shape.kind == "decode":
+        st_full = specs_lib.state_specs(ctx, acfg, shape)
+        st_logical = M.state_logical_axes(acfg, B)
+        st_phys = logical_to_physical(
+            ctx, jax.tree.map(lambda lp: P(*list(lp)[1:]), st_logical))
+
+    # ---- per-position segments (deduped) --------------------------------
+    sig_positions: Dict[Tuple, list] = {}
+    for i in range(cfg.pattern_period):
+        sig_positions.setdefault(_position_signature(cfg, i), []).append(i)
+
+    attn_lib.FORCE_UNROLL_Q = True
+    try:
+        for sig, poss in sig_positions.items():
+            i = poss[0]
+            kind = sig[0]
+            name = f"pos{i}:{kind}{'+moe' if sig[1] else ''}"
+            pp_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                pspecs["blocks"][f"pos{i}"])
+            pp_sh = jax.tree.map(
+                lambda sp: NamedSharding(ctx.mesh, sp),
+                logical_to_physical(ctx, jax.tree.map(
+                    lambda lp: P(*list(lp)[1:]),
+                    blocks_logical[f"pos{i}"])))
+
+            def lower_at(S_seg, i=i, pp_sds=pp_sds, pp_sh=pp_sh):
+                x_sds, x_sh = x_pair(S_seg)
+                t0 = time.time()
+                if shape.kind == "decode":
+                    st_sds = jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape[1:],
+                                                       s.dtype),
+                        st_full[f"pos{i}"])
+                    st_sh = jax.tree.map(
+                        lambda sp: NamedSharding(ctx.mesh, sp),
+                        st_phys[f"pos{i}"])
+
+                    def pos_fn(pp, x, st):
+                        pp = _cast_pin(pp, pp_sh, cdt)
+                        x, ns, _ = M._apply_position(
+                            ctx, cfg, i, pp, x, st, "decode", None, cdt)
+                        return x, ns
+                    lowered = jax.jit(
+                        pos_fn, in_shardings=(pp_sh, x_sh, st_sh)).lower(
+                        pp_sds, x_sds, st_sds)
+                elif shape.kind == "train":
+                    def pos_fn(pp, x, ct):
+                        def f(pp, x):
+                            pp = _cast_pin(pp, pp_sh, cdt)
+                            pos = jnp.arange(S_seg, dtype=jnp.int32)
+                            y, _, aux = M._apply_position(
+                                ctx, cfg, i, pp, x, None, "train", pos,
+                                cdt)
+                            return jnp.sum(y.astype(jnp.float32)
+                                           * ct.astype(jnp.float32)) + aux
+                        return jax.grad(f, argnums=(0, 1))(pp, x)
+                    lowered = jax.jit(
+                        pos_fn, in_shardings=(pp_sh, x_sh, x_sh)).lower(
+                        pp_sds, x_sds, x_sds)
+                else:  # prefill
+                    def pos_fn(pp, x):
+                        pp = _cast_pin(pp, pp_sh, cdt)
+                        pos = jnp.arange(S_seg, dtype=jnp.int32)
+                        y, _, aux = M._apply_position(
+                            ctx, cfg, i, pp, x, None, "train", pos, cdt)
+                        return y, aux
+                    lowered = jax.jit(pos_fn,
+                                      in_shardings=(pp_sh, x_sh)).lower(
+                        pp_sds, x_sds)
+                return _analyze(lowered.compile(), name, t0)
+
+            n_inst = len(poss) * cfg.n_periods
+            if shape.kind != "decode" and kind in ("rwkv", "mamba") and \
+                    S_in > 2 * (16 if kind == "rwkv" else 64):
+                # two-point extrapolation: the inner chunk scan
+                # undercounts, and naive (S/S_seg) scaling would multiply
+                # per-layer weight collectives by the token ratio
+                S1 = 16 if kind == "rwkv" else 64
+                c1, c2 = lower_at(S1), lower_at(2 * S1)
+                seg = extrapolate_two_point(c1, c2, S_in / S1)
+            else:
+                seg = lower_at(S_in)
+            segs[name] = seg.scaled(n_inst)
+            segs[name].compile_s = seg.compile_s
+    finally:
+        attn_lib.FORCE_UNROLL_Q = False
+
+    # ---- embed + head(+loss) segment ------------------------------------
+    head_keys = [k for k in ("embed", "lm_head", "final_norm")
+                 if k in pspecs]
+    hp_sds = {k: pspecs[k] for k in head_keys}
+    hp_sh = {k: psh[k] for k in head_keys}
+    x_sds, x_sh = x_pair(S_in)
+
+    if shape.kind == "train":
+        tok_sds = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+        tok_sh = NamedSharding(ctx.mesh, P(bspec, None))
+
+        def embed_head(hp, tokens, labels, x):
+            def f(hp2, x2):
+                hp2 = _cast_pin(hp2, hp_sh, cdt)
+                if cfg.frontend is None:
+                    # embed gather (fwd + scatter-add bwd) belongs here
+                    e = jnp.take(hp2["embed"], tokens, axis=0).astype(cdt)
+                    x2 = x2 + e
+                hid = M.apply_norm(cfg, hp2["final_norm"], x2)
+                # chunk = S: single loss iteration (no scan undercount)
+                return M.loss_fn(ctx, acfg, hp2, hid, labels, chunk=S_in)
+            return jax.grad(f, argnums=(0, 1))(hp, x)
+
+        t0 = time.time()
+        lowered = jax.jit(embed_head,
+                          in_shardings=(hp_sh, tok_sh, tok_sh, x_sh)).lower(
+            hp_sds, tok_sds, tok_sds, x_sds)
+        segs["embed_head"] = _analyze(lowered.compile(), "embed_head", t0)
+    else:
+        def embed_head(hp, x):
+            hp = _cast_pin(hp, hp_sh, cdt)
+            hid = M.apply_norm(cfg, hp["final_norm"], x)
+            last = hid if shape.kind == "decode" else hid[:, -1:]
+            return M.logits_fn(ctx, acfg, {**hp}, last)
+        t0 = time.time()
+        lowered = jax.jit(embed_head, in_shardings=(hp_sh, x_sh)).lower(
+            hp_sds, x_sds)
+        segs["embed_head"] = _analyze(lowered.compile(), "embed_head", t0)
+
+    # ---- optimizer segment (train only) ----------------------------------
+    if shape.kind == "train":
+        osds = specs_lib.opt_specs(acfg)
+
+        def opt_fn(params, grads, ost):
+            p2, o2, _ = O.apply_updates(acfg.train, params, grads, ost)
+            return p2, o2
+        t0 = time.time()
+        lowered = jax.jit(opt_fn,
+                          in_shardings=(psh, psh, None)).lower(
+            pspecs, pspecs, osds)
+        segs["optimizer"] = _analyze(lowered.compile(), "optimizer", t0)
+
+    return segs
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    ici_wire_bytes: float
+    dcn_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_total_flops: float     # global: per-device x chips
+    segments: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms) — 1.0 means compute-bound at
+        peak; lower means the dominant non-compute term wastes the MXU."""
+        m = max(self.compute_s, self.memory_s, self.collective_s, 1e-30)
+        return self.compute_s / m
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_total_flops, 1e-30)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "ici_wire_bytes": self.ici_wire_bytes,
+            "dcn_wire_bytes": self.dcn_wire_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+            "model_flops": self.model_flops,
+            "hlo_total_flops": self.hlo_total_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "segments": {k: {
+                "flops": v.flops, "bytes": v.bytes_accessed,
+                "collectives": v.collectives.summary(),
+                "compile_s": v.compile_s} for k, v in
+                self.segments.items()},
+        }
+
+
+def model_flops(acfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+    Decode: one token per sequence per step."""
+    n = acfg.model.num_active_params()
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def build_roofline(ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec,
+                   mesh_name: str,
+                   segs: Dict[str, SegmentCost]) -> Roofline:
+    # per-position segments arrive pre-scaled to the full model
+    total_flops = total_bytes = 0.0
+    coll = hlo_lib.CollectiveStats()
+    for name, seg in segs.items():
+        total_flops += seg.flops
+        total_bytes += seg.bytes_accessed
+        coll = coll.merged(seg.collectives)
+
+    n_chips = ctx.mesh.devices.size
+    # split wire bytes: collectives whose groups span the pod axis ride
+    # DCN. Approximation: fsdp/batch collectives with group size ==
+    # n_batch_shards when multi-pod include one DCN hop; we attribute
+    # wire bytes proportionally to (pod_degree-1)/(group-1) when the pod
+    # axis participates. With batch axes (pod, data), pods=2:
+    pods = ctx.mesh.shape.get("pod", 1) if hasattr(ctx.mesh, "shape") else 1
+    total_wire = coll.total_wire_bytes
+    dcn_frac = 0.0
+    if pods > 1:
+        nb = ctx.n_batch_shards
+        dcn_frac = (pods - 1) / max(nb - 1, 1)
+    dcn_bytes = total_wire * dcn_frac
+    ici_bytes = total_wire - dcn_bytes
+
+    mf = model_flops(acfg, shape)
+    return Roofline(
+        arch=acfg.model.name, shape=shape.name, mesh=mesh_name,
+        n_chips=n_chips,
+        flops_per_device=total_flops,
+        bytes_per_device=total_bytes,
+        ici_wire_bytes=ici_bytes,
+        dcn_wire_bytes=dcn_bytes,
+        compute_s=total_flops / PEAK_FLOPS,
+        memory_s=total_bytes / HBM_BW,
+        collective_s=ici_bytes / ICI_BW + dcn_bytes / DCN_BW,
+        model_flops=mf,
+        hlo_total_flops=total_flops * n_chips,
+        segments=segs)

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+"data". Weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim import optimizer as O
+from repro.parallel.sharding import ParallelCtx
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(acfg: ArchConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    out: Dict[str, SDS] = {}
+    if acfg.model.frontend is not None:
+        out["embeds"] = SDS((B, S_in, acfg.model.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = SDS((B, S_in), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S_in), jnp.int32)
+    return out
+
+
+def param_specs(acfg: ArchConfig, seed: int = 0):
+    return jax.eval_shape(
+        lambda k: M.init_params(k, acfg), jax.random.PRNGKey(seed))
+
+
+def opt_specs(acfg: ArchConfig):
+    p = param_specs(acfg)
+    return jax.eval_shape(lambda q: O.init_opt_state(acfg.train, q), p)
+
+
+def state_specs(ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec):
+    """Decode-state stand-ins: KV caches sized to the shape's context."""
+    return jax.eval_shape(
+        lambda: M.init_states(ctx, acfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec
+                ) -> Tuple[Any, ...]:
+    """Arguments (as SDS pytrees) for the step function of shape.kind."""
+    if shape.kind == "train":
+        return (param_specs(acfg), opt_specs(acfg),
+                batch_specs(acfg, shape))
+    if shape.kind == "prefill":
+        return (param_specs(acfg), batch_specs(acfg, shape))
+    if shape.kind == "decode":
+        b = batch_specs(acfg, shape)
+        return (param_specs(acfg), state_specs(ctx, acfg, shape),
+                b.get("tokens"), b.get("embeds"))
+    raise ValueError(shape.kind)

@@ -1,0 +1,109 @@
+"""Jitted step functions (train / prefill / decode) with explicit
+in/out shardings — shared by the trainer, the serve engine, and the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim import optimizer as O
+from repro.parallel.sharding import ParallelCtx, logical_to_physical
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def param_shardings(ctx: ParallelCtx, acfg: ArchConfig):
+    la = M.param_logical_axes(acfg)
+    return logical_to_physical(ctx, la)
+
+
+def batch_shardings(ctx: ParallelCtx, batch: Dict):
+    def spec(a):
+        return P(*([ctx.axis("batch")] + [None] * (a.ndim - 1)))
+    return {k: spec(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(ctx: ParallelCtx, acfg: ArchConfig):
+    def loss(params, batch):
+        hidden, _, aux = M.forward(
+            ctx, acfg, params, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), mode="train")
+        ce = M.loss_fn(ctx, acfg, params, hidden, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss
+
+
+def make_train_step(ctx: ParallelCtx, acfg: ArchConfig,
+                    donate: bool = True):
+    loss = make_loss_fn(ctx, acfg)
+
+    def step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        new_params, new_opt, om = O.apply_updates(acfg.train, params,
+                                                  grads, opt_state)
+        metrics.update(om)
+        metrics["loss"] = metrics["ce"] + metrics["aux"]
+        return new_params, new_opt, metrics
+
+    if ctx.mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    pss = param_shardings(ctx, acfg)
+    to_sh = lambda tree: jax.tree.map(
+        lambda sp: NamedSharding(ctx.mesh, sp), tree)
+    return jax.jit(
+        step,
+        donate_argnums=(0, 1) if donate else (),
+        in_shardings=(to_sh(pss), None, None),
+        out_shardings=(to_sh(pss), None, None))
+
+
+def make_prefill_step(ctx: ParallelCtx, acfg: ArchConfig,
+                      max_seq: Optional[int] = None):
+    def prefill(params, batch):
+        hidden, states, _ = M.forward(
+            ctx, acfg, params, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), mode="prefill", max_seq=max_seq)
+        logits = M.logits_fn(ctx, acfg, params, hidden[:, -1:])
+        return states, logits
+    return jax.jit(prefill) if ctx.mesh is None else jax.jit(
+        prefill,
+        in_shardings=(jax.tree.map(
+            lambda sp: NamedSharding(ctx.mesh, sp),
+            param_shardings(ctx, acfg)), None))
+
+
+def make_decode_step(ctx: ParallelCtx, acfg: ArchConfig, batch: int):
+    def decode(params, states, tokens, embeds=None):
+        hidden, new_states, _ = M.forward(
+            ctx, acfg, params,
+            tokens=tokens, embeds=embeds, states=states, mode="decode")
+        logits = M.logits_fn(ctx, acfg, params, hidden)
+        return new_states, logits
+
+    if ctx.mesh is None:
+        return jax.jit(decode, donate_argnums=(1,))
+    pss = jax.tree.map(lambda sp: NamedSharding(ctx.mesh, sp),
+                       param_shardings(ctx, acfg))
+    sla = M.state_logical_axes(acfg, batch)
+    # stacked over periods: state_logical_axes already includes 'layers'
+    sss = jax.tree.map(lambda sp: NamedSharding(ctx.mesh, sp),
+                       logical_to_physical(ctx, sla))
+    return jax.jit(decode, donate_argnums=(1,),
+                   in_shardings=(pss, sss, None, None),
+                   out_shardings=(sss, None))

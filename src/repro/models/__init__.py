@@ -1,0 +1,6 @@
+from repro.models.model import (forward, init_params, init_states,
+                                logits_fn, loss_fn, param_logical_axes,
+                                state_logical_axes)
+
+__all__ = ["forward", "init_params", "init_states", "logits_fn", "loss_fn",
+           "param_logical_axes", "state_logical_axes"]

@@ -1,0 +1,121 @@
+"""Shared layers: norms, activations, RoPE, FFN, initializers.
+
+Pure-functional: every module is an ``init_*`` returning a params pytree
+and an ``apply_*`` consuming it. Compute dtype is configurable; params
+stay in ``param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return truncated_normal(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int, dtype) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(dt)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def rms_norm_simple(x: jax.Array, scale: jax.Array,
+                    eps: float = 1e-6) -> jax.Array:
+    """Headwise qk-norm helper (no config)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, n_heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                 # (d_head/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / FFN
+# ---------------------------------------------------------------------------
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def init_ffn(key, cfg: ModelConfig, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def apply_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = cfg.ffn_activation
+    if act in ("swiglu", "geglu"):
+        inner = activation("silu" if act == "swiglu" else "gelu",
+                           x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        inner = activation(act, x @ p["w_up"])
+    return inner @ p["w_down"]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)

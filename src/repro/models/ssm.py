@@ -1,0 +1,403 @@
+"""Recurrent blocks: RWKV-6 ("Finch", data-dependent per-channel decay)
+and Mamba in the SSD (scalar-per-head decay) formulation.
+
+TPU adaptation (see DESIGN.md): both use the *chunked* linear-attention
+formulation — intra-chunk work is dense matmuls (MXU-friendly), the
+inter-chunk recurrence is a short ``lax.scan`` over chunks carrying the
+state. All decay exponents are differences of inclusive cumulative log
+decays and therefore <= 0: the chunked path is overflow-free by
+construction. Single-token decode uses the exact recurrence.
+
+Shapes: x (B, S, d). States:
+  rwkv6: {"S": (B,H,K,V), "shift_tm": (B,d), "shift_cm": (B,d)}
+  mamba: {"h": (B,H,P,N), "conv": (B, d_conv-1, di+2N)}
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Shift right by one along seq; slot 0 filled from carry (or zeros)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+# =========================================================================
+# RWKV-6
+# =========================================================================
+
+def init_rwkv6(key, cfg: ModelConfig, ssm: SSMConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    hs = ssm.head_size
+    H = d // hs
+    ks = jax.random.split(key, 12)
+    lora = 64
+    decay_speed = jnp.linspace(-6.0, -2.0, d).reshape(H, hs)
+    return {
+        # time-mix
+        "mu_w": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype), "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w0": decay_speed.astype(jnp.float32),            # (H, hs)
+        "w_lora_a": dense_init(ks[0], d, lora, jnp.float32, scale=0.01),
+        "w_lora_b": dense_init(ks[1], lora, d, jnp.float32, scale=0.01),
+        "u": jnp.zeros((H, hs), jnp.float32),             # bonus
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "ln_x": jnp.ones((d,), dtype),                    # per-head groupnorm
+        # channel-mix
+        "mu_k_cm": jnp.full((d,), 0.5, dtype),
+        "mu_r_cm": jnp.full((d,), 0.5, dtype),
+        "wk_cm": dense_init(ks[7], d, f, dtype),
+        "wv_cm": dense_init(ks[8], f, d, dtype),
+        "wr_cm": dense_init(ks[9], d, d, dtype),
+    }
+
+
+def _rwkv6_rkvgw(p, x, xprev, H, hs):
+    """Projections + data-dependent decay. Returns fp32 (B,S,H,hs) each."""
+    B, S, d = x.shape
+
+    def lerp(mu):
+        return x + (xprev - x) * mu
+
+    xw, xr, xk, xv, xg = (lerp(p[m]) for m in
+                          ("mu_w", "mu_r", "mu_k", "mu_v", "mu_g"))
+    w_raw = p["w0"].reshape(-1) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"])
+    log_w = -jnp.exp(w_raw)                               # (B,S,d), < 0
+    r = (xr @ p["wr"]).astype(jnp.float32)
+    k = (xk @ p["wk"]).astype(jnp.float32)
+    v = (xv @ p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    rs = lambda t: t.reshape(B, S, H, hs)
+    return rs(r), rs(k), rs(v), g, rs(log_w)
+
+
+def rwkv6_chunked(r, k, v, log_w, u, state, chunk: int):
+    """Chunked WKV. r,k,v,log_w: (B,S,H,hs) fp32; u: (H,hs);
+    state: (B,H,K,V). Returns y (B,S,H,hs), new state."""
+    B, S, H, hs = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    cshape = (B, nc, chunk, H, hs)
+    # (nc, B, H, chunk, hs)
+    prep = lambda t: jnp.moveaxis(t.reshape(cshape).transpose(0, 1, 3, 2, 4),
+                                  1, 0)
+    rc, kc, vc, wc = prep(r), prep(k), prep(v), prep(log_w)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict i<t
+
+    def body(S_st, blk):
+        rb, kb, vb, lw = blk                              # (B,H,Lc,hs)
+        cum = jnp.cumsum(lw, axis=2)                      # inclusive
+        cum_tm1 = cum - lw
+        # D[t,i,c] = exp(cum_{t-1,c} - cum_{i,c}) for i<t  (<=0 exponent)
+        dlog = cum_tm1[:, :, :, None, :] - cum[:, :, None, :, :]
+        dlog = jnp.where(tri[None, None, :, :, None], dlog, NEG_INF)
+        A = jnp.einsum("bhtc,bhic,bhtic->bhti", rb, kb, jnp.exp(dlog))
+        diag = jnp.sum(rb * kb * u[None, :, None, :], axis=-1)
+        A = A + jnp.eye(chunk)[None, None] * diag[:, :, :, None]
+        y_intra = jnp.einsum("bhti,bhiv->bhtv", A, vb)
+        y_inter = jnp.einsum("bhtk,bhkv->bhtv", rb * jnp.exp(cum_tm1), S_st)
+        # state update: decays to end of chunk, all exponents <= 0
+        decay_out = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,H,Lc,hs)
+        S_new = S_st * jnp.exp(cum[:, :, -1, :])[..., None] + \
+            jnp.einsum("bhik,bhiv->bhkv", kb * decay_out, vb)
+        return S_new, y_intra + y_inter
+
+    state, yc = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    y = jnp.moveaxis(yc, 0, 1).transpose(0, 1, 3, 2, 4).reshape(B, S, H, hs)
+    return y, state
+
+
+def _rwkv_groupnorm(y: jax.Array, scale: jax.Array, H: int,
+                    eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm (GroupNorm with H groups), RWKV convention."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mean = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return yh.reshape(B, S, d) * scale.astype(jnp.float32)
+
+
+def rwkv6_time_mix(cfg: ModelConfig, ssm: SSMConfig, p: dict, x: jax.Array,
+                   state: Optional[dict], chunk: int = 16,
+                   use_kernel: bool = False) -> Tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    hs = ssm.head_size
+    H = d // hs
+    pad = (-S) % chunk
+    x_orig = x
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    prev = state["shift_tm"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    r, k, v, g, log_w = _rwkv6_rkvgw(p, x, xprev, H, hs)
+    if pad:  # padded tail must not touch the state: zero adds, zero decay
+        valid = (jnp.arange(S + pad) < S)[None, :, None, None]
+        k = k * valid
+        v = v * valid
+        log_w = log_w * valid
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, hs, hs),
+                                                        jnp.float32)
+    if use_kernel:
+        from repro.kernels.rwkv6_scan import rwkv6_scan
+        Sp = S + pad
+        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, Sp, hs)
+        u_b = jnp.broadcast_to(p["u"], (B, H, hs)).reshape(B * H, hs)
+        yf, sT = rwkv6_scan(fold(r), fold(k), fold(v), fold(log_w),
+                            S0.reshape(B * H, hs, hs), u_b, chunk=chunk)
+        y = yf.reshape(B, H, Sp, hs).transpose(0, 2, 1, 3)
+        S_new = sT.reshape(B, H, hs, hs)
+    else:
+        y, S_new = rwkv6_chunked(r, k, v, log_w, p["u"], S0, chunk)
+    y = y[:, :S] if pad else y
+    g = g[:, :S] if pad else g
+    y = _rwkv_groupnorm(y.reshape(B, S, d), p["ln_x"], H)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    new_state = {"S": S_new, "shift_tm": x_orig[:, -1, :]}
+    return out, new_state
+
+
+def rwkv6_time_mix_step(cfg: ModelConfig, ssm: SSMConfig, p: dict,
+                        x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """Exact single-token recurrence. x: (B,1,d)."""
+    B, _, d = x.shape
+    hs = ssm.head_size
+    H = d // hs
+    xprev = state["shift_tm"][:, None, :]
+    r, k, v, g, log_w = _rwkv6_rkvgw(p, x, xprev, H, hs)
+    r, k, v, lw = (t[:, 0] for t in (r, k, v, log_w))     # (B,H,hs)
+    outer = k[..., :, None] * v[..., None, :]             # (B,H,K,V)
+    S0 = state["S"]
+    y = jnp.einsum("bhk,bhkv->bhv", r, S0 + p["u"][None, :, :, None] * outer)
+    S_new = S0 * jnp.exp(lw)[..., None] + outer
+    y = _rwkv_groupnorm(y.reshape(B, 1, d), p["ln_x"], H)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    return out, {"S": S_new, "shift_tm": x[:, -1, :]}
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, state: Optional[dict]
+                      ) -> Tuple[jax.Array, jax.Array]:
+    prev = state["shift_cm"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    xk = x + (xprev - x) * p["mu_k_cm"]
+    xr = x + (xprev - x) * p["mu_r_cm"]
+    kk = jax.nn.relu(xk @ p["wk_cm"])
+    out = jax.nn.sigmoid(xr @ p["wr_cm"]) * ((kk * kk) @ p["wv_cm"])
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, ssm: SSMConfig, batch: int) -> dict:
+    d = cfg.d_model
+    H = d // ssm.head_size
+    return {"S": jnp.zeros((batch, H, ssm.head_size, ssm.head_size),
+                           jnp.float32),
+            "shift_tm": jnp.zeros((batch, d), jnp.float32),
+            "shift_cm": jnp.zeros((batch, d), jnp.float32)}
+
+
+# =========================================================================
+# Mamba (SSD formulation)
+# =========================================================================
+
+P_HEAD = 64  # SSD head size
+
+
+def mamba_dims(cfg: ModelConfig, ssm: SSMConfig):
+    di = ssm.expand * cfg.d_model
+    H = di // P_HEAD
+    N = ssm.d_state
+    return di, H, N
+
+
+def init_mamba(key, cfg: ModelConfig, ssm: SSMConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, H, N = mamba_dims(cfg, ssm)
+    ks = jax.random.split(key, 6)
+    return {
+        # separate column-parallel projections (NOT one fused in_proj):
+        # slicing a fused model-sharded output at the z|x|B|C|dt
+        # boundaries is not tile-aligned and forces GSPMD to reshard
+        # (B,S,di)-sized activations (§Perf hypotheses A2/A3). x and BC
+        # also get separate convs: x stays model-sharded, the tiny
+        # (2N-channel) BC conv is replicated.
+        "z_proj": dense_init(ks[0], d, di, dtype),
+        "x_proj": dense_init(ks[4], d, di, dtype),
+        "bc_proj": dense_init(ks[3], d, 2 * N, dtype),
+        "dt_proj": dense_init(ks[5], d, H, dtype),
+        "conv_w": truncated_conv_init(ks[1], ssm.d_conv, di, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_w_bc": truncated_conv_init(ks[2], ssm.d_conv, 2 * N, dtype),
+        "conv_b_bc": jnp.zeros((2 * N,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def truncated_conv_init(key, width, channels, dtype):
+    scale = 1.0 / jnp.sqrt(width)
+    return (jax.random.truncated_normal(key, -2, 2, (width, channels),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           carry: Optional[jax.Array]) -> jax.Array:
+    """x: (B,S,C); w: (W,C). Left-pad with carry (B,W-1,C) or zeros."""
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+           if carry is None else carry.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+W-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def mamba_ssd_chunked(xh, B_, C_, log_a, h0, chunk: int):
+    """xh: (B,S,H,P) dt-scaled inputs; B_,C_: (B,S,N); log_a: (B,S,H) <=0;
+    h0: (B,H,P,N). Returns y (B,S,H,P), h_final."""
+    B, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    mv = lambda t, shape: jnp.moveaxis(t.reshape(shape), 1, 0)
+    xc = mv(xh, (B, nc, chunk, H, Pd))                    # (nc,B,Lc,H,P)
+    Bc = mv(B_, (B, nc, chunk, N))
+    Cc = mv(C_, (B, nc, chunk, N))
+    ac = mv(log_a, (B, nc, chunk, H))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))        # i<=t
+
+    def body(h, blk):
+        xb, Bb, Cb, ab = blk
+        cum = jnp.cumsum(ab, axis=1)                      # (B,Lc,H) inclusive
+        dlog = cum[:, :, None, :] - cum[:, None, :, :]    # [t,i,h]
+        dlog = jnp.where(tri[None, :, :, None], dlog, NEG_INF)
+        scores = jnp.einsum("btn,bin->bti", Cb, Bb)       # (B,Lc,Lc)
+        M = scores[:, :, :, None] * jnp.exp(dlog)         # (B,Lc,Lc,H)
+        y_intra = jnp.einsum("btih,bihp->bthp", M, xb)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cb, h, jnp.exp(cum))
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)         # (B,Lc,H)
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bih,bin,bihp->bhpn", decay_out, Bb, xb)
+        return h_new, y_intra + y_inter
+
+    h, yc = jax.lax.scan(body, h0, (xc, Bc, Cc, ac))
+    return jnp.moveaxis(yc, 0, 1).reshape(B, S, H, Pd), h
+
+
+def _mamba_proj(cfg, ssm, p, x):
+    di, H, N = mamba_dims(cfg, ssm)
+    z = x @ p["z_proj"]
+    xs = x @ p["x_proj"]
+    bc = x @ p["bc_proj"]
+    dt = x @ p["dt_proj"]
+    return z, xs, bc, dt, di, H, N
+
+
+def _mamba_post(cfg, ssm, p, y, z, x_heads, B, S, di, H):
+    y = y + p["d_skip"][None, None, :, None] * x_heads
+    y = y.reshape(B, S, di)
+    # gated RMSNorm
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    y = yz * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+    # cast down BEFORE the row-parallel projection: its partial-sum
+    # all-reduce (and the MXU matmul) must run in the compute dtype, not
+    # the SSD state math's fp32 (§Perf hypothesis A5)
+    return y.astype(p["out_proj"].dtype) @ p["out_proj"]
+
+
+def mamba_forward(cfg: ModelConfig, ssm: SSMConfig, p: dict, x: jax.Array,
+                  state: Optional[dict], chunk: int = 64
+                  ) -> Tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    padn = (-S) % chunk
+    if padn:
+        x = jnp.pad(x, ((0, 0), (0, padn), (0, 0)))
+    Sp = S + padn
+    z, xs_pre, bc_pre, dt, di, H, N = _mamba_proj(cfg, ssm, p, x)
+    cx = state["conv"] if state is not None else None
+    cbc = state["conv_bc"] if state is not None else None
+    xs = _causal_depthwise_conv(xs_pre, p["conv_w"], p["conv_b"], cx)
+    bc = _causal_depthwise_conv(bc_pre, p["conv_w_bc"], p["conv_b_bc"],
+                                cbc)
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,Sp,H)
+    if padn:  # padded tail: zero dt kills both decay and state writes
+        dt = dt * (jnp.arange(Sp) < S)[None, :, None]
+    log_a = -jnp.exp(p["a_log"])[None, None, :] * dt             # <= 0
+    x_heads = xs.reshape(B, Sp, H, P_HEAD).astype(jnp.float32)
+    xh = x_heads * dt[..., None]
+    h0 = state["h"] if state is not None else jnp.zeros((B, H, P_HEAD, N),
+                                                        jnp.float32)
+    y, h = mamba_ssd_chunked(xh, B_.astype(jnp.float32),
+                             C_.astype(jnp.float32), log_a, h0, chunk)
+    if padn:
+        y, z, x_heads = y[:, :S], z[:, :S], x_heads[:, :S]
+        xs_pre, bc_pre = xs_pre[:, :S], bc_pre[:, :S]
+    out = _mamba_post(cfg, ssm, p, y, z, x_heads, B, S, di, H)
+    W = ssm.d_conv
+
+    def hist(carry, pre, ch):
+        zpad = jnp.zeros((B, W - 1, ch), x.dtype)
+        full = jnp.concatenate(
+            [(carry.astype(x.dtype) if carry is not None else zpad), pre],
+            axis=1)
+        return full[:, -(W - 1):, :]
+
+    new_state = {"h": h, "conv": hist(cx, xs_pre, di),
+                 "conv_bc": hist(cbc, bc_pre, 2 * N)}
+    return out, new_state
+
+
+def mamba_step(cfg: ModelConfig, ssm: SSMConfig, p: dict, x: jax.Array,
+               state: dict) -> Tuple[jax.Array, dict]:
+    """Exact single-token recurrence. x: (B,1,d)."""
+    B, _, d = x.shape
+    z, xs_pre, bc_pre, dt, di, H, N = _mamba_proj(cfg, ssm, p, x)
+    W = ssm.d_conv
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), xs_pre],
+                              axis=1)                     # (B, W, di)
+    conv_in_bc = jnp.concatenate([state["conv_bc"].astype(x.dtype),
+                                  bc_pre], axis=1)        # (B, W, 2N)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"])
+                     + p["conv_b"])[:, None, :]
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in_bc, p["conv_w_bc"])
+                     + p["conv_b_bc"])[:, None, :]
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt)       # (B,H)
+    x_heads = xs.reshape(B, 1, H, P_HEAD).astype(jnp.float32)
+    xdt = x_heads[:, 0] * dt[..., None]                   # (B,H,P)
+    h = state["h"] * a[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xdt, B_[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), h)[:, None]
+    out = _mamba_post(cfg, ssm, p, y, z, x_heads, B, 1, di, H)
+    return out, {"h": h, "conv": conv_in[:, -(W - 1):, :],
+                 "conv_bc": conv_in_bc[:, -(W - 1):, :]}
+
+
+def init_mamba_state(cfg: ModelConfig, ssm: SSMConfig, batch: int) -> dict:
+    di, H, N = mamba_dims(cfg, ssm)
+    return {"h": jnp.zeros((batch, H, P_HEAD, N), jnp.float32),
+            "conv": jnp.zeros((batch, ssm.d_conv - 1, di), jnp.float32),
+            "conv_bc": jnp.zeros((batch, ssm.d_conv - 1, 2 * N),
+                                 jnp.float32)}

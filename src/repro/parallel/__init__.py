@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (NO_MESH, ParallelCtx,
+                                     logical_to_physical, make_ctx,
+                                     tree_shardings)
+
+__all__ = ["NO_MESH", "ParallelCtx", "logical_to_physical", "make_ctx",
+           "tree_shardings"]

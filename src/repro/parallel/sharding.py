@@ -1,0 +1,137 @@
+"""Logical-axis sharding: one place that decides how every tensor maps
+onto the physical mesh (MaxText-style rules, but as a small explicit
+context object passed through the model).
+
+Physical axes: ("pod",) "data", "model". Logical axes used by the model:
+
+  batch      -> (pod, data)          activations' batch dim
+  seq        -> None | data          long-context activation / KV seq dim
+  heads      -> model                q-head dim (uneven heads pad via GSPMD)
+  kv_heads   -> model | None         KV cache head dim
+  d_ff       -> model                FFN hidden (tensor parallel)
+  vocab      -> model                embedding / logits vocab dim
+  expert     -> model (ep) | None    MoE expert dim
+  fsdp       -> (pod, data) if fsdp  weight shard dim (ZeRO-3 / "PS shard")
+  layers     -> None                 stacked-scan leading dim
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[Mesh]
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False
+    ps_mode: bool = False
+    expert_sharding: str = "tp"      # 'tp' | 'ep'
+    seq_shard_prefill: bool = True
+    seq_shard_kv_decode: bool = True
+    # hillclimb knobs (see EXPERIMENTS.md §Perf)
+    shard_kv_heads: bool = True      # shard KV cache heads over model axis
+
+    # ------------------------------------------------------------------
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch_axes if len(self.batch_axes) > 1 \
+                else self.batch_axes[0]
+        if logical in ("heads", "d_ff", "vocab"):
+            return self.model_axis
+        if logical == "kv_heads":
+            return self.model_axis if self.shard_kv_heads else None
+        if logical == "expert":
+            return self.model_axis if self.expert_sharding == "ep" else None
+        if logical == "fsdp":
+            return (self.batch_axes if len(self.batch_axes) > 1
+                    else self.batch_axes[0]) if self.fsdp else None
+        if logical == "seq":
+            return "data"
+        if logical == "kv_seq":
+            # decode KV caches: sequence over the model axis
+            # (flash-decoding-style split; KV heads stay replicated since
+            # n_kv < mesh axis for most archs and jit shardings must
+            # divide evenly)
+            return self.model_axis
+        if logical == "kv_seq_all":
+            # single-stream long-context decode: sequence over the whole
+            # mesh
+            return tuple(self.batch_axes) + (self.model_axis,)
+        if logical == "layers":
+            return None
+        raise KeyError(logical)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.axis(a) for a in logical])
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        """with_sharding_constraint when a mesh is active, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical)))
+
+    @property
+    def n_batch_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def n_model_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+def make_ctx(cfg: ArchConfig, mesh: Optional[Mesh]) -> ParallelCtx:
+    batch_axes: Tuple[str, ...] = ("data",)
+    if mesh is not None and "pod" in mesh.axis_names:
+        batch_axes = ("pod", "data")
+    es = cfg.parallel.expert_sharding or (
+        cfg.model.moe.expert_sharding if cfg.model.moe else "tp")
+    # EP requires the expert count to divide evenly over the model axis.
+    if mesh is not None and es == "ep" and cfg.model.moe is not None:
+        if cfg.model.moe.num_experts % mesh.shape["model"] != 0:
+            es = "tp"
+    return ParallelCtx(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        fsdp=cfg.parallel.fsdp,
+        ps_mode=cfg.parallel.ps_mode,
+        expert_sharding=es,
+        seq_shard_prefill=cfg.parallel.seq_shard_prefill,
+        seq_shard_kv_decode=cfg.parallel.seq_shard_kv_decode,
+    )
+
+
+NO_MESH = ParallelCtx(mesh=None)
+
+
+def logical_to_physical(ctx: ParallelCtx, logical_tree):
+    """Map a pytree of PartitionSpec-of-*logical*-names to physical specs."""
+    return jax.tree.map(lambda lp: ctx.spec(*lp), logical_tree)
+
+
+def tree_shardings(ctx: ParallelCtx, logical_tree):
+    """NamedShardings for a logical tree (requires a mesh)."""
+    assert ctx.mesh is not None
+    return jax.tree.map(
+        lambda lp: NamedSharding(ctx.mesh, ctx.spec(*lp)), logical_tree)

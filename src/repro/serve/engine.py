@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill + decode with per-layer KV/SSM state,
+greedy/temperature sampling, static batch with slot reuse.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.parallel.sharding import ParallelCtx
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int = 512
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, ctx: ParallelCtx, acfg: ArchConfig, params,
+                 cfg: ServeConfig = ServeConfig()):
+        assert not acfg.model.is_encoder, "encoder models do not decode"
+        self.ctx, self.acfg, self.cfg = ctx, acfg, cfg
+        self.params = params
+        self._prefill = steps_lib.make_prefill_step(ctx, acfg,
+                                                    max_seq=cfg.max_seq)
+        self._decode = {}
+
+    def _decode_fn(self, batch: int):
+        if batch not in self._decode:
+            self._decode[batch] = steps_lib.make_decode_step(
+                self.ctx, self.acfg, batch)
+        return self._decode[batch]
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1)
+        return jax.random.categorical(key,
+                                      logits[:, -1] / self.cfg.temperature)
+
+    def generate(self, prompts: np.ndarray,
+                 max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for fixed-length prompt batches). Returns (B, new) int32."""
+        B, S = prompts.shape
+        mnt = max_new_tokens or self.cfg.max_new_tokens
+        assert S + mnt <= self.cfg.max_seq, (S, mnt, self.cfg.max_seq)
+        key = jax.random.PRNGKey(self.cfg.seed)
+
+        states, logits = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompts)})
+        decode = self._decode_fn(B)
+        out = []
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits, k0)
+        out.append(tok)
+        for _ in range(mnt - 1):
+            key, k = jax.random.split(key)
+            states, logits = decode(self.params, states, tok[:, None],
+                                    None)
+            tok = self._sample(logits, k)
+            out.append(tok)
+        return np.asarray(jnp.stack(out, axis=1))

@@ -1,0 +1,168 @@
+"""Trainer: checkpoint/restart, straggler watchdog, failure recovery,
+elastic mesh restore — the fault-tolerance layer (DESIGN.md §3.3).
+
+Single-controller design: at 1000+ nodes this process is the per-slice
+controller; the launcher (launch/train.py) handles process-level
+restart, and everything the step needs (params, opt state, data cursor)
+is reconstructable from (checkpoint, step index) because the data
+pipeline is step-indexed and deterministic.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.pipeline import DataConfig, device_batch, host_batch
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.optim import optimizer as O
+from repro.parallel.sharding import ParallelCtx
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 25
+    keep_ckpts: int = 3
+    # straggler watchdog: a step slower than ema * factor is "straggling"
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    max_step_retries: int = 2
+    log_every: int = 10
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    wall_s: float
+    straggler: bool = False
+    retried: int = 0
+
+
+class Trainer:
+    def __init__(self, ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 dcfg: DataConfig = DataConfig(),
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        """fault_hook(step): test-injection point — raises to simulate a
+        node failure at a given step."""
+        self.ctx, self.acfg, self.shape = ctx, acfg, shape
+        self.tcfg, self.dcfg = tcfg, dcfg
+        self.fault_hook = fault_hook
+        self.step_fn = steps_lib.make_train_step(ctx, acfg, donate=False)
+        self.history: List[StepRecord] = []
+        self.straggler_events: List[int] = []
+        self._ema: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = M.init_params(jax.random.PRNGKey(seed), self.acfg)
+        if self.ctx.mesh is not None:
+            shs = jax.tree.map(
+                lambda sp: jax.NamedSharding(self.ctx.mesh, sp),
+                steps_lib.param_shardings(self.ctx, self.acfg))
+            params = jax.tree.map(jax.device_put, params, shs)
+        opt = O.init_opt_state(self.acfg.train, params)
+        return params, opt, 0
+
+    def resume_or_init(self, seed: int = 0):
+        d = self.tcfg.ckpt_dir
+        if d:
+            last = ckpt_lib.latest_step(d)
+            if last is not None:
+                params, opt, _ = self.init_state(seed)
+                (params, opt), extra = ckpt_lib.restore(
+                    d, last, (params, opt))
+                log.info("resumed from step %d", last)
+                return params, opt, last
+        return self.init_state(seed)
+
+    # ------------------------------------------------------------------
+    def _one_step(self, params, opt, step: int):
+        batch = device_batch(self.ctx, host_batch(self.acfg, self.shape,
+                                                  step, self.dcfg))
+        if self.fault_hook is not None:
+            self.fault_hook(step)
+        t0 = time.perf_counter()
+        params, opt, metrics = self.step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        wall = time.perf_counter() - t0
+        return params, opt, float(metrics["loss"]), wall
+
+    def train(self, params=None, opt=None, start_step: Optional[int] = None,
+              seed: int = 0):
+        if params is None:
+            params, opt, start_step = self.resume_or_init(seed)
+        step = start_step or 0
+        slow_streak = 0
+        while step < self.tcfg.total_steps:
+            retries = 0
+            while True:
+                try:
+                    params_n, opt_n, loss, wall = self._one_step(
+                        params, opt, step)
+                    break
+                except Exception as e:  # noqa: BLE001 — node-failure path
+                    retries += 1
+                    log.warning("step %d failed (%s); retry %d", step, e,
+                                retries)
+                    if retries > self.tcfg.max_step_retries:
+                        # unrecoverable in-process: restart from last ckpt
+                        if self.tcfg.ckpt_dir and \
+                                ckpt_lib.latest_step(self.tcfg.ckpt_dir) \
+                                is not None:
+                            params, opt, step = self.resume_or_init(seed)
+                            retries = 0
+                            continue
+                        raise
+            params, opt = params_n, opt_n
+
+            # straggler watchdog
+            straggler = False
+            if self._ema is not None and \
+                    wall > self._ema * self.tcfg.straggler_factor:
+                straggler = True
+                slow_streak += 1
+                self.straggler_events.append(step)
+                if slow_streak >= self.tcfg.straggler_patience:
+                    log.warning(
+                        "straggling %d consecutive steps at step %d — "
+                        "checkpointing for preemptive migration",
+                        slow_streak, step)
+                    if self.tcfg.ckpt_dir:
+                        ckpt_lib.save(self.tcfg.ckpt_dir, step + 1,
+                                      (params, opt))
+                    slow_streak = 0
+            else:
+                slow_streak = 0
+            if self._ema is None:
+                # seed the EMA from the SECOND step: the first includes
+                # compilation and would mask real stragglers for many steps
+                if self.history:
+                    self._ema = wall
+            else:
+                self._ema = 0.9 * self._ema + 0.1 * wall
+
+            self.history.append(StepRecord(step, loss, wall, straggler,
+                                           retries))
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.1f ms)", step, loss,
+                         wall * 1e3)
+            step += 1
+            if self.tcfg.ckpt_dir and step % self.tcfg.ckpt_every == 0:
+                ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt))
+                ckpt_lib.prune(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
+        if self.tcfg.ckpt_dir:
+            ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt))
+        return params, opt

@@ -1,0 +1,158 @@
+"""Extra coverage: skew bias variants, serialization vs kernel parity,
+resource monitor, elastic mesh restore, roofline helpers."""
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core import serialization as ser
+from repro.core.payload import generate_spec
+from repro.core.resource import ResourceMonitor
+
+
+@pytest.mark.parametrize("bias,heavy", [("large", "large"),
+                                        ("medium", "medium"),
+                                        ("small", "small")])
+def test_skew_bias_variants(bias, heavy):
+    spec = generate_spec(BenchConfig(scheme="skew", skew_bias=bias))
+    counts = {c: spec.categories.count(c) for c in set(spec.categories)}
+    assert counts[heavy] == 6  # 60% of 10 buffers
+
+
+def test_skew_bias_ordering():
+    sizes = {b: generate_spec(BenchConfig(scheme="skew",
+                                          skew_bias=b)).total_bytes
+             for b in ("small", "medium", "large")}
+    assert sizes["small"] < sizes["medium"] < sizes["large"]
+
+
+@given(sizes=st.lists(st.integers(1, 2048), min_size=1, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_jnp_serialization_roundtrip(sizes):
+    rng = np.random.default_rng(0)
+    bufs = [jnp.asarray(rng.integers(0, 255, s, dtype=np.uint8))
+            for s in sizes]
+    packed, meta = ser.pack(bufs)
+    assert packed.shape[-1] == sum(sizes)
+    outs = ser.unpack(packed, meta)
+    for a, b in zip(bufs, outs):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_serialization_matches_kernel_ref():
+    from repro.kernels.payload_pack import pack_ref
+    rng = np.random.default_rng(1)
+    bufs = [jnp.asarray(rng.integers(0, 255, s, dtype=np.uint8))
+            for s in (128, 384, 256)]
+    packed, _ = ser.pack(bufs)
+    assert bool(jnp.array_equal(packed, pack_ref(bufs)))
+
+
+def test_resource_monitor_measures():
+    with ResourceMonitor(interval_s=0.01) as mon:
+        x = np.zeros(4 << 20, dtype=np.uint8)  # touch some memory
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < 0.1:
+            x.sum()
+    r = mon.report
+    assert r.duration_s >= 0.1
+    assert r.cpu_time_s > 0
+    assert r.rss_peak_bytes > 1e6
+    assert r.samples >= 2
+
+
+@pytest.mark.slow
+def test_elastic_restore_to_different_mesh(tmp_path):
+    """Checkpoint on a (2,2) mesh, restore onto a (4,1) mesh (elastic
+    restart after losing model-parallel peers)."""
+    code = f"""
+import dataclasses, jax, numpy as np
+from repro.configs import get_reduced_config, get_shape
+from repro.models import init_params
+from repro.optim import optimizer as O
+from repro.checkpoint import checkpoint as ckpt
+from repro.launch.mesh import make_test_mesh
+from repro.launch import steps as S
+from repro.parallel import make_ctx
+from repro.data.pipeline import host_batch, device_batch
+
+cfg = get_reduced_config('qwen3-8b', n_layers=2)
+shape = dataclasses.replace(get_shape('train_4k'), seq_len=32,
+                            global_batch=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+opt = O.init_opt_state(cfg.train, params)
+
+mesh1 = make_test_mesh(2, 2)
+ctx1 = make_ctx(cfg, mesh1)
+with mesh1:
+    step = S.make_train_step(ctx1, cfg, donate=False)
+    b = device_batch(ctx1, host_batch(cfg, shape, 0))
+    params, opt, m1 = step(params, opt, b)
+    jax.block_until_ready(m1['loss'])
+ckpt.save(r'{tmp_path}', 1, (params, opt))
+
+# restore onto a DIFFERENT mesh shape
+mesh2 = make_test_mesh(4, 1)
+ctx2 = make_ctx(cfg, mesh2)
+from repro.parallel import tree_shardings
+from repro.models.model import param_logical_axes
+with mesh2:
+    psh = tree_shardings(ctx2, param_logical_axes(cfg))
+    (params2, opt2), _ = ckpt.restore(r'{tmp_path}', 1, (params, opt),
+                                      shardings=(psh, None))
+    step2 = S.make_train_step(ctx2, cfg, donate=False)
+    b2 = device_batch(ctx2, host_batch(cfg, shape, 1))
+    params2, opt2, m2 = step2(params2, opt2, b2)
+    jax.block_until_ready(m2['loss'])
+assert np.isfinite(float(m2['loss']))
+print('ELASTIC_OK', float(m1['loss']), float(m2['loss']))
+"""
+    import os
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2500:]
+    assert "ELASTIC_OK" in out.stdout
+
+
+def test_roofline_extrapolation_math():
+    from repro.launch.hlo import CollectiveStats
+    from repro.launch.roofline import SegmentCost, extrapolate_two_point
+
+    def seg(flops, wire):
+        c = CollectiveStats()
+        c.wire_bytes["all-reduce"] = wire
+        return SegmentCost("s", flops, flops * 2, c, 0.0)
+
+    # fixed = 100, per-chunk = 10 -> at S1: 110, at 2*S1: 120
+    c1, c2 = seg(110, 110), seg(120, 120)
+    out = extrapolate_two_point(c1, c2, ratio=512)
+    assert out.flops == pytest.approx(100 + 10 * 512)
+    assert out.collectives.wire_bytes["all-reduce"] == pytest.approx(
+        100 + 10 * 512)
+    # pure per-token segments (no fixed part) scale linearly
+    c1, c2 = seg(10, 10), seg(20, 20)
+    out = extrapolate_two_point(c1, c2, ratio=512)
+    assert out.flops == pytest.approx(10 * 512)
+
+
+def test_model_flops_formula():
+    from repro.configs import get_config, get_shape
+    from repro.launch.roofline import model_flops
+    cfg = get_config("qwen3-8b")
+    mf = model_flops(cfg, get_shape("train_4k"))
+    n, d = cfg.model.num_params(), 256 * 4096
+    assert mf == pytest.approx(6 * n * d, rel=1e-6)
+    # MoE: active params only
+    kimi = get_config("kimi-k2-1t-a32b")
+    mfk = model_flops(kimi, get_shape("train_4k"))
+    assert mfk < 6 * kimi.model.num_params() * d * 0.05

@@ -1,0 +1,65 @@
+"""HLO collective parser: shapes, groups, wire factors, dtype chasing."""
+from repro.launch import hlo
+
+
+HLO = """
+HloModule jit_f
+
+%fused_computation.1 (param_0.3: f32[512,64]) -> f32[512,64] {
+  %param_0.3 = f32[512,64]{1,0} parameter(0)
+  %convert.5 = bf16[512,64]{1,0} convert(%param_0.3)
+  ROOT %convert.6 = f32[512,64]{1,0} convert(%convert.5)
+}
+
+ENTRY %main (p0: f32[512,64], p1: bf16[8,64]) -> f32[512,64] {
+  %p0 = f32[512,64]{1,0} parameter(0)
+  %convert_convert_fusion.1 = f32[512,64]{1,0} fusion(%p0), kind=kLoop, calls=%fused_computation.1
+  %all-gather.1 = f32[512,256]{1,0} all-gather(%convert_convert_fusion.1), replica_groups={{0,1,2,3}}, dimensions={1}
+  %p1 = bf16[8,64]{1,0} parameter(1)
+  %all-reduce.1 = bf16[8,64]{1,0} all-reduce(%p1), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %rs = f32[4,64]{1,0} reduce-scatter(%all-gather.1), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[8,64]{1,0} collective-permute(%p1), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_counts_and_kinds():
+    st = hlo.parse_collectives(HLO)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+
+
+def test_dtype_correction_through_fusion():
+    st = hlo.parse_collectives(HLO)
+    # f32 512x256 = 524288 B, but the operand is a bf16 round-trip fusion
+    # -> halved to 262144; wire factor (n-1)/n with n=4
+    assert st.result_bytes["all-gather"] == 524288 // 2
+    assert abs(st.wire_bytes["all-gather"] - 262144 * 3 / 4) < 1
+
+
+def test_native_bf16_untouched():
+    st = hlo.parse_collectives(HLO)
+    assert st.result_bytes["all-reduce"] == 8 * 64 * 2
+    # 2(n-1)/n with n=8
+    assert abs(st.wire_bytes["all-reduce"] - 1024 * 2 * 7 / 8) < 1
+
+
+def test_iota_replica_groups():
+    st = hlo.parse_collectives(HLO)
+    # reduce-scatter groups=[2,8] -> group size 8, factor (n-1)
+    ops = [o for o in st.ops if o[0] == "reduce-scatter"]
+    assert ops[0][2] == 8
+
+
+def test_wire_factors():
+    assert hlo._wire_factor("all-reduce", 4) == 2 * 3 / 4
+    assert hlo._wire_factor("all-gather", 4) == 3 / 4
+    assert hlo._wire_factor("reduce-scatter", 4) == 3
+    assert hlo._wire_factor("collective-permute", 2) == 1.0
+
+
+def test_shape_bytes():
+    assert hlo._shape_bytes("bf16[2,3,4]") == 48
+    assert hlo._shape_bytes("f32[10]") == 40
+    assert hlo._shape_bytes("pred[7]") == 7
+    assert hlo._shape_bytes("s32[]") == 4

@@ -1,0 +1,187 @@
+"""Multi-device behaviour (channels, sharded training parity, small-mesh
+dry-run) — run in subprocesses so the 8-device XLA flag never leaks into
+this process (smoke tests must see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_bipartite_schedule_pure():
+    from repro.core.channels import bipartite_schedule
+    for srcs, dsts in [([0, 1], [2, 3, 4]), ([0, 1, 2], [3, 4]),
+                       ([0], [1, 2, 3, 4, 5]), ([0, 1, 2, 3], [4, 5, 6, 7])]:
+        rounds = bipartite_schedule(srcs, dsts)
+        pairs = [p for r in rounds for p in r]
+        assert len(pairs) == len(set(pairs)) == len(srcs) * len(dsts)
+        assert set(pairs) == {(s, d) for s in srcs for d in dsts}
+        for r in rounds:
+            ss = [s for s, _ in r]
+            dd = [d for _, d in r]
+            assert len(set(ss)) == len(ss) and len(set(dd)) == len(dd)
+
+
+@pytest.mark.slow
+def test_p2p_echo_moves_data():
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import channels as ch
+from repro.core.payload import generate_spec
+from repro.configs.tfgrpc_bench import BenchConfig
+mesh = ch.make_net_mesh(4)
+spec = generate_spec(BenchConfig(iovec_count=3))
+bufs = ch.device_payload(mesh, spec, seed=3)
+for ser in (False, True):
+    fn = ch.p2p_echo_fn(mesh, spec.n_buffers, serialized=ser)
+    out = jax.block_until_ready(fn(*bufs))
+    # row 0's payload went 0->1->0: row 0 of output == row 0 of input
+    for a, b in zip(bufs, out):
+        assert np.array_equal(np.asarray(a)[0], np.asarray(b)[0]), ser
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_ps_round_and_benches():
+    out = _run("""
+import jax, numpy as np
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core import bench
+st = bench.run(BenchConfig(benchmark='ps_throughput', num_ps=2,
+                           num_workers=3, warmup_s=0.1, duration_s=0.3))
+assert st.derived['rpcs_per_s'] > 0
+assert st.n_iters >= 5
+assert st.resources is not None and st.resources.rss_peak_bytes > 0
+assert set(st.model_projection) >= {'rdma_edr', 'eth40g', 'tpu_ici'}
+st2 = bench.run(BenchConfig(benchmark='p2p_bandwidth', warmup_s=0.1,
+                            duration_s=0.3))
+assert st2.derived['MBps'] > 0
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_training_matches_single_device():
+    """Same seed, same data: a (2,2) mesh train step must match the
+    single-device step (SPMD correctness)."""
+    out = _run("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced_config, get_shape
+from repro.models import init_params
+from repro.optim import optimizer as O
+from repro.launch import steps as S
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import NO_MESH, make_ctx
+from repro.data.pipeline import host_batch, device_batch
+
+cfg = get_reduced_config('qwen3-8b', n_layers=2)
+shape = dataclasses.replace(get_shape('train_4k'), seq_len=32,
+                            global_batch=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+opt = O.init_opt_state(cfg.train, params)
+b = host_batch(cfg, shape, 0)
+
+# single device
+s1 = S.make_train_step(NO_MESH, cfg, donate=False)
+p1, o1, m1 = s1(params, opt, device_batch(NO_MESH, b))
+
+# (2,2) mesh
+mesh = make_test_mesh(2, 2)
+ctx = make_ctx(cfg, mesh)
+with mesh:
+    s2 = S.make_train_step(ctx, cfg, donate=False)
+    p2, o2, m2 = s2(params, opt, device_batch(ctx, b))
+    jax.block_until_ready(m2['loss'])
+
+assert abs(float(m1['loss']) - float(m2['loss'])) < 1e-4, (
+    float(m1['loss']), float(m2['loss']))
+for a, b2 in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b2, np.float32),
+                               atol=2e-3, rtol=2e-3)
+print('OK', float(m1['loss']), float(m2['loss']))
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_tp_sharding():
+    out = _run("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced_config
+from repro.models import init_params, forward
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import make_ctx, NO_MESH
+
+cfg = get_reduced_config('kimi-k2-1t-a32b', n_layers=2)
+params = init_params(jax.random.PRNGKey(0), cfg)
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                          cfg.model.vocab_size)
+h_ref, _, _ = forward(NO_MESH, cfg, params, tokens=toks, mode='train')
+mesh = make_test_mesh(2, 2)
+for es in ('tp', 'ep'):
+    cfg2 = cfg.replace(parallel=dataclasses.replace(cfg.parallel,
+                                                    expert_sharding=es))
+    ctx = make_ctx(cfg2, mesh)
+    with mesh:
+        h, _, _ = jax.jit(lambda p, t: forward(ctx, cfg2, p, tokens=t,
+                                               mode='train'))(params, toks)
+        jax.block_until_ready(h)
+    err = float(jnp.max(jnp.abs(h_ref - h)))
+    assert err < 2e-3, (es, err)
+    print(es, 'err', err)
+print('OK')
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_all_kinds():
+    """Lower+compile the three step kinds on a (2,2) and a (2,2,2) mesh
+    (mini version of the production dry-run)."""
+    out = _run("""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_reduced_config, get_shape
+from repro.launch import steps as S, specs as SP
+from repro.launch.mesh import make_test_mesh
+from repro.parallel import make_ctx
+
+for mesh in (make_test_mesh(2, 2), make_test_mesh(2, 2, pod=2)):
+    for arch in ('qwen3-8b', 'mixtral-8x7b', 'rwkv6-1.6b'):
+        cfg = get_reduced_config(arch, n_layers=2)
+        ctx = make_ctx(cfg, mesh)
+        with mesh:
+            for shape_name, kind in (('train_4k', 'train'),
+                                     ('prefill_32k', 'prefill'),
+                                     ('decode_32k', 'decode')):
+                shape = dataclasses.replace(
+                    get_shape(shape_name), seq_len=64,
+                    global_batch=8 if kind != 'prefill' else 4)
+                if kind == 'train':
+                    step = S.make_train_step(ctx, cfg, donate=False)
+                elif kind == 'prefill':
+                    step = S.make_prefill_step(ctx, cfg)
+                else:
+                    step = S.make_decode_step(ctx, cfg, shape.global_batch)
+                args = SP.input_specs(ctx, cfg, shape)
+                compiled = step.lower(*args).compile()
+                assert compiled.cost_analysis() is not None
+print('OK')
+""", devices=8)
+    assert "OK" in out

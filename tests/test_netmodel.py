@@ -1,0 +1,66 @@
+"""Network models must reproduce the paper's measured claims (the
+reproduction gate for §4 of the paper) and behave physically."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core.netmodel import NETWORKS, paper_ratio_report
+from repro.core.payload import generate_spec
+
+TOLERANCE = 0.12  # max relative error vs the paper's reported ratios
+
+
+def test_paper_claims_within_tolerance():
+    rep = paper_ratio_report()
+    bad = {k: v for k, v in rep.items()
+           if k != "fig7_serialization_constant"
+           and v["rel_err"] > TOLERANCE}
+    assert not bad, f"model misses paper claims: {bad}"
+
+
+def test_fig7_serialization_overhead_roughly_constant():
+    # paper fig 7: serialization cost is constant across networks
+    v = paper_ratio_report()["fig7_serialization_constant"]
+    assert 0.5 < v["model"] < 2.0
+
+
+def test_rdma_always_fastest_within_cluster():
+    spec = generate_spec(BenchConfig(scheme="skew"))
+    for cluster in (("eth40g", "ipoib_edr", "rdma_edr"),
+                    ("eth10g", "ipoib_fdr", "rdma_fdr")):
+        rtts = [NETWORKS[n].rtt(spec) for n in cluster]
+        assert rtts[2] == min(rtts)
+
+
+def test_tpu_ici_beats_all_nics():
+    spec = generate_spec(BenchConfig(scheme="skew"))
+    ici = NETWORKS["tpu_ici"].rtt(spec)
+    assert all(ici < NETWORKS[n].rtt(spec) for n in NETWORKS
+               if n != "tpu_ici")
+
+
+@given(nbytes=st.integers(1, 10 * 1024 * 1024),
+       extra=st.integers(1, 1024 * 1024))
+@settings(max_examples=50, deadline=None)
+def test_monotone_in_bytes(nbytes, extra):
+    for net in NETWORKS.values():
+        assert net.msg_time(nbytes + extra) > net.msg_time(nbytes)
+
+
+@given(seed=st.integers(0, 100),
+       scheme=st.sampled_from(["uniform", "random", "skew"]))
+@settings(max_examples=30, deadline=None)
+def test_rtt_is_twice_oneway(seed, scheme):
+    spec = generate_spec(BenchConfig(scheme=scheme, seed=seed))
+    for net in NETWORKS.values():
+        assert net.rtt(spec) == pytest.approx(
+            2 * net.payload_time(spec, serialized=False))
+
+
+def test_ps_throughput_scales_with_ps():
+    spec = generate_spec(BenchConfig())
+    n = NETWORKS["rdma_edr"]
+    # PSes work in parallel: more PS => more RPCs/s
+    assert n.ps_throughput(spec, 4, 3) > n.ps_throughput(spec, 2, 3)
+    # more workers => more aggregate RPCs but each PS serializes
+    assert n.ps_throughput(spec, 2, 6) <= 2 * n.ps_throughput(spec, 2, 3)

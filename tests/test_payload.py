@@ -1,0 +1,86 @@
+"""Payload generator: paper Table-1 ranges, scheme semantics, and
+hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, list_archs
+from repro.configs.tfgrpc_bench import (BenchConfig, LARGE_RANGE,
+                                        MEDIUM_RANGE, SKEW_FRACTIONS,
+                                        SMALL_RANGE)
+from repro.core.payload import (classify, from_arch, generate_spec,
+                                materialize)
+
+
+def test_uniform_default_composition():
+    spec = generate_spec(BenchConfig(scheme="uniform"))
+    assert spec.n_buffers == 10
+    # cycling small/medium/large over 10 slots: 4/3/3
+    counts = {c: spec.categories.count(c) for c in set(spec.categories)}
+    assert counts == {"small": 4, "medium": 3, "large": 3}
+    assert spec.total_bytes == 4 * 10 + 3 * 10240 + 3 * 1048576
+
+
+def test_skew_is_large_biased():
+    spec = generate_spec(BenchConfig(scheme="skew"))
+    counts = {c: spec.categories.count(c) for c in set(spec.categories)}
+    assert counts["large"] == 6 and counts["medium"] == 3 \
+        and counts["small"] == 1  # 60/30/10 of 10
+    uni = generate_spec(BenchConfig(scheme="uniform"))
+    assert spec.total_bytes > uni.total_bytes  # paper: skew is largest
+
+
+def test_random_needs_two_categories():
+    with pytest.raises(AssertionError):
+        generate_spec(BenchConfig(scheme="random", categories=("small",)))
+
+
+def test_random_deterministic_per_seed():
+    a = generate_spec(BenchConfig(scheme="random", seed=7))
+    b = generate_spec(BenchConfig(scheme="random", seed=7))
+    c = generate_spec(BenchConfig(scheme="random", seed=8))
+    assert a.sizes == b.sizes
+    assert a.sizes != c.sizes or a.categories != c.categories
+
+
+@given(n=st.integers(1, 64),
+       scheme=st.sampled_from(["uniform", "random", "skew"]),
+       small=st.integers(*SMALL_RANGE).filter(lambda x: x < SMALL_RANGE[1]),
+       medium=st.integers(MEDIUM_RANGE[0], MEDIUM_RANGE[1] - 1),
+       large=st.integers(*LARGE_RANGE),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_spec_invariants(n, scheme, small, medium, large, seed):
+    cfg = BenchConfig(scheme=scheme, iovec_count=n, small_bytes=small,
+                      medium_bytes=medium, large_bytes=large, seed=seed)
+    spec = generate_spec(cfg)
+    assert spec.n_buffers == n
+    assert spec.total_bytes == sum(spec.sizes)
+    assert len(spec.categories) == n
+    size_of = {"small": small, "medium": medium, "large": large}
+    for sz, cat in zip(spec.sizes, spec.categories):
+        assert sz == size_of[cat]
+    # classification ranges (Table 1)
+    assert classify(small) == "small"
+    assert classify(medium) == "medium"
+    assert classify(large) == "large"
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_materialize_alignment(seed):
+    spec = generate_spec(BenchConfig(scheme="skew", seed=seed))
+    bufs = materialize(spec, tpu_align=True, seed=seed)
+    for b, sz in zip(bufs, spec.sizes):
+        assert b.shape[0] >= sz and b.shape[0] % 128 == 0
+    raw = materialize(spec, tpu_align=False, seed=seed)
+    for b, sz in zip(raw, spec.sizes):
+        assert b.shape[0] == sz
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_from_arch_payloads(arch):
+    spec = from_arch(get_config(arch))
+    assert spec.n_buffers == 10
+    assert all(1 <= s <= LARGE_RANGE[1] for s in spec.sizes)
+    assert spec.scheme == f"arch:{arch}"
