@@ -25,7 +25,7 @@ SEP = "$"
 
 
 def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
     def name(path):
         parts = []

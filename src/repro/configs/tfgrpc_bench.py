@@ -28,8 +28,10 @@ SKEW_BIAS_FRACTIONS = {
 
 @dataclass(frozen=True)
 class BenchConfig:
-    """Table 2 — configurable parameters of TF-gRPC-Bench."""
-    benchmark: str = "p2p_latency"   # p2p_latency | p2p_bandwidth | ps_throughput
+    """Table 2 — configurable parameters of TF-gRPC-Bench, extended with
+    the rpc-fabric benchmark family (fully_connected + transport)."""
+    # p2p_latency | p2p_bandwidth | ps_throughput | fully_connected
+    benchmark: str = "p2p_latency"
     num_ps: int = 1
     num_workers: int = 1
     mode: str = "non_serialized"     # non_serialized | serialized
@@ -45,6 +47,12 @@ class BenchConfig:
     seed: int = 0
     dtype: str = "uint8"
     network: Optional[str] = None    # key into core.netmodel.NETWORKS
+    # rpc fabric transport: collective | loopback | simulated
+    # (fully_connected only; the three paper benchmarks are collective)
+    transport: str = "collective"
+    # explicit payload override (e.g. --arch): a core.payload.PayloadSpec;
+    # when set, the S/M/L generator fields above are ignored
+    payload_spec: Optional[object] = None
 
 
 # §4.5 experiment: 2 parameter servers, 3 workers

@@ -1,10 +1,24 @@
 """repro.core — the paper's contribution: the TF-gRPC-Bench
-micro-benchmark suite, adapted to TPU/JAX (see DESIGN.md)."""
-from repro.core.bench import (BenchStats, p2p_bandwidth, p2p_latency,
-                              ps_throughput, run)
+micro-benchmark suite, adapted to TPU/JAX (see DESIGN.md).
+
+The bench drivers are lazy (PEP 562): payload/netmodel are pure
+numpy, and importing them (e.g. from repro.rpc's simulated transport)
+must not drag in jax.
+"""
 from repro.core.netmodel import NETWORKS, NetworkModel, paper_ratio_report
 from repro.core.payload import PayloadSpec, from_arch, generate_spec
 
-__all__ = ["BenchStats", "p2p_bandwidth", "p2p_latency", "ps_throughput",
-           "run", "NETWORKS", "NetworkModel", "paper_ratio_report",
-           "PayloadSpec", "from_arch", "generate_spec"]
+__all__ = ["BenchStats", "fully_connected", "p2p_bandwidth",
+           "p2p_latency", "ps_throughput", "run", "NETWORKS",
+           "NetworkModel", "paper_ratio_report", "PayloadSpec",
+           "from_arch", "generate_spec"]
+
+_BENCH_EXPORTS = {"BenchStats", "fully_connected", "p2p_bandwidth",
+                  "p2p_latency", "ps_throughput", "run"}
+
+
+def __getattr__(name):
+    if name in _BENCH_EXPORTS:
+        from repro.core import bench
+        return getattr(bench, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -1,10 +1,13 @@
-"""The three TF-gRPC-Bench micro-benchmarks (paper §3.2), as drivers over
-repro.core.channels, with the paper's warmup/duration protocol and the
-netmodel projection alongside the measured host numbers.
+"""The TF-gRPC-Bench micro-benchmarks (paper §3.2) plus the rpc-fabric
+fully-connected family, as drivers over repro.core.channels and
+repro.rpc, with the paper's warmup/duration protocol and the netmodel
+projection alongside the measured host numbers.
 
   TF-gRPC-P2P-Latency    -> p2p_latency()
   TF-gRPC-P2P-Bandwidth  -> p2p_bandwidth()
   TF-gRPC-PS-Throughput  -> ps_throughput()
+  fully_connected        -> fully_connected()   (rpc fabric; transport =
+                            collective | loopback | simulated)
 """
 from __future__ import annotations
 
@@ -74,6 +77,9 @@ def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
         elif name == "p2p_bandwidth":
             st.model_projection[net_name] = net.bandwidth(
                 spec, serialized=serialized)
+        elif name == "fully_connected":
+            st.model_projection[net_name] = net.fc_throughput(
+                spec, cfg.num_workers, serialized=serialized)
         else:
             st.model_projection[net_name] = net.ps_throughput(
                 spec, cfg.num_ps, cfg.num_workers, serialized=serialized)
@@ -125,7 +131,75 @@ def ps_throughput(cfg: BenchConfig) -> BenchStats:
                   {"rpcs_per_s": rpcs / float(np.mean(times))}, mon.report)
 
 
+def _make_fc_fabric(cfg: BenchConfig, spec: PayloadSpec):
+    """Build the rpc fabric + per-iteration exchange closure for the
+    fully_connected benchmark under cfg.transport."""
+    from repro import rpc as rpclib
+    from repro.core.netmodel import NETWORKS
+    from repro.core.payload import materialize
+
+    n = cfg.num_workers
+    serialized = cfg.mode == "serialized"
+    bufs = None
+    if cfg.transport == "collective":
+        mesh = ch.make_net_mesh()
+        if mesh.shape[ch.AXIS] < n:
+            raise RuntimeError(
+                f"fully_connected/collective needs >= {n} devices, have "
+                f"{mesh.shape[ch.AXIS]}; run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
+        transport = rpclib.CollectiveTransport(
+            mesh, spec, serialized=serialized, n_endpoints=n,
+            seed=cfg.seed)
+    elif cfg.transport == "loopback":
+        transport = rpclib.LoopbackTransport(n)
+        bufs = materialize(spec, seed=cfg.seed)
+    elif cfg.transport == "simulated":
+        net_name = cfg.network or "eth40g"
+        if net_name not in NETWORKS:
+            raise ValueError(f"unknown --network {net_name!r}; choose "
+                             f"from {sorted(NETWORKS)}")
+        transport = rpclib.SimulatedTransport(n, NETWORKS[net_name])
+    else:
+        raise ValueError(f"unknown transport {cfg.transport!r}")
+    fabric = rpclib.RpcFabric(transport)
+
+    def exchange() -> "rpclib.FlightReport":
+        return rpclib.fully_connected_exchange(fabric, list(spec.sizes),
+                                               bufs=bufs,
+                                               serialized=serialized)
+
+    return fabric, exchange
+
+
+def fully_connected(cfg: BenchConfig) -> BenchStats:
+    """Every worker exchanges the payload with every other worker
+    through the rpc fabric (paper §2's process architecture, the
+    pattern the original three benchmarks never covered)."""
+    if cfg.num_workers < 2:
+        raise RuntimeError("fully_connected needs --num-workers >= 2")
+    spec = generate_spec(cfg)
+    fabric, exchange = _make_fc_fabric(cfg, spec)
+    rpcs = ch.fc_rpcs_per_round(cfg.num_workers)
+    with ResourceMonitor() as mon:
+        if fabric.transport.modeled:
+            # analytic transport: one exchange is exact; no warmup loop
+            times = [exchange().elapsed_s for _ in range(3)]
+        else:
+            exchange()                                   # compile/touch
+            t_end = time.perf_counter() + cfg.warmup_s
+            while time.perf_counter() < t_end:
+                exchange()
+            times, t_stop = [], time.perf_counter() + cfg.duration_s
+            while time.perf_counter() < t_stop or len(times) < 5:
+                times.append(exchange().elapsed_s)
+    return _stats("fully_connected", cfg, spec, times,
+                  {"rpcs_per_s": rpcs / float(np.mean(times)),
+                   "rpcs_per_round": float(rpcs)}, mon.report)
+
+
 def run(cfg: BenchConfig) -> BenchStats:
     return {"p2p_latency": p2p_latency,
             "p2p_bandwidth": p2p_bandwidth,
-            "ps_throughput": ps_throughput}[cfg.benchmark](cfg)
+            "ps_throughput": ps_throughput,
+            "fully_connected": fully_connected}[cfg.benchmark](cfg)

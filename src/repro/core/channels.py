@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import serialization as ser
+from repro.core.compat import shard_map_unchecked
 from repro.core.payload import PayloadSpec, materialize
 
 AXIS = "net"
@@ -54,30 +55,41 @@ def device_payload(mesh: Mesh, spec: PayloadSpec, *, seed: int = 0
 # ---------------------------------------------------------------------------
 
 def _shmap(mesh, fn, n_in):
-    return jax.shard_map(fn, mesh=mesh,
-                         in_specs=tuple([P(AXIS)] * n_in),
-                         out_specs=P(AXIS), check_vma=False)
+    return shard_map_unchecked(fn, mesh=mesh,
+                               in_specs=tuple([P(AXIS)] * n_in),
+                               out_specs=P(AXIS))
+
+
+def permute_rounds_fn(mesh: Mesh, n_buffers: int,
+                      rounds: Sequence[Sequence[Tuple[int, int]]],
+                      serialized: bool = False) -> Callable:
+    """Run a sequence of ppermute rounds over one payload: the common
+    lowering every channel (and the rpc collective transport) compiles
+    to. One collective per buffer per round (non-serialized) or
+    pack -> one collective per round -> unpack (serialized)."""
+    rounds = [list(r) for r in rounds]
+
+    def go(*bufs):
+        if serialized:
+            packed, meta = ser.pack(bufs)
+            for perm in rounds:
+                packed = jax.lax.ppermute(packed, AXIS, perm)
+            return tuple(ser.unpack(packed, meta))
+        out = []
+        for b in bufs:
+            for perm in rounds:
+                b = jax.lax.ppermute(b, AXIS, perm)
+            out.append(b)
+        return tuple(out)
+
+    return jax.jit(_shmap(mesh, go, n_buffers))
 
 
 def p2p_echo_fn(mesh: Mesh, n_buffers: int, src: int = 0, dst: int = 1,
                 serialized: bool = False) -> Callable:
-    """Round trip src -> dst -> src. One collective per buffer
-    (non-serialized) or pack -> one collective -> unpack (serialized)."""
-    fwd, bwd = [(src, dst)], [(dst, src)]
-
-    def echo(*bufs):
-        if serialized:
-            packed, meta = ser.pack(bufs)
-            packed = jax.lax.ppermute(packed, AXIS, fwd)
-            packed = jax.lax.ppermute(packed, AXIS, bwd)
-            return tuple(ser.unpack(packed, meta))
-        out = []
-        for b in bufs:
-            b = jax.lax.ppermute(b, AXIS, fwd)
-            out.append(jax.lax.ppermute(b, AXIS, bwd))
-        return tuple(out)
-
-    return jax.jit(_shmap(mesh, echo, n_buffers))
+    """Round trip src -> dst -> src."""
+    return permute_rounds_fn(mesh, n_buffers, [[(src, dst)], [(dst, src)]],
+                             serialized=serialized)
 
 
 def p2p_send_fn(mesh: Mesh, n_buffers: int, src: int = 0, dst: int = 1,
@@ -135,29 +147,42 @@ def ps_round_fn(mesh: Mesh, n_buffers: int, n_ps: int, n_workers: int,
     ps_ids = list(range(n_ps))
     w_ids = list(range(n_ps, n_ps + n_workers))
     assert n_ps + n_workers <= mesh.shape[AXIS]
-    pull_rounds = bipartite_schedule(ps_ids, w_ids)
-    push_rounds = bipartite_schedule(w_ids, ps_ids)
-
-    def one_payload(b):
-        for perm in pull_rounds:
-            b = jax.lax.ppermute(b, AXIS, perm)
-        for perm in push_rounds:
-            b = jax.lax.ppermute(b, AXIS, perm)
-        return b
-
-    def ps_round(*bufs):
-        if serialized:
-            packed, meta = ser.pack(bufs)
-            packed = one_payload(packed)
-            return tuple(ser.unpack(packed, meta))
-        return tuple(one_payload(b) for b in bufs)
-
-    return jax.jit(_shmap(mesh, ps_round, n_buffers))
+    rounds = bipartite_schedule(ps_ids, w_ids) \
+        + bipartite_schedule(w_ids, ps_ids)
+    return permute_rounds_fn(mesh, n_buffers, rounds,
+                             serialized=serialized)
 
 
 def rpcs_per_round(n_ps: int, n_workers: int) -> int:
     """The paper counts one RPC per worker x PS interaction per round."""
     return n_ps * n_workers
+
+
+# ---------------------------------------------------------------------------
+# Fully-connected exchange (paper §2 process architecture: every worker
+# talks to every other worker)
+# ---------------------------------------------------------------------------
+
+def all_to_all_schedule(n: int) -> List[List[Tuple[int, int]]]:
+    """Round-robin schedule of the complete digraph K_n: n-1 rounds of
+    shift-by-r permutations, each with unique sources and destinations,
+    covering every ordered (src, dst) pair with src != dst exactly
+    once."""
+    assert n >= 2, n
+    return [[(i, (i + r) % n) for i in range(n)] for r in range(1, n)]
+
+
+def fully_connected_fn(mesh: Mesh, n_buffers: int, n_workers: int,
+                       serialized: bool = False) -> Callable:
+    """One full exchange: every endpoint sends the payload to every
+    other endpoint (n_workers * (n_workers - 1) RPCs)."""
+    return permute_rounds_fn(mesh, n_buffers,
+                             all_to_all_schedule(n_workers),
+                             serialized=serialized)
+
+
+def fc_rpcs_per_round(n_workers: int) -> int:
+    return n_workers * (n_workers - 1)
 
 
 # ---------------------------------------------------------------------------

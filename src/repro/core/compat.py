@@ -1,0 +1,25 @@
+"""jax version compatibility shims.
+
+The container pins jax 0.4.x, where ``shard_map`` lives in
+``jax.experimental.shard_map`` and the replication-check kwarg is
+``check_rep``; on jax >= 0.6 it is ``jax.shard_map`` with ``check_vma``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def shard_map_unchecked(fn=None, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions.
+    With ``fn`` omitted, returns a decorator."""
+    if hasattr(jax, "shard_map"):
+        sm = functools.partial(jax.shard_map, mesh=mesh,
+                               in_specs=in_specs, out_specs=out_specs,
+                               check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map
+        sm = functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+    return sm if fn is None else sm(fn)

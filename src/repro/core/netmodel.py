@@ -94,6 +94,26 @@ class NetworkModel:
         return rpcs / self.ps_round_time(spec, n_ps, n_workers,
                                          serialized=serialized)
 
+    def fc_round_time(self, spec: PayloadSpec, n_workers: int, *,
+                      serialized: bool = False) -> float:
+        """One fully-connected exchange: every endpoint sends the
+        payload to every other (n*(n-1) RPCs). Receiver-bound like the
+        PS round: each endpoint ingests n-1 RPCs serially on its
+        NIC/stack, with the same quadratic host-copy contention term
+        (zero for RDMA). Matches rpc.SimulatedTransport pricing."""
+        per_rpc = (self.payload_time(spec, serialized=serialized)
+                   + self.msg_time(64))
+        contention = ((n_workers - 1) * (n_workers - 2)
+                      * spec.total_bytes / self.cpu_copy_Bps)
+        return per_rpc * (n_workers - 1) + contention
+
+    def fc_throughput(self, spec: PayloadSpec, n_workers: int, *,
+                      serialized: bool = False) -> float:
+        """Aggregate RPCs/s of the fully-connected exchange."""
+        rpcs = n_workers * (n_workers - 1)
+        return rpcs / self.fc_round_time(spec, n_workers,
+                                         serialized=serialized)
+
 
 # fitted constants (benchmarks/calibrate.py; cluster A max err 2.7%,
 # cluster B max err 0.8% across the paper's claims)

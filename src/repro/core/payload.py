@@ -65,7 +65,11 @@ def _check_ranges(cfg: T.BenchConfig) -> None:
 
 
 def generate_spec(cfg: T.BenchConfig) -> PayloadSpec:
-    """Build the buffer-size list for one payload under cfg.scheme."""
+    """Build the buffer-size list for one payload under cfg.scheme, or
+    return the explicit override (cfg.payload_spec, e.g. --arch)."""
+    if cfg.payload_spec is not None:
+        assert isinstance(cfg.payload_spec, PayloadSpec), cfg.payload_spec
+        return cfg.payload_spec
     _check_ranges(cfg)
     cats = tuple(c for c in CATEGORIES if c in cfg.categories)
     assert cats, "need at least one buffer category"

@@ -1,4 +1,5 @@
 from repro.kernels.payload_pack.ops import pack, unpack
+from repro.kernels.payload_pack.payload_pack import LANE
 from repro.kernels.payload_pack.ref import pack_ref, unpack_ref
 
-__all__ = ["pack", "unpack", "pack_ref", "unpack_ref"]
+__all__ = ["LANE", "pack", "unpack", "pack_ref", "unpack_ref"]

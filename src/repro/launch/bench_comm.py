@@ -5,15 +5,25 @@ if "--xla_force_host_platform_device_count" not in \
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                                " --xla_force_host_platform_device_count=8")
 
-"""TF-gRPC-Bench CLI — the paper's Table 2, as flags.
+"""TF-gRPC-Bench CLI — the paper's Table 2, as flags, plus the
+rpc-fabric fully_connected family.
 
   PYTHONPATH=src python -m repro.launch.bench_comm \
       --benchmark ps_throughput --num-ps 2 --num-workers 3 \
       --scheme skew --iovec-count 10 --mode non_serialized \
       --warmup 2 --duration 10 [--network rdma_edr] [--arch qwen3-8b]
 
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --benchmark fully_connected --num-workers 4 --transport collective
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --benchmark fully_connected --num-workers 64 --transport simulated
+
 --arch derives the payload from that architecture's parameter histogram
-instead of the S/M/L generator (core.payload.from_arch).
+instead of the S/M/L generator (core.payload.from_arch) and benchmarks
+THAT payload. --transport picks the rpc-fabric datapath for
+fully_connected: collective (measured ppermute), loopback (measured
+shared-buffer memcpy), simulated (netmodel projection; endpoint counts
+far beyond the host device count).
 """
 import argparse
 
@@ -23,9 +33,11 @@ def main() -> None:
         description="TF-gRPC-Bench micro-benchmark suite (paper Table 2)")
     ap.add_argument("--benchmark", default="p2p_latency",
                     choices=["p2p_latency", "p2p_bandwidth",
-                             "ps_throughput"])
+                             "ps_throughput", "fully_connected"])
     ap.add_argument("--num-ps", type=int, default=1)
     ap.add_argument("--num-workers", type=int, default=1)
+    ap.add_argument("--transport", default="collective",
+                    choices=["collective", "loopback", "simulated"])
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
     ap.add_argument("--scheme", default="uniform",
@@ -49,6 +61,15 @@ def main() -> None:
     from repro.configs.tfgrpc_bench import BenchConfig
     from repro.core import bench
 
+    payload_spec = None
+    if args.arch:
+        from repro.configs import get_config
+        from repro.core.payload import from_arch
+        payload_spec = from_arch(get_config(args.arch), seed=args.seed)
+        print(f"payload from {args.arch}: {payload_spec.n_buffers} "
+              f"buffers, {payload_spec.total_bytes/1e6:.2f} MB "
+              f"({', '.join(payload_spec.categories)})")
+
     cfg = BenchConfig(
         benchmark=args.benchmark, num_ps=args.num_ps,
         num_workers=args.num_workers, mode=args.mode, scheme=args.scheme,
@@ -57,23 +78,24 @@ def main() -> None:
         large_bytes=args.large_bytes,
         categories=tuple(args.categories.split(",")),
         warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
-        network=args.network)
-
-    if args.arch:
-        from repro.configs import get_config
-        from repro.core.payload import from_arch
-        spec = from_arch(get_config(args.arch))
-        print(f"payload from {args.arch}: {spec.n_buffers} buffers, "
-              f"{spec.total_bytes/1e6:.2f} MB "
-              f"({', '.join(spec.categories)})")
+        network=args.network, transport=args.transport,
+        payload_spec=payload_spec)
 
     st = bench.run(cfg)
-    print(f"benchmark      : {st.name} [{cfg.scheme}"
-          f"{'/' + cfg.skew_bias if cfg.scheme == 'skew' else ''}, "
-          f"{cfg.mode}]")
+    scheme = st.spec.scheme
+    tail = "/" + cfg.skew_bias if scheme == "skew" else ""
+    extra = f", {cfg.transport}" if cfg.benchmark == "fully_connected" \
+        else ""
+    print(f"benchmark      : {st.name} [{scheme}{tail}, {cfg.mode}"
+          f"{extra}]")
     print(f"payload        : {st.spec.n_buffers} iovecs, "
           f"{st.spec.total_bytes/1e6:.3f} MB")
-    print(f"host measured  : mean {st.mean_s*1e6:.1f} us  "
+    projected = (cfg.benchmark == "fully_connected"
+                 and cfg.transport == "simulated")
+    label = "net projected " if projected else "host measured "
+    if projected:
+        print(f"sim network    : {cfg.network or 'eth40g'}")
+    print(f"{label} : mean {st.mean_s*1e6:.1f} us  "
           f"p50 {st.p50_s*1e6:.1f}  p95 {st.p95_s*1e6:.1f}  "
           f"({st.n_iters} iters)")
     for k, v in st.derived.items():
@@ -85,7 +107,8 @@ def main() -> None:
             sorted(st.model_projection))
     for n in nets:
         unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s",
-                "ps_throughput": "RPC/s"}[st.name]
+                "ps_throughput": "RPC/s",
+                "fully_connected": "RPC/s"}[st.name]
         print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
 
 

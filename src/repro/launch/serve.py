@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
       [--batch 4] [--prompt-len 16] [--new-tokens 8]
+
+Requests travel through the rpc fabric (loopback transport, serialized
+framing) by default, so serving traffic exercises the same RPC runtime
+the communication benchmarks measure; --no-rpc calls the engine
+directly.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--no-rpc", action="store_true",
+                    help="bypass the rpc fabric, call the engine directly")
     args = ap.parse_args()
 
     acfg = (get_reduced_config(args.arch) if args.reduced
@@ -37,17 +44,26 @@ def main() -> None:
         max_seq=args.prompt_len + args.new_tokens + 8,
         max_new_tokens=args.new_tokens, temperature=args.temperature))
 
+    channel = None
+    if not args.no_rpc:
+        from repro.serve.engine import rpc_generate
+        _, channel = engine.serve_loopback()
+
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompts = rng.integers(0, acfg.model.vocab_size,
                                (args.batch, args.prompt_len),
                                dtype=np.int32)
         t0 = time.perf_counter()
-        out = engine.generate(prompts)
+        if channel is not None:
+            out = rpc_generate(channel, prompts)
+        else:
+            out = engine.generate(prompts)
         dt = time.perf_counter() - t0
         tps = out.size / dt
-        print(f"request {i}: batch={args.batch} new={out.shape[1]} "
-              f"{dt*1e3:.1f} ms ({tps:.1f} tok/s) "
+        via = "direct" if channel is None else "rpc"
+        print(f"request {i} [{via}]: batch={args.batch} "
+              f"new={out.shape[1]} {dt*1e3:.1f} ms ({tps:.1f} tok/s) "
               f"sample={out[0][:8].tolist()}")
 
 

@@ -1,0 +1,43 @@
+"""repro.rpc — in-process RPC fabric (gRPC analogue).
+
+Layers, bottom-up:
+
+  framing     wire format; serialized mode coalesces iovecs through the
+              payload_pack Pallas kernel
+  flow        credit-based flow control (per-channel windows)
+  completion  completion-queue event loop primitive
+  transport   pluggable Transports: loopback (shared-buffer memcpy),
+              simulated (netmodel-priced, hundreds of endpoints)
+  collective  transport lowering flights onto core.channels ppermute
+              schedules (measured on real devices)
+  fabric      Channel/Server API, unary + streaming calls, flush loop
+
+See docs/RPC.md for the architecture and transport matrix.
+"""
+from repro.rpc.completion import CompletionQueue, Event
+from repro.rpc.fabric import (Call, Channel, FlightReport, RpcError,
+                              RpcFabric, Server, fully_connected_exchange)
+from repro.rpc.flow import CreditWindow, FlowStats
+from repro.rpc.framing import (FLAG_ERROR, FLAG_ONE_WAY, FLAG_REPLY,
+                               FLAG_SERIALIZED, FLAG_STREAM,
+                               FLAG_STREAM_END, Frame, decode, encode,
+                               make_frame, method_id)
+from repro.rpc.transport import (Delivery, LoopbackTransport, Message,
+                                 SimulatedTransport, Transport,
+                                 schedule_rounds, spec_of)
+
+__all__ = [
+    "Call", "Channel", "CompletionQueue", "CreditWindow", "Delivery",
+    "Event", "FlightReport", "FlowStats", "Frame", "LoopbackTransport",
+    "Message", "RpcError", "RpcFabric", "Server", "SimulatedTransport",
+    "Transport", "decode", "encode", "fully_connected_exchange",
+    "make_frame", "method_id", "schedule_rounds", "spec_of",
+    "FLAG_ERROR", "FLAG_ONE_WAY", "FLAG_REPLY", "FLAG_SERIALIZED",
+    "FLAG_STREAM", "FLAG_STREAM_END",
+]
+
+
+def CollectiveTransport(*args, **kwargs):
+    """Lazy import: the collective transport pulls in jax/channels."""
+    from repro.rpc.collective import CollectiveTransport as _CT
+    return _CT(*args, **kwargs)

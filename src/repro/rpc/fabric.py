@@ -1,0 +1,374 @@
+"""The RPC fabric: Channel/Server API over a pluggable Transport.
+
+Client side                         Server side
+-----------                         -----------
+fabric.channel(src, dst)            fabric.add_server(endpoint)
+  .call(method, bufs)    ->flight->   server.register(method, handler)
+  .stream(method, [bufs...])          handler(bufs) -> reply bufs
+
+Calls are buffered and moved in *flights* by ``flush()`` — the event
+loop. One flush: admit calls the credit window allows, deliver them
+through the transport (edge-colored into rounds), dispatch delivered
+frames to endpoint servers, send replies back (a second flight), grant
+credits, resolve futures, and push an :class:`completion.Event` per
+completion. ``flush`` loops until the backlog drains, so a burst larger
+than the flow-control window simply takes several flights — the stall
+count in ``Channel.window.stats`` records the back-pressure.
+
+Transports with ``dispatches=False`` (the collective transport) are pure
+exchange datapaths: delivery itself completes the call and the reply
+flight is skipped (the 64B ack is priced inside the transport).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.rpc import framing
+from repro.rpc.completion import CompletionQueue, Event
+from repro.rpc.flow import CreditWindow
+from repro.rpc.transport import Message, Transport
+
+
+class RpcError(Exception):
+    pass
+
+
+def _spec_only(frame: Optional[framing.Frame]) -> Optional[framing.Frame]:
+    """Events carry frame *metadata* only — retaining payload buffers in
+    an undrained completion queue would pin gigabytes in benchmark
+    loops. Callers get the data from their Call future."""
+    if frame is None or frame.bufs is None:
+        return frame
+    return replace(frame, bufs=None)
+
+
+@dataclass
+class Call:
+    """Client-side future for one RPC."""
+    call_id: int
+    method: str
+    dst: int
+    done: bool = False
+    result: Optional[framing.Frame] = None
+    error: Optional[str] = None
+
+    def reply_bufs(self) -> List[np.ndarray]:
+        assert self.done, "call not complete — fabric.flush() first"
+        if self.error is not None:
+            raise RpcError(self.error)
+        assert self.result is not None and self.result.bufs is not None
+        return self.result.bufs
+
+
+Handler = Callable[[List[np.ndarray]], Optional[List[np.ndarray]]]
+
+
+class Server:
+    """Per-endpoint method table. Streaming methods receive the
+    concatenated buffer lists of every frame in the stream."""
+
+    def __init__(self, endpoint: int):
+        self.endpoint = endpoint
+        self._methods: Dict[int, Tuple[str, Handler, bool]] = {}
+        self._streams: Dict[int, List[List[np.ndarray]]] = {}
+        self.calls_served = 0
+
+    def register(self, name: str, handler: Handler, *,
+                 streaming: bool = False) -> None:
+        self._methods[framing.method_id(name)] = (name, handler, streaming)
+
+    def dispatch(self, frame: framing.Frame) -> Optional[framing.Frame]:
+        """Handle one delivered frame; return the reply frame (None for
+        one-way calls and non-final stream chunks)."""
+        entry = self._methods.get(frame.method)
+        if entry is None:
+            return frame.reply(
+                [np.frombuffer(b"unimplemented", dtype=np.uint8).copy()],
+                error=True)
+        name, handler, streaming = entry
+        is_stream = bool(frame.flags & framing.FLAG_STREAM)
+        if is_stream != streaming:
+            want = "streaming" if streaming else "unary"
+            got = "streaming" if is_stream else "unary"
+            msg = f"{name}: cardinality mismatch ({got} call to {want} " \
+                  f"method)".encode()
+            self._streams.pop(frame.call_id, None)
+            return frame.reply(
+                [np.frombuffer(msg, dtype=np.uint8).copy()], error=True)
+        if is_stream:
+            chunks = self._streams.setdefault(frame.call_id, [])
+            chunks.append(frame.bufs or [])
+            if not frame.flags & framing.FLAG_STREAM_END:
+                return None
+            del self._streams[frame.call_id]
+            request = [b for bufs in chunks for b in bufs]
+        else:
+            request = frame.bufs or []
+        try:
+            reply = handler(request)
+        except Exception as e:  # noqa: BLE001 — handler fault -> RPC error
+            msg = f"{name}: {e}".encode()
+            return frame.reply(
+                [np.frombuffer(msg, dtype=np.uint8).copy()], error=True)
+        self.calls_served += 1
+        if frame.one_way:
+            return None
+        if reply is None:
+            reply = [np.zeros(1, dtype=np.uint8)]
+        return frame.reply([np.ascontiguousarray(r, dtype=np.uint8)
+                            .reshape(-1) for r in reply])
+
+
+class Channel:
+    """A (src -> dst) flow with its own credit window."""
+
+    def __init__(self, fabric: "RpcFabric", src: int, dst: int, *,
+                 serialized: bool = False,
+                 window: Optional[CreditWindow] = None):
+        self.fabric = fabric
+        self.src, self.dst = src, dst
+        self.serialized = serialized
+        self.window = window or CreditWindow()
+        self.backlogged = 0      # messages queued behind the window
+
+    def call(self, method: str, bufs: Optional[List[np.ndarray]], *,
+             sizes: Optional[Sequence[int]] = None,
+             one_way: bool = False) -> Call:
+        frame = framing.make_frame(
+            self.fabric.next_call_id(), method, bufs, sizes=sizes,
+            serialized=self.serialized, one_way=one_way)
+        return self.fabric.submit(self, frame, method)
+
+    def stream(self, method: str,
+               chunks: Sequence[List[np.ndarray]]) -> Call:
+        """Client-streaming call: N data frames, one reply after END."""
+        assert len(chunks) >= 1
+        cid = self.fabric.next_call_id()
+        last = len(chunks) - 1
+        call: Optional[Call] = None
+        for i, bufs in enumerate(chunks):
+            frame = framing.make_frame(
+                cid, method, bufs, serialized=self.serialized,
+                stream=True, stream_end=(i == last))
+            c = self.fabric.submit(self, frame, method)
+            call = c if i == last else call
+        assert call is not None
+        return call
+
+
+@dataclass
+class FlightReport:
+    elapsed_s: float = 0.0      # transport time (measured or modeled)
+    wall_s: float = 0.0         # host wall clock of the whole flush
+    flights: int = 0
+    rounds: int = 0
+    messages: int = 0
+    replies: int = 0
+    modeled: bool = False
+
+
+class RpcFabric:
+    def __init__(self, transport: Transport, *,
+                 window_bytes: int = 4 * 1024 * 1024,
+                 window_msgs: int = 32):
+        self.transport = transport
+        self.window_bytes = window_bytes
+        self.window_msgs = window_msgs
+        self.cq = CompletionQueue()
+        self.servers: Dict[int, Server] = {}
+        self._calls: Dict[int, Call] = {}
+        self._channels: Dict[Tuple[int, int, bool], Channel] = {}
+        self._pending: List[Tuple[Channel, Message]] = []
+        self._backlog: List[Tuple[Channel, Message]] = []
+        # request messages whose credits are granted when their reply
+        # lands; a list because stream chunks share one call_id and can
+        # each draw a (error) reply
+        self._awaiting_grant: Dict[int, List[Message]] = {}
+        self._next_id = 1
+
+    # ------------------------------------------------------------------
+    @property
+    def n_endpoints(self) -> int:
+        return self.transport.n_endpoints
+
+    def next_call_id(self) -> int:
+        cid = self._next_id
+        self._next_id += 1
+        return cid
+
+    def channel(self, src: int, dst: int, *,
+                serialized: bool = False) -> Channel:
+        key = (src, dst, serialized)
+        if key not in self._channels:
+            self._channels[key] = Channel(
+                self, src, dst, serialized=serialized,
+                window=CreditWindow(self.window_bytes, self.window_msgs))
+        return self._channels[key]
+
+    def add_server(self, endpoint: int) -> Server:
+        assert endpoint not in self.servers, endpoint
+        srv = Server(endpoint)
+        self.servers[endpoint] = srv
+        return srv
+
+    # ------------------------------------------------------------------
+    def submit(self, channel: Channel, frame: framing.Frame,
+               method: str) -> Call:
+        call = Call(frame.call_id, method, channel.dst)
+        self._calls[frame.call_id] = call
+        msg = Message(channel.src, channel.dst, frame)
+        # FIFO per channel: once anything is backlogged, later messages
+        # queue behind it even if they would fit — a stream's END chunk
+        # must never overtake a stalled middle chunk
+        if channel.backlogged == 0 \
+                and channel.window.try_acquire(frame.total_bytes):
+            self._pending.append((channel, msg))
+        else:
+            if channel.backlogged == 0:
+                pass        # try_acquire already counted the stall
+            else:
+                channel.window.stats.stalled += 1
+            channel.backlogged += 1
+            self._backlog.append((channel, msg))
+        return call
+
+    def _complete(self, call: Call, frame: Optional[framing.Frame],
+                  kind: str, error: Optional[str] = None) -> None:
+        call.done, call.result, call.error = True, frame, error
+        self.cq.push(Event(call.call_id, kind, ok=error is None,
+                           payload=_spec_only(frame)))
+        # the caller holds the Call object; the fabric is done with it
+        self._calls.pop(call.call_id, None)
+
+    def _grant(self, msg: Message) -> None:
+        ch = self._channels.get((msg.src, msg.dst, msg.frame.serialized))
+        if ch is not None:
+            ch.window.grant(msg.frame.total_bytes)
+
+    def flush(self) -> FlightReport:
+        """Drive the event loop until every submitted call completes."""
+        rep = FlightReport(modeled=self.transport.modeled)
+        t0 = time.perf_counter()
+        while self._pending or self._backlog:
+            if not self._pending:
+                # admit backlog as credits allow; at least one must fit
+                # or the window is simply too small for the message
+                admitted = self._admit_backlog(force_one=True)
+                assert admitted, "flow-control deadlock"
+            flight = self._pending
+            self._pending = []
+            delivery = self.transport.deliver([m for _, m in flight])
+            rep.flights += 1
+            rep.rounds += delivery.rounds
+            rep.messages += len(delivery.messages)
+            rep.elapsed_s += delivery.elapsed_s
+            replies: List[Message] = []
+            for m in delivery.messages:
+                call = self._calls.get(m.frame.call_id)
+                if not self.transport.dispatches:
+                    # exchange datapath: delivery IS completion
+                    self._grant(m)
+                    if call is not None and not call.done:
+                        self._complete(call, m.frame, "sent")
+                    continue
+                srv = self.servers.get(m.dst)
+                if srv is None:
+                    self._grant(m)
+                    if call is not None and not call.done:
+                        self._complete(call, None, "error",
+                                       error=f"no server at endpoint "
+                                             f"{m.dst}")
+                    continue
+                reply = srv.dispatch(m.frame)
+                self.cq.push(Event(m.frame.call_id, "received",
+                                   payload=_spec_only(m.frame)))
+                if reply is None:
+                    self._grant(m)
+                    if call is not None and m.frame.one_way \
+                            and not call.done:
+                        self._complete(call, None, "sent")
+                    continue
+                self._awaiting_grant.setdefault(m.frame.call_id,
+                                                []).append(m)
+                replies.append(Message(m.dst, m.src, reply))
+            if replies:
+                rdel = self.transport.deliver(replies)
+                rep.flights += 1
+                rep.rounds += rdel.rounds
+                rep.replies += len(rdel.messages)
+                rep.elapsed_s += rdel.elapsed_s
+                for m in rdel.messages:
+                    # grant the REQUEST's credits (reply size differs)
+                    reqs = self._awaiting_grant.get(m.frame.call_id)
+                    if reqs:
+                        self._grant(reqs.pop(0))
+                        if not reqs:
+                            del self._awaiting_grant[m.frame.call_id]
+                    call = self._calls.get(m.frame.call_id)
+                    if call is None or call.done:
+                        continue
+                    if m.frame.flags & framing.FLAG_ERROR:
+                        err = bytes(m.frame.bufs[0]).decode(
+                            errors="replace") if m.frame.bufs else "error"
+                        self._complete(call, m.frame, "error", error=err)
+                    else:
+                        self._complete(call, m.frame, "replied")
+            self._admit_backlog()
+        rep.wall_s = time.perf_counter() - t0
+        return rep
+
+    def _admit_backlog(self, force_one: bool = False) -> int:
+        admitted, rest = 0, []
+        blocked: set = set()
+        for ch_, msg in self._backlog:
+            # head-of-line per channel: once one of a channel's messages
+            # stays blocked, its later ones stay queued too (ordering)
+            if id(ch_) in blocked:
+                rest.append((ch_, msg))
+                continue
+            # can_acquire first: a retry is not a new stall, so the
+            # stall count stays one-per-call (recorded at submit time)
+            if ch_.window.can_acquire(msg.frame.total_bytes):
+                ch_.window.try_acquire(msg.frame.total_bytes)
+                self._pending.append((ch_, msg))
+                ch_.backlogged -= 1
+                admitted += 1
+            elif force_one and admitted == 0:
+                self._pending.append((ch_, msg))
+                ch_.backlogged -= 1
+                admitted += 1
+            else:
+                blocked.add(id(ch_))
+                rest.append((ch_, msg))
+        self._backlog = rest
+        return admitted
+
+
+# ---------------------------------------------------------------------------
+# benchmark driver: the fully-connected exchange (paper §2's
+# every-worker-to-every-worker process architecture)
+# ---------------------------------------------------------------------------
+
+def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
+                             bufs: Optional[List[np.ndarray]] = None,
+                             serialized: bool = False) -> FlightReport:
+    """Every endpoint sends one payload to every other endpoint
+    (n * (n-1) one-way RPCs), generated in the shift order of
+    ``channels.all_to_all_schedule`` so the transport's edge coloring
+    recovers exactly n-1 rounds."""
+    n = fabric.n_endpoints
+    assert n >= 2, n
+    if fabric.transport.dispatches:
+        for e in range(n):
+            if e not in fabric.servers:
+                fabric.add_server(e).register("exchange", lambda req: None)
+    for r in range(1, n):
+        for i in range(n):
+            fabric.channel(i, (i + r) % n, serialized=serialized).call(
+                "exchange", bufs,
+                sizes=sizes if bufs is None else None, one_way=True)
+    return fabric.flush()

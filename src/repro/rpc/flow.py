@@ -1,0 +1,58 @@
+"""Credit-based flow control (the HTTP/2 / gRPC window analogue).
+
+Each channel holds a :class:`CreditWindow`. Issuing a call consumes
+byte + message credits; completions (replies, or transport delivery for
+one-way calls) grant them back. When credits run dry the fabric queues
+the call locally instead of submitting it — the stall is counted, which
+is exactly the back-pressure signal the paper's flow-control discussion
+(§2.2) says a benchmark suite should expose.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class FlowStats:
+    acquired: int = 0           # calls admitted
+    stalled: int = 0            # calls that had to wait for credits
+    bytes_in_flight_peak: int = 0
+
+
+class CreditWindow:
+    def __init__(self, window_bytes: int = 4 * 1024 * 1024,
+                 window_msgs: int = 32):
+        assert window_bytes > 0 and window_msgs > 0
+        self.window_bytes = window_bytes
+        self.window_msgs = window_msgs
+        self.bytes_avail = window_bytes
+        self.msgs_avail = window_msgs
+        self.stats = FlowStats()
+
+    @property
+    def bytes_in_flight(self) -> int:
+        return self.window_bytes - self.bytes_avail
+
+    def can_acquire(self, nbytes: int) -> bool:
+        # an over-window message is admitted alone (gRPC: a message may
+        # exceed the window; it just occupies the whole window)
+        fits = (self.bytes_avail >= min(nbytes, self.window_bytes)
+                and self.msgs_avail >= 1)
+        return fits
+
+    def try_acquire(self, nbytes: int) -> bool:
+        if not self.can_acquire(nbytes):
+            self.stats.stalled += 1
+            return False
+        self.bytes_avail -= min(nbytes, self.window_bytes)
+        self.msgs_avail -= 1
+        self.stats.acquired += 1
+        self.stats.bytes_in_flight_peak = max(
+            self.stats.bytes_in_flight_peak, self.bytes_in_flight)
+        return True
+
+    def grant(self, nbytes: int) -> None:
+        self.bytes_avail = min(self.window_bytes,
+                               self.bytes_avail + min(nbytes,
+                                                      self.window_bytes))
+        self.msgs_avail = min(self.window_msgs, self.msgs_avail + 1)

@@ -1,0 +1,211 @@
+"""Message framing for the in-process RPC fabric (gRPC wire analogue).
+
+A call is one :class:`Frame`: a fixed-layout little-endian header plus a
+list of iovec payload buffers (uint8). Two wire encodings mirror the
+paper's payload modes:
+
+  serialized     — header + every buffer coalesced into ONE contiguous
+                   uint8 wire buffer via the ``payload_pack`` Pallas
+                   kernel (``backend="kernel"``, the TPU path) or a
+                   byte-identical numpy copy (``backend="numpy"``, the
+                   fast host path). One wire message per call.
+  non_serialized — header buffer + each payload buffer as a separate
+                   wire message (iovec scatter-gather): no copy, N+1
+                   messages per call.
+
+Header layout (uint32 words, little-endian), zero-padded to a multiple
+of the 128-byte TPU lane so it can itself be a pack-kernel buffer:
+
+  [MAGIC, call_id, method_id, flags, n_buffers, size_0 .. size_{n-1}]
+
+Frames may be *spec-only* (``bufs is None``): the sizes are real but no
+bytes are materialized — the simulated transport prices such frames
+analytically without ever allocating hundreds of endpoints' payloads.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# TPU lane width in bytes. Must equal repro.kernels.payload_pack.LANE
+# (pinned by tests/test_rpc.py) — not imported from there so that
+# importing repro.rpc does not drag in jax/pallas; only the optional
+# backend="kernel" paths do.
+LANE = 128
+
+MAGIC = 0x52504331  # "RPC1"
+
+FLAG_SERIALIZED = 1
+FLAG_STREAM = 2
+FLAG_STREAM_END = 4
+FLAG_REPLY = 8
+FLAG_ERROR = 16
+FLAG_ONE_WAY = 32
+
+_WORD = 4
+
+
+def method_id(name: str) -> int:
+    """Stable 32-bit id for a method name (both ends compute it)."""
+    return zlib.crc32(name.encode("utf-8")) & 0xFFFFFFFF
+
+
+def _pad128(n: int) -> int:
+    return max(LANE, -(-n // LANE) * LANE)
+
+
+@dataclass(frozen=True)
+class Frame:
+    call_id: int
+    method: int                      # method_id(name)
+    flags: int
+    sizes: Tuple[int, ...]           # true (unpadded) iovec byte counts
+    bufs: Optional[List[np.ndarray]] = None   # uint8, len == len(sizes)
+
+    def __post_init__(self):
+        if self.bufs is not None:
+            assert len(self.bufs) == len(self.sizes)
+            for b, s in zip(self.bufs, self.sizes):
+                assert b.dtype == np.uint8 and b.size == s, (b.shape, s)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.sizes))
+
+    @property
+    def n_buffers(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def serialized(self) -> bool:
+        return bool(self.flags & FLAG_SERIALIZED)
+
+    @property
+    def one_way(self) -> bool:
+        return bool(self.flags & FLAG_ONE_WAY)
+
+    def reply(self, bufs: Optional[List[np.ndarray]],
+              sizes: Optional[Sequence[int]] = None, *,
+              error: bool = False) -> "Frame":
+        if sizes is None:
+            assert bufs is not None
+            sizes = [int(b.size) for b in bufs]
+        flags = (self.flags & FLAG_SERIALIZED) | FLAG_REPLY
+        if error:
+            flags |= FLAG_ERROR
+        return Frame(self.call_id, self.method, flags, tuple(sizes),
+                     bufs)
+
+
+def make_frame(call_id: int, method: str, bufs: Optional[List[np.ndarray]],
+               *, sizes: Optional[Sequence[int]] = None,
+               serialized: bool = False, one_way: bool = False,
+               stream: bool = False, stream_end: bool = False) -> Frame:
+    if sizes is None:
+        assert bufs is not None, "spec-only frames need explicit sizes"
+        sizes = [int(b.size) for b in bufs]
+    assert all(s >= 1 for s in sizes), "zero-size iovec buffers unsupported"
+    bufs = ([np.ascontiguousarray(b, dtype=np.uint8).reshape(-1)
+             for b in bufs] if bufs is not None else None)
+    flags = ((FLAG_SERIALIZED if serialized else 0)
+             | (FLAG_ONE_WAY if one_way else 0)
+             | (FLAG_STREAM if stream else 0)
+             | (FLAG_STREAM_END if stream_end else 0))
+    return Frame(call_id, method_id(method), flags, tuple(int(s)
+                                                          for s in sizes),
+                 bufs)
+
+
+# ---------------------------------------------------------------------------
+# header
+# ---------------------------------------------------------------------------
+
+def header_bytes(frame: Frame) -> np.ndarray:
+    """Little-endian uint32 header, zero-padded to a LANE multiple."""
+    words = [MAGIC, frame.call_id, frame.method, frame.flags,
+             frame.n_buffers, *frame.sizes]
+    raw = np.asarray(words, dtype="<u4").view(np.uint8)
+    out = np.zeros(_pad128(raw.size), dtype=np.uint8)
+    out[:raw.size] = raw
+    return out
+
+
+def parse_header(data: np.ndarray) -> Tuple[Frame, int]:
+    """Parse a header prefix -> (spec-only Frame, header length in bytes)."""
+    head = np.ascontiguousarray(data[:LANE]).view("<u4")
+    assert int(head[0]) == MAGIC, f"bad frame magic {int(head[0]):#x}"
+    call_id, method, flags, n = (int(head[1]), int(head[2]), int(head[3]),
+                                 int(head[4]))
+    hdr_len = _pad128((5 + n) * _WORD)
+    words = np.ascontiguousarray(data[:hdr_len]).view("<u4")
+    sizes = tuple(int(s) for s in words[5:5 + n])
+    return Frame(call_id, method, flags, sizes, None), hdr_len
+
+
+# ---------------------------------------------------------------------------
+# wire encode / decode
+# ---------------------------------------------------------------------------
+
+def _pack_numpy(bufs: List[np.ndarray]) -> np.ndarray:
+    """Byte-identical host-side layout of the pack kernel: each buffer
+    zero-padded to the 128-byte lane, then concatenated."""
+    out = []
+    for b in bufs:
+        pad = _pad128(b.size) - b.size
+        out.append(b if pad == 0 else np.pad(b, (0, pad)))
+    return np.concatenate(out)
+
+
+def _unpack_numpy(wire: np.ndarray, sizes: Sequence[int]
+                  ) -> List[np.ndarray]:
+    out, off = [], 0
+    for s in sizes:
+        out.append(np.asarray(wire[off:off + s]))
+        off += _pad128(s)
+    return out
+
+
+def encode(frame: Frame, *, backend: str = "numpy") -> List[np.ndarray]:
+    """Frame -> wire messages (list of uint8 arrays).
+
+    serialized: one message [header | packed payload]; the coalescing
+    copy runs through the payload_pack kernel (backend="kernel") or the
+    equivalent numpy path (backend="numpy") — identical bytes either way.
+    non_serialized: [header, buf_0, .., buf_{n-1}] untouched.
+    """
+    assert frame.bufs is not None, "cannot encode a spec-only frame"
+    hdr = header_bytes(frame)
+    if not frame.serialized:
+        return [hdr] + list(frame.bufs)
+    parts = [hdr] + list(frame.bufs)
+    if backend == "kernel":
+        from repro.kernels.payload_pack import pack as kpack
+        import jax.numpy as jnp
+        packed, _ = kpack([jnp.asarray(b) for b in parts])
+        # kernel output is already the lane-padded concatenation
+        return [np.asarray(packed)]
+    assert backend == "numpy", backend
+    return [_pack_numpy(parts)]
+
+
+def decode(messages: List[np.ndarray], *, backend: str = "numpy") -> Frame:
+    """Wire messages -> Frame (byte-identical round trip of encode)."""
+    head, hdr_len = parse_header(messages[0])
+    if not head.serialized:
+        bufs = [np.ascontiguousarray(m[:s], dtype=np.uint8)
+                for m, s in zip(messages[1:], head.sizes)]
+        return replace(head, bufs=bufs)
+    assert len(messages) == 1, "serialized frame is one wire message"
+    wire = messages[0]
+    sizes = [hdr_len] + list(head.sizes)
+    if backend == "kernel":
+        from repro.kernels.payload_pack import unpack as kunpack
+        import jax.numpy as jnp
+        parts = [np.asarray(p) for p in kunpack(jnp.asarray(wire), sizes)]
+    else:
+        assert backend == "numpy", backend
+        parts = _unpack_numpy(wire, sizes)
+    return replace(head, bufs=parts[1:])

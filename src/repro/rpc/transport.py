@@ -1,0 +1,175 @@
+"""Pluggable transports for the RPC fabric.
+
+A transport moves one *flight* of point-to-point messages and reports
+how long the flight took:
+
+  LoopbackTransport   — single-host shared-buffer memcpy; wall-clock
+                        measured. The serving-experiment path.
+  SimulatedTransport  — no data moves; elapsed is priced by a
+                        ``core.netmodel.NetworkModel`` (receiver-side
+                        NIC serialization + CPU-copy contention), so
+                        topologies of hundreds of endpoints run in
+                        milliseconds.
+  CollectiveTransport — (repro.rpc.collective) lowers the flight onto
+                        the ``ppermute`` schedules of
+                        ``core.channels``; measured on real devices.
+
+Physical fabrics move at most one message per (src, dst) port pair at a
+time, so a flight is internally decomposed into edge-colored *rounds*
+(unique sources and destinations per round) — the same constraint
+``channels.bipartite_schedule`` encodes for ppermute.
+"""
+from __future__ import annotations
+
+import abc
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.netmodel import NetworkModel
+from repro.core.payload import PayloadSpec, classify
+from repro.rpc import framing
+
+
+@dataclass(frozen=True)
+class Message:
+    src: int
+    dst: int
+    frame: framing.Frame
+
+
+@dataclass
+class Delivery:
+    messages: List[Message]     # as delivered (frames re-decoded off wire)
+    elapsed_s: float
+    rounds: int
+    modeled: bool
+
+
+def schedule_rounds(messages: Sequence[Message]) -> List[List[Message]]:
+    """Greedy edge coloring: split a flight into rounds with unique
+    sources AND destinations (the ppermute / single-port constraint)."""
+    pending = list(messages)
+    rounds: List[List[Message]] = []
+    while pending:
+        used_src, used_dst = set(), set()
+        this_round, rest = [], []
+        for m in pending:
+            if m.src not in used_src and m.dst not in used_dst:
+                used_src.add(m.src)
+                used_dst.add(m.dst)
+                this_round.append(m)
+            else:
+                rest.append(m)
+        rounds.append(this_round)
+        pending = rest
+    return rounds
+
+
+def spec_of(frame: framing.Frame) -> PayloadSpec:
+    """A netmodel-priceable spec for a frame's payload."""
+    return PayloadSpec(sizes=frame.sizes, scheme="wire",
+                       categories=tuple(classify(s) for s in frame.sizes))
+
+
+class Transport(abc.ABC):
+    """One flight in, delivery + timing out."""
+
+    n_endpoints: int
+    modeled: bool = False
+    #: True when endpoint servers run python handlers on delivered frames
+    #: (loopback/simulated); the collective transport is a pure SPMD
+    #: datapath whose service semantics are echo/exchange.
+    dispatches: bool = True
+
+    @abc.abstractmethod
+    def deliver(self, messages: Sequence[Message]) -> Delivery:
+        ...
+
+    def close(self) -> None:
+        pass
+
+
+class LoopbackTransport(Transport):
+    """Shared-buffer transport: every endpoint lives in this process and
+    owns an inbox list; delivery encodes each frame to wire bytes and
+    copies them into the destination inbox. The encode+memcpy is exactly
+    the serialized/non-serialized trade measured on one host."""
+
+    def __init__(self, n_endpoints: int, *, backend: str = "numpy",
+                 inbox_depth: int = 8):
+        assert n_endpoints >= 1
+        self.n_endpoints = n_endpoints
+        self.backend = backend
+        # bounded: retains only the last few wire messages per endpoint
+        # for inspection — benchmark loops would otherwise accumulate
+        # every payload copy ever delivered
+        self.inboxes: List[Deque[List[np.ndarray]]] = [
+            deque(maxlen=inbox_depth) for _ in range(n_endpoints)]
+
+    def deliver(self, messages: Sequence[Message]) -> Delivery:
+        rounds = schedule_rounds(messages)
+        out: List[Message] = []
+        t0 = time.perf_counter()
+        for rnd in rounds:
+            for m in rnd:
+                assert 0 <= m.dst < self.n_endpoints, m.dst
+                wire = framing.encode(m.frame, backend=self.backend)
+                copied = [np.array(w, copy=True) for w in wire]
+                self.inboxes[m.dst].append(copied)
+                out.append(Message(m.src, m.dst,
+                                   framing.decode(copied,
+                                                  backend=self.backend)))
+        elapsed = time.perf_counter() - t0
+        return Delivery(out, elapsed, len(rounds), modeled=False)
+
+
+class SimulatedTransport(Transport):
+    """Analytic transport over a ``NetworkModel``.
+
+    Per flight, each receiver serializes its incoming messages on its
+    NIC/stack (sum of per-message times) and pays the quadratic host
+    CPU-copy contention term when several messages land on one endpoint
+    — the same receiver-bound model ``netmodel.ps_round_time`` uses, so
+    a simulated PS pattern reproduces the paper's throughput ratios.
+    Frames may be spec-only; nothing is allocated or copied.
+    """
+
+    modeled = True
+
+    def __init__(self, n_endpoints: int, network: NetworkModel):
+        assert n_endpoints >= 1
+        self.n_endpoints = n_endpoints
+        self.network = network
+        self.clock_s = 0.0
+
+    def price(self, frame: framing.Frame) -> float:
+        """One message's cost at the receiver: payload + 64B ack."""
+        serialized = frame.serialized
+        return (self.network.payload_time(spec_of(frame),
+                                          serialized=serialized)
+                + self.network.msg_time(64))
+
+    def deliver(self, messages: Sequence[Message]) -> Delivery:
+        per_dst: Dict[int, float] = {}
+        per_dst_count: Dict[int, int] = {}
+        per_dst_bytes: Dict[int, int] = {}
+        for m in messages:
+            assert 0 <= m.dst < self.n_endpoints, m.dst
+            per_dst[m.dst] = per_dst.get(m.dst, 0.0) + self.price(m.frame)
+            per_dst_count[m.dst] = per_dst_count.get(m.dst, 0) + 1
+            per_dst_bytes[m.dst] = (per_dst_bytes.get(m.dst, 0)
+                                    + m.frame.total_bytes)
+        elapsed = 0.0
+        for d, t in per_dst.items():
+            k = per_dst_count[d]
+            avg_bytes = per_dst_bytes[d] / k
+            contention = (k * (k - 1) * avg_bytes
+                          / self.network.cpu_copy_Bps)
+            elapsed = max(elapsed, t + contention)
+        self.clock_s += elapsed
+        rounds = schedule_rounds(messages)
+        return Delivery(list(messages), elapsed, len(rounds), modeled=True)

@@ -1,10 +1,16 @@
 """Batched serving engine: prefill + decode with per-layer KV/SSM state,
 greedy/temperature sampling, static batch with slot reuse.
+
+Generation requests can also arrive through the rpc fabric: the engine
+exposes a ``generate`` method on an ``rpc.Server`` endpoint
+(``attach``/``serve_loopback``), so serving traffic exercises the same
+framing / flow-control / transport stack the communication benchmarks
+measure. ``rpc_generate`` is the matching client stub.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,3 +76,77 @@ class ServeEngine:
             tok = self._sample(logits, k)
             out.append(tok)
         return np.asarray(jnp.stack(out, axis=1))
+
+    # ------------------------------------------------------------------
+    # rpc endpoint
+    # ------------------------------------------------------------------
+
+    def rpc_handler(self, bufs: List[np.ndarray]) -> List[np.ndarray]:
+        """``generate`` method body: iovec request -> iovec reply."""
+        prompts, mnt = decode_generate_request(bufs)
+        out = self.generate(prompts, mnt or None)
+        return encode_generate_reply(out)
+
+    def attach(self, server) -> None:
+        """Register this engine's methods on an ``rpc.Server``."""
+        server.register(GENERATE_METHOD, self.rpc_handler)
+
+    def serve_loopback(self, *, endpoint: int = 0, client: int = 1,
+                       serialized: bool = True):
+        """One-call wiring for single-host serving experiments: a
+        loopback-transport fabric with this engine at ``endpoint``.
+        Returns (fabric, client channel)."""
+        from repro import rpc as rpclib
+        fabric = rpclib.RpcFabric(
+            rpclib.LoopbackTransport(max(endpoint, client) + 1))
+        self.attach(fabric.add_server(endpoint))
+        return fabric, fabric.channel(client, endpoint,
+                                      serialized=serialized)
+
+
+# ---------------------------------------------------------------------------
+# generate-over-rpc wire codec + client stub
+# ---------------------------------------------------------------------------
+
+GENERATE_METHOD = "generate"
+
+
+def _i32_buf(values) -> np.ndarray:
+    return np.ascontiguousarray(np.asarray(values, dtype="<i4")) \
+        .view(np.uint8).reshape(-1)
+
+
+def encode_generate_request(prompts: np.ndarray,
+                            max_new_tokens: int = 0) -> List[np.ndarray]:
+    """[header(B, S, max_new_tokens) | row-major int32 tokens]."""
+    B, S = prompts.shape
+    return [_i32_buf([B, S, max_new_tokens]),
+            _i32_buf(prompts)]
+
+
+def decode_generate_request(bufs: List[np.ndarray]
+                            ) -> Tuple[np.ndarray, int]:
+    B, S, mnt = np.ascontiguousarray(bufs[0]).view("<i4")[:3]
+    prompts = np.ascontiguousarray(bufs[1]).view("<i4") \
+        .reshape(int(B), int(S))
+    return prompts, int(mnt)
+
+
+def encode_generate_reply(tokens: np.ndarray) -> List[np.ndarray]:
+    B, N = tokens.shape
+    return [_i32_buf([B, N]), _i32_buf(tokens)]
+
+
+def decode_generate_reply(bufs: List[np.ndarray]) -> np.ndarray:
+    B, N = np.ascontiguousarray(bufs[0]).view("<i4")[:2]
+    return np.ascontiguousarray(bufs[1]).view("<i4") \
+        .reshape(int(B), int(N))
+
+
+def rpc_generate(channel, prompts: np.ndarray,
+                 max_new_tokens: int = 0) -> np.ndarray:
+    """Client stub: one unary ``generate`` call, driven to completion."""
+    call = channel.call(GENERATE_METHOD,
+                        encode_generate_request(prompts, max_new_tokens))
+    channel.fabric.flush()
+    return decode_generate_reply(call.reply_bufs())

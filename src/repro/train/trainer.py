@@ -92,9 +92,11 @@ class Trainer:
     def _one_step(self, params, opt, step: int):
         batch = device_batch(self.ctx, host_batch(self.acfg, self.shape,
                                                   step, self.dcfg))
+        # the hook simulates in-step behaviour (failure OR slowness), so it
+        # must run inside the timed window or stragglers are invisible
+        t0 = time.perf_counter()
         if self.fault_hook is not None:
             self.fault_hook(step)
-        t0 = time.perf_counter()
         params, opt, metrics = self.step_fn(params, opt, batch)
         jax.block_until_ready(metrics["loss"])
         wall = time.perf_counter() - t0

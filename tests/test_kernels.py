@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.payload_pack import pack, pack_ref, unpack

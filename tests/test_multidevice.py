@@ -185,3 +185,22 @@ for mesh in (make_test_mesh(2, 2), make_test_mesh(2, 2, pod=2)):
 print('OK')
 """, devices=8)
     assert "OK" in out
+
+
+@pytest.mark.slow
+def test_fully_connected_collective_bench():
+    out = _run("""
+import jax
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core import bench
+for mode in ('non_serialized', 'serialized'):
+    st = bench.run(BenchConfig(benchmark='fully_connected', num_workers=4,
+                               transport='collective', mode=mode,
+                               iovec_count=4, warmup_s=0.1,
+                               duration_s=0.3))
+    assert st.derived['rpcs_per_s'] > 0
+    assert st.derived['rpcs_per_round'] == 12
+    assert st.model_projection['rdma_edr'] > 0
+print("OK")
+""")
+    assert "OK" in out

@@ -1,7 +1,7 @@
 """Network models must reproduce the paper's measured claims (the
 reproduction gate for §4 of the paper) and behave physically."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.configs.tfgrpc_bench import BenchConfig
 from repro.core.netmodel import NETWORKS, paper_ratio_report

@@ -2,7 +2,7 @@
 hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.configs import get_config, list_archs
 from repro.configs.tfgrpc_bench import (BenchConfig, LARGE_RANGE,
@@ -84,3 +84,14 @@ def test_from_arch_payloads(arch):
     assert spec.n_buffers == 10
     assert all(1 <= s <= LARGE_RANGE[1] for s in spec.sizes)
     assert spec.scheme == f"arch:{arch}"
+
+
+def test_payload_spec_override_plumbed_through():
+    """--arch fix: an explicit payload_spec on BenchConfig must win over
+    the S/M/L generator."""
+    from repro.core.payload import PayloadSpec
+    spec = PayloadSpec(sizes=(123, 4567), scheme="arch:test",
+                       categories=("small", "medium"))
+    cfg = BenchConfig(payload_spec=spec, scheme="skew")
+    assert generate_spec(cfg) is spec
+    assert generate_spec(BenchConfig(scheme="skew")).scheme == "skew"

@@ -1,0 +1,439 @@
+"""repro.rpc fabric: framing (both wire modes, kernel + numpy paths),
+flow control, completion queue, loopback/simulated transports, unary +
+streaming calls, serve-over-rpc, and the fully-connected driver."""
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.core.netmodel import NETWORKS
+from repro.core.payload import PayloadSpec
+from repro.rpc import framing
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+SIZES = (10, 300, 1024, 7, 128, 4096)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("serialized", [False, True])
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_frame_roundtrip_byte_identical(serialized, backend):
+    bufs = _bufs(SIZES)
+    f = framing.make_frame(42, "echo", bufs, serialized=serialized)
+    wire = framing.encode(f, backend=backend)
+    if serialized:
+        assert len(wire) == 1          # one coalesced wire message
+    else:
+        assert len(wire) == len(bufs) + 1
+    g = framing.decode(wire, backend=backend)
+    assert (g.call_id, g.method, g.flags, g.sizes) == \
+        (f.call_id, f.method, f.flags, f.sizes)
+    for a, b in zip(bufs, g.bufs):
+        assert np.array_equal(a, b)
+
+
+def test_serialized_kernel_and_numpy_wires_identical():
+    """The Pallas payload_pack path and the host numpy path must produce
+    the same bytes — the wire format is backend-independent."""
+    f = framing.make_frame(1, "echo", _bufs(SIZES), serialized=True)
+    w_np = framing.encode(f, backend="numpy")[0]
+    w_k = framing.encode(f, backend="kernel")[0]
+    assert np.array_equal(w_np, w_k)
+
+
+def test_cross_backend_decode():
+    """Kernel-encoded wire decodes on the numpy path and vice versa."""
+    bufs = _bufs(SIZES, seed=3)
+    f = framing.make_frame(9, "x", bufs, serialized=True)
+    for enc, dec in (("kernel", "numpy"), ("numpy", "kernel")):
+        g = framing.decode(framing.encode(f, backend=enc), backend=dec)
+        for a, b in zip(bufs, g.bufs):
+            assert np.array_equal(a, b)
+
+
+def test_header_many_buffers():
+    """Headers longer than one 128-byte lane (n > 27 sizes) round-trip."""
+    bufs = _bufs([8] * 40)
+    for serialized in (False, True):
+        f = framing.make_frame(5, "m", bufs, serialized=serialized)
+        g = framing.decode(framing.encode(f))
+        assert g.sizes == f.sizes
+        assert all(np.array_equal(a, b) for a, b in zip(bufs, g.bufs))
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(AssertionError, match="magic"):
+        framing.parse_header(np.zeros(128, dtype=np.uint8))
+
+
+def test_method_id_stable():
+    assert framing.method_id("generate") == framing.method_id("generate")
+    assert framing.method_id("generate") != framing.method_id("exchange")
+
+
+def test_framing_lane_matches_kernel_lane():
+    """framing.LANE is duplicated (not imported) to keep repro.rpc
+    jax-free; it must stay pinned to the kernel's lane width."""
+    from repro.kernels import payload_pack
+    assert framing.LANE == payload_pack.LANE
+
+
+def test_rpc_import_is_jax_free():
+    """Simulated-transport users (hundreds of endpoints, analytics
+    only) must not pay the jax import."""
+    import subprocess
+    import sys
+    code = ("import sys; import repro.rpc; "
+            "from repro.core.netmodel import NETWORKS; "
+            "f = repro.rpc.RpcFabric(repro.rpc.SimulatedTransport("
+            "8, NETWORKS['rdma_edr'])); "
+            "repro.rpc.fully_connected_exchange(f, [1024]); "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# flow control
+# ---------------------------------------------------------------------------
+
+def test_credit_window_accounting():
+    w = rpc.CreditWindow(window_bytes=1000, window_msgs=2)
+    assert w.try_acquire(600)
+    assert not w.try_acquire(600)          # byte credits exhausted
+    assert w.stats.stalled == 1
+    assert w.try_acquire(100)
+    assert not w.try_acquire(100)          # msg credits exhausted
+    assert w.stats.stalled == 2
+    w.grant(600)
+    w.grant(100)
+    w.grant(9999)                          # grants clamp at the window
+    assert w.bytes_avail == 1000 and w.msgs_avail == 2
+    assert w.stats.acquired == 2
+    assert w.stats.bytes_in_flight_peak == 700
+
+
+def test_oversized_message_admitted_alone():
+    w = rpc.CreditWindow(window_bytes=100, window_msgs=4)
+    assert w.try_acquire(5000)             # occupies the whole window
+    assert not w.try_acquire(1)
+    w.grant(5000)
+    assert w.try_acquire(1)
+
+
+def test_flow_control_backpressure_multiflight():
+    """A burst larger than the window drains over several flights and
+    the stalls are counted."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=2048, window_msgs=2)
+    srv = fab.add_server(1)
+    srv.register("echo", lambda req: req)
+    ch = fab.channel(0, 1)
+    calls = [ch.call("echo", _bufs([512], seed=i)) for i in range(8)]
+    rep = fab.flush()
+    assert all(c.done for c in calls)
+    assert rep.flights > 2                 # forced into multiple flights
+    # one stall per blocked call (2-msg window admits 2 of 8 up front);
+    # backlog retries must NOT inflate the count
+    assert ch.window.stats.stalled == 6
+
+
+def test_credits_granted_by_request_size():
+    """Replies smaller than requests must still restore the REQUEST's
+    byte credits, or the window leaks shut."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1 << 20, window_msgs=4)
+    fab.add_server(1).register("tiny",
+                               lambda req: [np.zeros(1, np.uint8)])
+    ch = fab.channel(0, 1)
+    for i in range(10):
+        c = ch.call("tiny", _bufs([600_000], seed=i))
+        fab.flush()
+        assert c.done and c.error is None
+    assert ch.window.bytes_avail == 1 << 20
+    assert ch.window.msgs_avail == 4
+    assert ch.window.stats.stalled == 0
+
+
+# ---------------------------------------------------------------------------
+# completion queue
+# ---------------------------------------------------------------------------
+
+def test_completion_queue_fifo_and_drain():
+    cq = rpc.CompletionQueue()
+    for i in range(3):
+        cq.push(rpc.Event(i, "sent"))
+    assert cq.poll().tag == 0
+    assert [e.tag for e in cq.drain()] == [1, 2]
+    assert cq.poll() is None and len(cq) == 0
+
+
+def test_completion_queue_bounded_when_undrained():
+    cq = rpc.CompletionQueue(maxlen=4)
+    for i in range(10):
+        cq.push(rpc.Event(i, "sent"))
+    assert len(cq) == 4 and cq.dropped == 6
+    assert [e.tag for e in cq.drain()] == [6, 7, 8, 9]
+
+
+def test_fabric_state_does_not_accumulate():
+    """Benchmark loops must not grow fabric-internal state: completed
+    calls are pruned and the cq stays bounded."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register("echo", lambda req: req)
+    ch = fab.channel(0, 1)
+    for i in range(50):
+        c = ch.call("echo", _bufs([256], seed=i))
+        fab.flush()
+        assert c.done
+    assert len(fab._calls) == 0
+    assert len(fab._awaiting_grant) == 0
+    assert len(fab.cq) <= 4096
+
+
+def test_fabric_pushes_completion_events():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register("echo", lambda req: req)
+    c = fab.channel(0, 1).call("echo", _bufs([64]))
+    fab.flush()
+    events = fab.cq.drain()
+    kinds = {e.kind for e in events}
+    assert "received" in kinds and "replied" in kinds
+    assert c.done
+    # events carry frame metadata only — payload stays with the Call
+    for e in events:
+        if e.payload is not None:
+            assert e.payload.bufs is None
+            assert e.payload.sizes == (64,)
+    assert c.reply_bufs()[0].size == 64
+
+
+# ---------------------------------------------------------------------------
+# transports + rounds
+# ---------------------------------------------------------------------------
+
+def test_schedule_rounds_unique_ports():
+    msgs = [rpc.Message(s, d, framing.make_frame(0, "x", None,
+                                                 sizes=[8]))
+            for s in range(4) for d in range(4) if s != d]
+    rounds = rpc.schedule_rounds(msgs)
+    assert sum(len(r) for r in rounds) == 12
+    for rnd in rounds:
+        ss, dd = [m.src for m in rnd], [m.dst for m in rnd]
+        assert len(set(ss)) == len(ss) and len(set(dd)) == len(dd)
+
+
+@pytest.mark.parametrize("serialized", [False, True])
+def test_loopback_unary_and_error(serialized):
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register("inc", lambda req: [(req[0] + 1).astype(np.uint8)])
+
+    def boom(req):
+        raise ValueError("nope")
+    srv.register("boom", boom)
+    ch = fab.channel(0, 1, serialized=serialized)
+    ok = ch.call("inc", [np.zeros(16, dtype=np.uint8)])
+    bad = ch.call("boom", [np.zeros(4, dtype=np.uint8)])
+    missing = ch.call("nosuch", [np.zeros(4, dtype=np.uint8)])
+    fab.flush()
+    assert np.array_equal(ok.reply_bufs()[0],
+                          np.ones(16, dtype=np.uint8))
+    with pytest.raises(rpc.RpcError, match="nope"):
+        bad.reply_bufs()
+    with pytest.raises(rpc.RpcError, match="unimplemented"):
+        missing.reply_bufs()
+    assert srv.calls_served == 1
+
+
+def test_streaming_cardinality_enforced():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register("uni", lambda req: req)
+    srv.register("str", lambda req: req, streaming=True)
+    bad_stream = fab.channel(0, 1).stream(
+        "uni", [[np.ones(4, dtype=np.uint8)]] * 2)
+    bad_unary = fab.channel(0, 1).call("str",
+                                       [np.ones(4, dtype=np.uint8)])
+    fab.flush()
+    for c in (bad_stream, bad_unary):
+        with pytest.raises(rpc.RpcError, match="cardinality mismatch"):
+            c.reply_bufs()
+
+
+def test_stream_chunks_keep_order_under_backpressure():
+    """A stalled middle chunk must not be overtaken by the END chunk:
+    per-channel FIFO holds even when a later, smaller message would fit
+    the window."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1024, window_msgs=8)
+    srv = fab.add_server(1)
+    srv.register("concat", lambda req: [np.concatenate(req)],
+                 streaming=True)
+    chunks = [[np.full(800, 1, dtype=np.uint8)],
+              [np.full(800, 2, dtype=np.uint8)],
+              [np.full(100, 3, dtype=np.uint8)]]   # END fits; middle not
+    call = fab.channel(0, 1).stream("concat", chunks)
+    fab.flush()
+    got = call.reply_bufs()[0]
+    want = np.concatenate([c[0] for c in chunks])
+    assert np.array_equal(got, want)
+    assert len(srv._streams) == 0              # no leaked partial stream
+
+
+def test_stream_error_replies_do_not_leak_credits():
+    """Every chunk of a stream to a missing method draws its own error
+    reply; each must restore its own request credits."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1)
+    ch = fab.channel(0, 1)
+    call = ch.stream("nosuch", [[np.ones(1000, dtype=np.uint8)]
+                                for _ in range(3)])
+    fab.flush()
+    with pytest.raises(rpc.RpcError):
+        call.reply_bufs()
+    assert ch.window.bytes_avail == ch.window.window_bytes
+    assert ch.window.msgs_avail == ch.window.window_msgs
+
+
+def test_loopback_streaming():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register("concat",
+                 lambda req: [np.concatenate(req)], streaming=True)
+    chunks = [[_bufs([5], seed=i)[0]] for i in range(4)]
+    call = fab.channel(0, 1).stream("concat", chunks)
+    fab.flush()
+    want = np.concatenate([c[0] for c in chunks])
+    assert np.array_equal(call.reply_bufs()[0], want)
+
+
+def test_simulated_matches_netmodel_ps_pattern():
+    """The simulated transport prices an n_workers->1 incast exactly
+    like netmodel.ps_round_time's receiver model (minus the ack+pull
+    terms it shares): sanity that the two stay coupled."""
+    net = NETWORKS["eth10g"]
+    sizes = [4096] * 4
+    n_workers = 5
+    tr = rpc.SimulatedTransport(8, net)
+    msgs = [rpc.Message(i + 1, 0, framing.make_frame(i, "push", None,
+                                                     sizes=sizes))
+            for i in range(n_workers)]
+    d = tr.deliver(msgs)
+    spec = rpc.spec_of(msgs[0].frame)
+    per_rpc = net.payload_time(spec, serialized=False) + net.msg_time(64)
+    contention = (n_workers * (n_workers - 1) * spec.total_bytes
+                  / net.cpu_copy_Bps)
+    assert d.modeled
+    assert d.elapsed_s == pytest.approx(per_rpc * n_workers + contention)
+
+
+def test_simulated_serialized_costs_more_on_slow_cpu_nets():
+    net = NETWORKS["eth40g"]
+    tr = rpc.SimulatedTransport(2, net)
+    f_ns = framing.make_frame(0, "x", None, sizes=[1 << 20])
+    f_s = framing.make_frame(0, "x", None, sizes=[1 << 20])
+    t_ns = tr.price(f_ns)
+    t_s = tr.price(framing.Frame(0, f_s.method,
+                                 f_s.flags | framing.FLAG_SERIALIZED,
+                                 f_s.sizes))
+    assert t_s > t_ns                      # serialization copy is extra
+
+
+# ---------------------------------------------------------------------------
+# fully-connected driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 8, 64])
+def test_fully_connected_simulated_round_count(n):
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(n, NETWORKS["rdma_edr"]))
+    rep = rpc.fully_connected_exchange(fab, [1024, 64])
+    assert rep.messages == n * (n - 1)
+    assert rep.rounds == n - 1             # perfect edge coloring
+    assert rep.modeled and rep.elapsed_s > 0
+
+
+def test_fully_connected_simulated_matches_netmodel():
+    spec = PayloadSpec(sizes=(65536,) * 4, scheme="t",
+                       categories=("medium",) * 4)
+    for name in ("eth40g", "rdma_edr"):
+        net = NETWORKS[name]
+        fab = rpc.RpcFabric(rpc.SimulatedTransport(16, net))
+        rep = rpc.fully_connected_exchange(fab, list(spec.sizes))
+        assert rep.elapsed_s == pytest.approx(
+            net.fc_round_time(spec, 16), rel=1e-9), name
+
+
+def test_bench_fully_connected_simulated():
+    """bench.run end-to-end on the simulated transport: the measured
+    stat IS the netmodel projection for the chosen network."""
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+    st = bench.run(BenchConfig(benchmark="fully_connected",
+                               num_workers=16, transport="simulated",
+                               network="rdma_edr"))
+    assert st.derived["rpcs_per_s"] > 0
+    assert st.model_projection["rdma_edr"] == pytest.approx(
+        st.derived["rpcs_per_s"], rel=1e-6)
+    # more endpoints than host devices is exactly the point
+    assert st.derived["rpcs_per_round"] == 16 * 15
+
+
+def test_bench_fully_connected_needs_two_workers():
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+    with pytest.raises(RuntimeError, match="num-workers"):
+        bench.run(BenchConfig(benchmark="fully_connected",
+                              num_workers=1, transport="simulated"))
+
+
+def test_fully_connected_loopback_measured():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(3))
+    rep = rpc.fully_connected_exchange(fab, [256, 256],
+                                       bufs=_bufs([256, 256]))
+    assert not rep.modeled
+    assert rep.messages == 6 and rep.elapsed_s > 0
+
+
+# ---------------------------------------------------------------------------
+# serve over rpc
+# ---------------------------------------------------------------------------
+
+def test_generate_codec_roundtrip():
+    from repro.serve import engine as E
+    prompts = np.arange(12, dtype=np.int32).reshape(3, 4)
+    p2, mnt = E.decode_generate_request(
+        E.encode_generate_request(prompts, 7))
+    assert mnt == 7 and np.array_equal(prompts, p2)
+    toks = np.arange(6, dtype=np.int32).reshape(2, 3)
+    assert np.array_equal(
+        toks, E.decode_generate_reply(E.encode_generate_reply(toks)))
+
+
+@pytest.mark.parametrize("serialized", [False, True])
+def test_serve_engine_over_rpc_matches_direct(serialized):
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.parallel import NO_MESH
+    from repro.serve.engine import (ServeConfig, ServeEngine,
+                                    rpc_generate)
+
+    cfg = get_reduced_config("qwen3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(NO_MESH, cfg, params,
+                      ServeConfig(max_seq=64, max_new_tokens=4))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.model.vocab_size, (2, 8), dtype=np.int32)
+    direct = eng.generate(prompts)
+    _, channel = eng.serve_loopback(serialized=serialized)
+    via_rpc = rpc_generate(channel, prompts)
+    assert np.array_equal(direct, via_rpc)

@@ -1,0 +1,52 @@
+"""Pure schedule math: bipartite edge coloring (PS rounds) edge cases
+and the all-to-all schedule behind the fully_connected family."""
+import pytest
+
+from repro.core.channels import (all_to_all_schedule, bipartite_schedule,
+                                 fc_rpcs_per_round)
+
+
+def _check_rounds(rounds, srcs, dsts):
+    pairs = [p for r in rounds for p in r]
+    # every (src, dst) pair exactly once
+    assert len(pairs) == len(set(pairs)) == len(srcs) * len(dsts)
+    assert set(pairs) == {(s, d) for s in srcs for d in dsts}
+    # unique sources and destinations within every round
+    for r in rounds:
+        ss, dd = [s for s, _ in r], [d for _, d in r]
+        assert len(set(ss)) == len(ss)
+        assert len(set(dd)) == len(dd)
+
+
+@pytest.mark.parametrize("srcs,dsts", [
+    ([0, 1, 2, 3, 4], [5, 6]),        # more sources than destinations
+    ([0, 1, 2], [3, 4, 5]),           # equal counts
+    ([0], [1]),                       # single endpoint each side
+    ([0], [1, 2, 3, 4, 5, 6, 7]),     # single source, many dsts
+    ([1, 2, 3, 4, 5, 6, 7], [0]),     # many sources, single dst
+    ([7, 3], [1, 5, 0, 2]),           # unordered, non-contiguous ids
+])
+def test_bipartite_schedule_edge_cases(srcs, dsts):
+    rounds = bipartite_schedule(srcs, dsts)
+    _check_rounds(rounds, srcs, dsts)
+    # minimal coloring: rounds == max(|srcs|, |dsts|)
+    assert len(rounds) == max(len(srcs), len(dsts))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 7, 8, 64])
+def test_all_to_all_schedule(n):
+    rounds = all_to_all_schedule(n)
+    assert len(rounds) == n - 1           # minimal for K_n
+    pairs = [p for r in rounds for p in r]
+    assert len(pairs) == len(set(pairs)) == fc_rpcs_per_round(n)
+    assert set(pairs) == {(s, d) for s in range(n) for d in range(n)
+                          if s != d}
+    for r in rounds:
+        ss, dd = [s for s, _ in r], [d for _, d in r]
+        assert len(set(ss)) == len(ss) == n
+        assert len(set(dd)) == len(dd) == n
+
+
+def test_all_to_all_rejects_singleton():
+    with pytest.raises(AssertionError):
+        all_to_all_schedule(1)
