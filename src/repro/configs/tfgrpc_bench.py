@@ -29,8 +29,10 @@ SKEW_BIAS_FRACTIONS = {
 @dataclass(frozen=True)
 class BenchConfig:
     """Table 2 — configurable parameters of TF-gRPC-Bench, extended with
-    the rpc-fabric benchmark family (fully_connected + transport)."""
+    the rpc-fabric benchmark families (fully_connected / ring / incast
+    + transport)."""
     # p2p_latency | p2p_bandwidth | ps_throughput | fully_connected
+    # | ring | incast
     benchmark: str = "p2p_latency"
     num_ps: int = 1
     num_workers: int = 1
@@ -48,8 +50,10 @@ class BenchConfig:
     dtype: str = "uint8"
     network: Optional[str] = None    # key into core.netmodel.NETWORKS
     # rpc fabric transport: collective | loopback | simulated
-    # (fully_connected only; the three paper benchmarks are collective)
+    # (fabric families only; the three paper benchmarks are collective)
     transport: str = "collective"
+    # chunks per stream for the ring/incast streaming families
+    stream_chunks: int = 4
     # explicit payload override (e.g. --arch): a core.payload.PayloadSpec;
     # when set, the S/M/L generator fields above are ignored
     payload_spec: Optional[object] = None

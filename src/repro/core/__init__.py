@@ -8,13 +8,14 @@ must not drag in jax.
 from repro.core.netmodel import NETWORKS, NetworkModel, paper_ratio_report
 from repro.core.payload import PayloadSpec, from_arch, generate_spec
 
-__all__ = ["BenchStats", "fully_connected", "p2p_bandwidth",
-           "p2p_latency", "ps_throughput", "run", "NETWORKS",
+__all__ = ["BenchStats", "fully_connected", "incast", "p2p_bandwidth",
+           "p2p_latency", "ps_throughput", "ring", "run", "NETWORKS",
            "NetworkModel", "paper_ratio_report", "PayloadSpec",
            "from_arch", "generate_spec"]
 
-_BENCH_EXPORTS = {"BenchStats", "fully_connected", "p2p_bandwidth",
-                  "p2p_latency", "ps_throughput", "run"}
+_BENCH_EXPORTS = {"BenchStats", "fully_connected", "incast",
+                  "p2p_bandwidth", "p2p_latency", "ps_throughput",
+                  "ring", "run"}
 
 
 def __getattr__(name):

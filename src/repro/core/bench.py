@@ -1,13 +1,18 @@
 """The TF-gRPC-Bench micro-benchmarks (paper §3.2) plus the rpc-fabric
-fully-connected family, as drivers over repro.core.channels and
-repro.rpc, with the paper's warmup/duration protocol and the netmodel
-projection alongside the measured host numbers.
+families, as drivers over repro.core.channels and repro.rpc, with the
+paper's warmup/duration protocol and the netmodel projection alongside
+the measured host numbers.
 
   TF-gRPC-P2P-Latency    -> p2p_latency()
   TF-gRPC-P2P-Bandwidth  -> p2p_bandwidth()
   TF-gRPC-PS-Throughput  -> ps_throughput()
   fully_connected        -> fully_connected()   (rpc fabric; transport =
-                            collective | loopback | simulated)
+  ring                   -> ring()               collective | loopback |
+  incast                 -> incast()             simulated)
+
+ring/incast are streaming families: each worker moves
+``cfg.stream_chunks`` chunk frames per stream (ring: to its successor;
+incast: bidi into one server that streams the fetch back).
 """
 from __future__ import annotations
 
@@ -80,6 +85,14 @@ def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
         elif name == "fully_connected":
             st.model_projection[net_name] = net.fc_throughput(
                 spec, cfg.num_workers, serialized=serialized)
+        elif name == "ring":
+            st.model_projection[net_name] = net.ring_throughput(
+                spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
+                serialized=serialized)
+        elif name == "incast":
+            st.model_projection[net_name] = net.incast_throughput(
+                spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
+                serialized=serialized)
         else:
             st.model_projection[net_name] = net.ps_throughput(
                 spec, cfg.num_ps, cfg.num_workers, serialized=serialized)
@@ -131,45 +144,65 @@ def ps_throughput(cfg: BenchConfig) -> BenchStats:
                   {"rpcs_per_s": rpcs / float(np.mean(times))}, mon.report)
 
 
-def _make_fc_fabric(cfg: BenchConfig, spec: PayloadSpec):
-    """Build the rpc fabric + per-iteration exchange closure for the
-    fully_connected benchmark under cfg.transport."""
+def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
+                 family: str):
+    """Build the rpc fabric (+ materialized bufs where the transport
+    moves real bytes) for one fabric-family benchmark under
+    cfg.transport. Windows are sized so a whole stream
+    (cfg.stream_chunks payloads) fits in flight per channel — the
+    benchmark measures the traffic pattern, not an arbitrarily small
+    default window; shrink RpcFabric windows directly to study
+    back-pressure."""
     from repro import rpc as rpclib
     from repro.core.netmodel import NETWORKS
     from repro.core.payload import materialize
 
-    n = cfg.num_workers
     serialized = cfg.mode == "serialized"
     bufs = None
     if cfg.transport == "collective":
         mesh = ch.make_net_mesh()
-        if mesh.shape[ch.AXIS] < n:
+        if mesh.shape[ch.AXIS] < n_endpoints:
             raise RuntimeError(
-                f"fully_connected/collective needs >= {n} devices, have "
-                f"{mesh.shape[ch.AXIS]}; run under "
+                f"{family}/collective needs >= {n_endpoints} devices, "
+                f"have {mesh.shape[ch.AXIS]}; run under "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
         transport = rpclib.CollectiveTransport(
-            mesh, spec, serialized=serialized, n_endpoints=n,
+            mesh, spec, serialized=serialized, n_endpoints=n_endpoints,
             seed=cfg.seed)
     elif cfg.transport == "loopback":
-        transport = rpclib.LoopbackTransport(n)
+        transport = rpclib.LoopbackTransport(n_endpoints)
         bufs = materialize(spec, seed=cfg.seed)
     elif cfg.transport == "simulated":
         net_name = cfg.network or "eth40g"
         if net_name not in NETWORKS:
             raise ValueError(f"unknown --network {net_name!r}; choose "
                              f"from {sorted(NETWORKS)}")
-        transport = rpclib.SimulatedTransport(n, NETWORKS[net_name])
+        transport = rpclib.SimulatedTransport(n_endpoints,
+                                              NETWORKS[net_name])
     else:
         raise ValueError(f"unknown transport {cfg.transport!r}")
-    fabric = rpclib.RpcFabric(transport)
+    chunks = max(1, cfg.stream_chunks)
+    fabric = rpclib.RpcFabric(
+        transport,
+        window_bytes=max(4 * 1024 * 1024,
+                         (chunks + 1) * spec.total_bytes),
+        window_msgs=max(32, chunks + 1))
+    return fabric, bufs
 
-    def exchange() -> "rpclib.FlightReport":
-        return rpclib.fully_connected_exchange(fabric, list(spec.sizes),
-                                               bufs=bufs,
-                                               serialized=serialized)
 
-    return fabric, exchange
+def _fabric_bench(cfg: BenchConfig, exchange, fabric) -> List[float]:
+    """Measured-vs-modeled timing protocol shared by the fabric
+    families: modeled transports are exact (no warmup loop needed)."""
+    if fabric.transport.modeled:
+        return [exchange().elapsed_s for _ in range(3)]
+    exchange()                                       # compile/touch
+    t_end = time.perf_counter() + cfg.warmup_s
+    while time.perf_counter() < t_end:
+        exchange()
+    times, t_stop = [], time.perf_counter() + cfg.duration_s
+    while time.perf_counter() < t_stop or len(times) < 5:
+        times.append(exchange().elapsed_s)
+    return times
 
 
 def fully_connected(cfg: BenchConfig) -> BenchStats:
@@ -178,28 +211,90 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
     pattern the original three benchmarks never covered)."""
     if cfg.num_workers < 2:
         raise RuntimeError("fully_connected needs --num-workers >= 2")
+    from repro import rpc as rpclib
     spec = generate_spec(cfg)
-    fabric, exchange = _make_fc_fabric(cfg, spec)
+    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers,
+                                "fully_connected")
+    serialized = cfg.mode == "serialized"
+
+    def exchange():
+        return rpclib.fully_connected_exchange(
+            fabric, list(spec.sizes), bufs=bufs, serialized=serialized)
+
     rpcs = ch.fc_rpcs_per_round(cfg.num_workers)
     with ResourceMonitor() as mon:
-        if fabric.transport.modeled:
-            # analytic transport: one exchange is exact; no warmup loop
-            times = [exchange().elapsed_s for _ in range(3)]
-        else:
-            exchange()                                   # compile/touch
-            t_end = time.perf_counter() + cfg.warmup_s
-            while time.perf_counter() < t_end:
-                exchange()
-            times, t_stop = [], time.perf_counter() + cfg.duration_s
-            while time.perf_counter() < t_stop or len(times) < 5:
-                times.append(exchange().elapsed_s)
+        times = _fabric_bench(cfg, exchange, fabric)
     return _stats("fully_connected", cfg, spec, times,
                   {"rpcs_per_s": rpcs / float(np.mean(times)),
                    "rpcs_per_round": float(rpcs)}, mon.report)
 
 
+def ring(cfg: BenchConfig) -> BenchStats:
+    """Every worker streams cfg.stream_chunks payload chunks to its
+    successor on the ring — the rotation schedule of
+    channels.ring_schedule, all workers concurrently."""
+    if cfg.num_workers < 2:
+        raise RuntimeError("ring needs --num-workers >= 2")
+    from repro import rpc as rpclib
+    spec = generate_spec(cfg)
+    n_chunks = max(1, cfg.stream_chunks)
+    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers, "ring")
+    serialized = cfg.mode == "serialized"
+
+    def exchange():
+        return rpclib.ring_exchange(fabric, list(spec.sizes),
+                                    n_chunks=n_chunks, bufs=bufs,
+                                    serialized=serialized)
+
+    rpcs = ch.ring_rpcs_per_round(cfg.num_workers, n_chunks)
+    with ResourceMonitor() as mon:
+        times = _fabric_bench(cfg, exchange, fabric)
+    return _stats("ring", cfg, spec, times,
+                  {"rpcs_per_s": rpcs / float(np.mean(times)),
+                   "rpcs_per_round": float(rpcs),
+                   "chunks_per_stream": float(n_chunks)}, mon.report)
+
+
+def incast(cfg: BenchConfig) -> BenchStats:
+    """cfg.num_workers workers stream cfg.stream_chunks payload chunks
+    each into ONE server endpoint, which streams the payload back per
+    stream (the Cori-style parameter-server hotspot: N-way ingress +
+    N-way fetch egress on one node)."""
+    if cfg.num_workers < 1:
+        raise RuntimeError("incast needs --num-workers >= 1")
+    from repro import rpc as rpclib
+    spec = generate_spec(cfg)
+    n_chunks = max(1, cfg.stream_chunks)
+    # endpoint 0 is the server; workers are 1..num_workers
+    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers + 1, "incast")
+    serialized = cfg.mode == "serialized"
+
+    def exchange():
+        return rpclib.incast_exchange(fabric, list(spec.sizes),
+                                      n_chunks=n_chunks, bufs=bufs,
+                                      serialized=serialized)
+
+    rpcs = ch.incast_rpcs_per_round(cfg.num_workers, n_chunks)
+    with ResourceMonitor() as mon:
+        times = _fabric_bench(cfg, exchange, fabric)
+    return _stats("incast", cfg, spec, times,
+                  {"rpcs_per_s": rpcs / float(np.mean(times)),
+                   "rpcs_per_round": float(rpcs),
+                   "chunks_per_stream": float(n_chunks)}, mon.report)
+
+
+BENCHMARKS: Dict[str, Callable[[BenchConfig], BenchStats]] = {
+    "p2p_latency": p2p_latency,
+    "p2p_bandwidth": p2p_bandwidth,
+    "ps_throughput": ps_throughput,
+    "fully_connected": fully_connected,
+    "ring": ring,
+    "incast": incast,
+}
+
+#: benchmarks that run over the rpc fabric (honor cfg.transport)
+FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
+
+
 def run(cfg: BenchConfig) -> BenchStats:
-    return {"p2p_latency": p2p_latency,
-            "p2p_bandwidth": p2p_bandwidth,
-            "ps_throughput": ps_throughput,
-            "fully_connected": fully_connected}[cfg.benchmark](cfg)
+    return BENCHMARKS[cfg.benchmark](cfg)

@@ -186,6 +186,55 @@ def fc_rpcs_per_round(n_workers: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Ring / incast streaming families (the rpc fabric's two stream-shaped
+# traffic patterns; the rpc collective transport recovers these exact
+# rounds from its greedy edge coloring)
+# ---------------------------------------------------------------------------
+
+def ring_schedule(n: int, n_chunks: int = 1
+                  ) -> List[List[Tuple[int, int]]]:
+    """Rotation schedule for a chunked ring stream: ``n_chunks`` rounds
+    of the successor permutation i -> (i+1) % n. Every round is a full
+    permutation (unique sources AND destinations), so a ring moves one
+    chunk per worker per round regardless of n — including n == 2,
+    where the round degenerates to the swap (0,1),(1,0)."""
+    assert n >= 2, n
+    assert n_chunks >= 1, n_chunks
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    return [list(perm) for _ in range(n_chunks)]
+
+
+def incast_schedule(n_workers: int, *, server: int = 0,
+                    n_chunks: int = 1) -> List[List[Tuple[int, int]]]:
+    """Serialized incast rounds: workers 1..n_workers each stream
+    ``n_chunks`` chunks into one server endpoint. A single destination
+    admits one message per round (the ppermute / single-port
+    constraint), so the schedule is n_workers * n_chunks singleton
+    rounds, chunk-major. ``n_workers == 1`` degenerates to a plain
+    chunked P2P send."""
+    assert n_workers >= 1, n_workers
+    assert n_chunks >= 1, n_chunks
+    workers = [w for w in range(n_workers + 1) if w != server][:n_workers]
+    return [[(w, server)] for _ in range(n_chunks) for w in workers]
+
+
+def ring_fn(mesh: Mesh, n_buffers: int, n_workers: int, *,
+            n_chunks: int = 1, serialized: bool = False) -> Callable:
+    """One chunked ring pass: every worker streams to its successor."""
+    return permute_rounds_fn(mesh, n_buffers,
+                             ring_schedule(n_workers, n_chunks),
+                             serialized=serialized)
+
+
+def ring_rpcs_per_round(n_workers: int, n_chunks: int = 1) -> int:
+    return n_workers * n_chunks
+
+
+def incast_rpcs_per_round(n_workers: int, n_chunks: int = 1) -> int:
+    return n_workers * n_chunks
+
+
+# ---------------------------------------------------------------------------
 # Collective channels (the SPMD-native PS: FSDP pull/push, DESIGN §3.1)
 # ---------------------------------------------------------------------------
 

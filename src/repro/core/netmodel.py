@@ -94,18 +94,25 @@ class NetworkModel:
         return rpcs / self.ps_round_time(spec, n_ps, n_workers,
                                          serialized=serialized)
 
+    def egress_time(self, spec: PayloadSpec) -> float:
+        """Sender-side cost of pumping one payload onto the wire (alpha
+        and the RPC software overhead are charged at the receiver)."""
+        return spec.total_bytes / self.beta_Bps
+
     def fc_round_time(self, spec: PayloadSpec, n_workers: int, *,
                       serialized: bool = False) -> float:
         """One fully-connected exchange: every endpoint sends the
         payload to every other (n*(n-1) RPCs). Receiver-bound like the
-        PS round: each endpoint ingests n-1 RPCs serially on its
+        PS round — each endpoint ingests n-1 RPCs serially on its
         NIC/stack, with the same quadratic host-copy contention term
-        (zero for RDMA). Matches rpc.SimulatedTransport pricing."""
+        (zero for RDMA) — plus the endpoint's own n-1 payload egress.
+        Matches rpc.SimulatedTransport pricing."""
         per_rpc = (self.payload_time(spec, serialized=serialized)
                    + self.msg_time(64))
         contention = ((n_workers - 1) * (n_workers - 2)
                       * spec.total_bytes / self.cpu_copy_Bps)
-        return per_rpc * (n_workers - 1) + contention
+        egress = (n_workers - 1) * self.egress_time(spec)
+        return per_rpc * (n_workers - 1) + contention + egress
 
     def fc_throughput(self, spec: PayloadSpec, n_workers: int, *,
                       serialized: bool = False) -> float:
@@ -113,6 +120,67 @@ class NetworkModel:
         rpcs = n_workers * (n_workers - 1)
         return rpcs / self.fc_round_time(spec, n_workers,
                                          serialized=serialized)
+
+    def ring_round_time(self, spec: PayloadSpec, n_workers: int, *,
+                        n_chunks: int = 1,
+                        serialized: bool = False) -> float:
+        """One chunked ring pass: every worker streams n_chunks payload
+        chunks to its successor, all workers concurrently. Each node
+        ingests n_chunks messages from its predecessor (serial on its
+        NIC/stack, quadratic host-copy contention among them) while
+        pumping its own n_chunks chunks out — so ring time is
+        independent of the worker count, the signature of the pattern.
+        Matches rpc.SimulatedTransport pricing of rpc.ring_exchange
+        exactly (one flight, chunk-major)."""
+        del n_workers  # rings pipeline perfectly; kept for API symmetry
+        per_rpc = (self.payload_time(spec, serialized=serialized)
+                   + self.msg_time(64))
+        contention = (n_chunks * (n_chunks - 1)
+                      * spec.total_bytes / self.cpu_copy_Bps)
+        egress = n_chunks * self.egress_time(spec)
+        return per_rpc * n_chunks + contention + egress
+
+    def ring_throughput(self, spec: PayloadSpec, n_workers: int, *,
+                        n_chunks: int = 1,
+                        serialized: bool = False) -> float:
+        """Aggregate chunk-RPCs/s of the ring pass."""
+        rpcs = n_workers * n_chunks
+        return rpcs / self.ring_round_time(spec, n_workers,
+                                           n_chunks=n_chunks,
+                                           serialized=serialized)
+
+    def incast_round_time(self, spec: PayloadSpec, n_workers: int, *,
+                          n_chunks: int = 1,
+                          serialized: bool = False) -> float:
+        """The Cori-style PS hotspot: n_workers stream n_chunks payload
+        chunks each into ONE server, which answers every stream with a
+        payload-sized fetch response. Push half: the server ingests
+        n_workers * n_chunks messages serially with quadratic host-copy
+        contention (the classic incast cliff). Fetch half: the server's
+        own egress pump (n_workers * n_chunks payloads out) races each
+        worker's ingress of its n_chunks responses — without the egress
+        term the fan-out half would be free no matter how many workers
+        hang off the server. Matches rpc.SimulatedTransport pricing of
+        rpc.incast_exchange exactly (push flight + fetch flight)."""
+        per_rpc = (self.payload_time(spec, serialized=serialized)
+                   + self.msg_time(64))
+        k = n_workers * n_chunks
+        push = (per_rpc * k
+                + k * (k - 1) * spec.total_bytes / self.cpu_copy_Bps)
+        per_worker_fetch = (per_rpc * n_chunks
+                            + n_chunks * (n_chunks - 1)
+                            * spec.total_bytes / self.cpu_copy_Bps)
+        fetch = max(k * self.egress_time(spec), per_worker_fetch)
+        return push + fetch
+
+    def incast_throughput(self, spec: PayloadSpec, n_workers: int, *,
+                          n_chunks: int = 1,
+                          serialized: bool = False) -> float:
+        """Aggregate pushed chunk-RPCs/s of the incast round."""
+        rpcs = n_workers * n_chunks
+        return rpcs / self.incast_round_time(spec, n_workers,
+                                             n_chunks=n_chunks,
+                                             serialized=serialized)
 
 
 # fitted constants (benchmarks/calibrate.py; cluster A max err 2.7%,

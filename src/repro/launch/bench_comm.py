@@ -6,7 +6,7 @@ if "--xla_force_host_platform_device_count" not in \
                                " --xla_force_host_platform_device_count=8")
 
 """TF-gRPC-Bench CLI — the paper's Table 2, as flags, plus the
-rpc-fabric fully_connected family.
+rpc-fabric families (fully_connected / ring / incast).
 
   PYTHONPATH=src python -m repro.launch.bench_comm \
       --benchmark ps_throughput --num-ps 2 --num-workers 3 \
@@ -14,30 +14,181 @@ rpc-fabric fully_connected family.
       --warmup 2 --duration 10 [--network rdma_edr] [--arch qwen3-8b]
 
   PYTHONPATH=src python -m repro.launch.bench_comm \
-      --benchmark fully_connected --num-workers 4 --transport collective
+      --benchmark ring --num-workers 4 --stream-chunks 4 \
+      --transport collective
   PYTHONPATH=src python -m repro.launch.bench_comm \
-      --benchmark fully_connected --num-workers 64 --transport simulated
+      --benchmark incast --num-workers 64 --transport simulated
+
+  # cross-product sweep, one table (+ --json for machine-readable rows)
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --sweep scheme,transport --benchmark incast --num-workers 4 \
+      --warmup 0.2 --duration 0.5 --json incast_sweep.json
 
 --arch derives the payload from that architecture's parameter histogram
 instead of the S/M/L generator (core.payload.from_arch) and benchmarks
-THAT payload. --transport picks the rpc-fabric datapath for
-fully_connected: collective (measured ppermute), loopback (measured
+THAT payload. --transport picks the rpc-fabric datapath for the fabric
+families: collective (measured ppermute), loopback (measured
 shared-buffer memcpy), simulated (netmodel projection; endpoint counts
-far beyond the host device count).
+far beyond the host device count). --sweep takes a comma-separated list
+of axes (scheme, mode, transport, benchmark, network) and runs the full
+cross-product of their values in one invocation.
 """
 import argparse
+import json
+import sys
+from typing import List, Optional
+
+FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
+BENCHMARK_CHOICES = ("p2p_latency", "p2p_bandwidth", "ps_throughput",
+                     "fully_connected", "ring", "incast")
+TRANSPORT_CHOICES = ("collective", "loopback", "simulated")
+
+#: values an axis takes when swept (benchmark sweeps over the fabric
+#: families: the three paper benchmarks ignore --transport so crossing
+#: them with transports would repeat identical runs)
+SWEEP_AXES = {
+    "scheme": ("uniform", "random", "skew"),
+    "mode": ("non_serialized", "serialized"),
+    "transport": TRANSPORT_CHOICES,
+    "benchmark": FABRIC_BENCHMARKS,
+    "network": None,     # filled from netmodel.NETWORKS lazily
+}
 
 
-def main() -> None:
+def _metric(st) -> str:
+    return {"p2p_latency": "rtt_us", "p2p_bandwidth": "MBps"}.get(
+        st.name, "rpcs_per_s")
+
+
+def _effective_network(cfg) -> Optional[str]:
+    """The network model that actually priced the run: simulated cells
+    fall back to eth40g when --network is unset (bench._make_fabric),
+    and the report must say so rather than show a null."""
+    if cfg.benchmark in FABRIC_BENCHMARKS and cfg.transport == "simulated":
+        return cfg.network or "eth40g"
+    return cfg.network
+
+
+def _build_config(args, payload_spec, **overrides):
+    from repro.configs.tfgrpc_bench import BenchConfig
+    base = dict(
+        benchmark=args.benchmark, num_ps=args.num_ps,
+        num_workers=args.num_workers, mode=args.mode, scheme=args.scheme,
+        skew_bias=args.skew_bias, iovec_count=args.iovec_count,
+        small_bytes=args.small_bytes, medium_bytes=args.medium_bytes,
+        large_bytes=args.large_bytes,
+        categories=tuple(args.categories.split(",")),
+        warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
+        network=args.network, transport=args.transport,
+        stream_chunks=args.stream_chunks, payload_spec=payload_spec)
+    base.update(overrides)
+    return BenchConfig(**base)
+
+
+def _print_single(st, cfg, args) -> None:
+    scheme = st.spec.scheme
+    tail = "/" + cfg.skew_bias if scheme == "skew" else ""
+    extra = f", {cfg.transport}" if cfg.benchmark in FABRIC_BENCHMARKS \
+        else ""
+    print(f"benchmark      : {st.name} [{scheme}{tail}, {cfg.mode}"
+          f"{extra}]")
+    print(f"payload        : {st.spec.n_buffers} iovecs, "
+          f"{st.spec.total_bytes/1e6:.3f} MB")
+    projected = (cfg.benchmark in FABRIC_BENCHMARKS
+                 and cfg.transport == "simulated")
+    label = "net projected " if projected else "host measured "
+    if projected:
+        print(f"sim network    : {cfg.network or 'eth40g'}")
+    print(f"{label} : mean {st.mean_s*1e6:.1f} us  "
+          f"p50 {st.p50_s*1e6:.1f}  p95 {st.p95_s*1e6:.1f}  "
+          f"({st.n_iters} iters)")
+    for k, v in st.derived.items():
+        print(f"               : {k} = {v:.2f}")
+    if st.resources:
+        print(f"resources      : cpu_util {st.resources.cpu_util:.2f}  "
+              f"rss_peak {st.resources.rss_peak_bytes/1e6:.0f} MB")
+    nets = ([args.network] if args.network else
+            sorted(st.model_projection))
+    for n in nets:
+        unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s"}.get(
+            st.name, "RPC/s")
+        print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
+
+
+def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
+    """Run the cross-product of the swept axes' values; every cell is
+    one bench.run. Cells that cannot run in this environment (e.g. a
+    collective cell needing more devices than the host has) are
+    reported in the table rather than aborting the sweep."""
+    import itertools
+
+    from repro.core import bench
+    from repro.core.netmodel import NETWORKS
+
+    values = []
+    for ax in axes:
+        vals = SWEEP_AXES[ax]
+        if ax == "network":
+            vals = tuple(sorted(NETWORKS))
+        values.append([(ax, v) for v in vals])
+    rows = []
+    for combo in itertools.product(*values):
+        overrides = dict(combo)
+        cfg = _build_config(args, payload_spec, **overrides)
+        row = {"benchmark": cfg.benchmark, "scheme": cfg.scheme,
+               "mode": cfg.mode, "network": _effective_network(cfg)}
+        if cfg.benchmark in FABRIC_BENCHMARKS:
+            row["transport"] = cfg.transport
+        try:
+            st = bench.run(cfg)
+        except (RuntimeError, ValueError) as e:
+            row.update(error=str(e).split(";")[0])
+            rows.append(row)
+            continue
+        m = _metric(st)
+        row.update(mean_us=st.mean_s * 1e6, p95_us=st.p95_s * 1e6,
+                   n_iters=st.n_iters, metric=m,
+                   value=st.derived.get(m, st.derived.get("rpcs_per_s")))
+        rows.append(row)
+    return rows
+
+
+def _print_sweep(rows: List[dict]) -> None:
+    cols = ["benchmark", "scheme", "mode", "transport", "network",
+            "mean_us", "metric", "value"]
+    widths = {c: max(len(c), *(len(_cell(r, c)) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    print("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        if "error" in r:
+            line = "  ".join(_cell(r, c).ljust(widths[c])
+                             for c in cols[:5])
+            print(f"{line}  SKIPPED: {r['error']}")
+        else:
+            print("  ".join(_cell(r, c).ljust(widths[c]) for c in cols))
+
+
+def _cell(row: dict, col: str) -> str:
+    v = row.get(col)
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="TF-gRPC-Bench micro-benchmark suite (paper Table 2)")
     ap.add_argument("--benchmark", default="p2p_latency",
-                    choices=["p2p_latency", "p2p_bandwidth",
-                             "ps_throughput", "fully_connected"])
+                    choices=list(BENCHMARK_CHOICES))
     ap.add_argument("--num-ps", type=int, default=1)
     ap.add_argument("--num-workers", type=int, default=1)
     ap.add_argument("--transport", default="collective",
-                    choices=["collective", "loopback", "simulated"])
+                    choices=list(TRANSPORT_CHOICES))
+    ap.add_argument("--stream-chunks", type=int, default=4,
+                    help="chunks per stream (ring/incast families)")
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
     ap.add_argument("--scheme", default="uniform",
@@ -56,9 +207,39 @@ def main() -> None:
                     help="print only this network's projection")
     ap.add_argument("--arch", default=None,
                     help="payload from this arch's parameter histogram")
-    args = ap.parse_args()
+    ap.add_argument("--sweep", default=None, metavar="AXES",
+                    help="comma-separated axes to cross-product in one "
+                         f"run: {','.join(SWEEP_AXES)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as JSON "
+                         "('-' for stdout)")
+    args = ap.parse_args(argv)
 
-    from repro.configs.tfgrpc_bench import BenchConfig
+    # --categories: validate against the payload generator's known
+    # buffer categories instead of silently generating from nothing
+    from repro.core.payload import CATEGORIES
+    cats = tuple(c for c in args.categories.split(",") if c)
+    unknown = [c for c in cats if c not in CATEGORIES]
+    if unknown or not cats:
+        ap.error(f"--categories: unknown categor"
+                 f"{'y' if len(unknown) == 1 else 'ies'} "
+                 f"{', '.join(repr(c) for c in unknown) or '(empty)'}; "
+                 f"choose from {', '.join(CATEGORIES)}")
+    args.categories = ",".join(cats)
+
+    axes = None
+    if args.sweep is not None:
+        axes = [a.strip() for a in args.sweep.split(",") if a.strip()]
+        bad = [a for a in axes if a not in SWEEP_AXES]
+        if bad or not axes:
+            ap.error(f"--sweep: unknown axes {bad or '(empty)'}; choose "
+                     f"from {', '.join(SWEEP_AXES)}")
+        if "transport" in axes and "benchmark" not in axes \
+                and args.benchmark not in FABRIC_BENCHMARKS:
+            ap.error(f"--sweep transport needs a fabric benchmark "
+                     f"({', '.join(FABRIC_BENCHMARKS)}); "
+                     f"got --benchmark {args.benchmark}")
+
     from repro.core import bench
 
     payload_spec = None
@@ -70,46 +251,30 @@ def main() -> None:
               f"buffers, {payload_spec.total_bytes/1e6:.2f} MB "
               f"({', '.join(payload_spec.categories)})")
 
-    cfg = BenchConfig(
-        benchmark=args.benchmark, num_ps=args.num_ps,
-        num_workers=args.num_workers, mode=args.mode, scheme=args.scheme,
-        skew_bias=args.skew_bias, iovec_count=args.iovec_count,
-        small_bytes=args.small_bytes, medium_bytes=args.medium_bytes,
-        large_bytes=args.large_bytes,
-        categories=tuple(args.categories.split(",")),
-        warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
-        network=args.network, transport=args.transport,
-        payload_spec=payload_spec)
-
-    st = bench.run(cfg)
-    scheme = st.spec.scheme
-    tail = "/" + cfg.skew_bias if scheme == "skew" else ""
-    extra = f", {cfg.transport}" if cfg.benchmark == "fully_connected" \
-        else ""
-    print(f"benchmark      : {st.name} [{scheme}{tail}, {cfg.mode}"
-          f"{extra}]")
-    print(f"payload        : {st.spec.n_buffers} iovecs, "
-          f"{st.spec.total_bytes/1e6:.3f} MB")
-    projected = (cfg.benchmark == "fully_connected"
-                 and cfg.transport == "simulated")
-    label = "net projected " if projected else "host measured "
-    if projected:
-        print(f"sim network    : {cfg.network or 'eth40g'}")
-    print(f"{label} : mean {st.mean_s*1e6:.1f} us  "
-          f"p50 {st.p50_s*1e6:.1f}  p95 {st.p95_s*1e6:.1f}  "
-          f"({st.n_iters} iters)")
-    for k, v in st.derived.items():
-        print(f"               : {k} = {v:.2f}")
-    if st.resources:
-        print(f"resources      : cpu_util {st.resources.cpu_util:.2f}  "
-              f"rss_peak {st.resources.rss_peak_bytes/1e6:.0f} MB")
-    nets = ([args.network] if args.network else
-            sorted(st.model_projection))
-    for n in nets:
-        unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s",
-                "ps_throughput": "RPC/s",
-                "fully_connected": "RPC/s"}[st.name]
-        print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
+    if axes is not None:
+        rows = run_sweep(args, axes, payload_spec)
+        _print_sweep(rows)
+    else:
+        cfg = _build_config(args, payload_spec)
+        st = bench.run(cfg)
+        _print_single(st, cfg, args)
+        m = _metric(st)
+        rows = [{"benchmark": st.name, "scheme": st.spec.scheme,
+                 "mode": cfg.mode, "transport": cfg.transport,
+                 "network": _effective_network(cfg),
+                 "mean_us": st.mean_s * 1e6,
+                 "p95_us": st.p95_s * 1e6, "n_iters": st.n_iters,
+                 "metric": m,
+                 "value": st.derived.get(m,
+                                         st.derived.get("rpcs_per_s"))}]
+    if args.json:
+        text = json.dumps(rows, indent=2)
+        if args.json == "-":
+            sys.stdout.write(text + "\n")
+        else:
+            with open(args.json, "w") as f:
+                f.write(text + "\n")
+            print(f"wrote {len(rows)} row(s) to {args.json}")
 
 
 if __name__ == "__main__":

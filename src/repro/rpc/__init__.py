@@ -2,36 +2,43 @@
 
 Layers, bottom-up:
 
-  framing     wire format; serialized mode coalesces iovecs through the
-              payload_pack Pallas kernel
-  flow        credit-based flow control (per-channel windows)
+  framing     wire format (unary + stream-chunk frames); serialized mode
+              coalesces iovecs through the payload_pack Pallas kernel
+  flow        credit-based flow control (per-channel, per-direction
+              windows; ChunkGate FIFO for stream chunks)
   completion  completion-queue event loop primitive
   transport   pluggable Transports: loopback (shared-buffer memcpy),
-              simulated (netmodel-priced, hundreds of endpoints)
+              simulated (netmodel-priced ingress+egress, hundreds of
+              endpoints)
   collective  transport lowering flights onto core.channels ppermute
               schedules (measured on real devices)
-  fabric      Channel/Server API, unary + streaming calls, flush loop
+  fabric      Channel/Server API, unary + client/server/bidi streaming
+              calls, flush loop; fully_connected/ring/incast exchanges
 
 See docs/RPC.md for the architecture and transport matrix.
 """
 from repro.rpc.completion import CompletionQueue, Event
-from repro.rpc.fabric import (Call, Channel, FlightReport, RpcError,
-                              RpcFabric, Server, fully_connected_exchange)
-from repro.rpc.flow import CreditWindow, FlowStats
+from repro.rpc.fabric import (BidiStream, Call, Channel, FlightReport,
+                              RpcError, RpcFabric, Server, ServerStream,
+                              StreamHandle, fully_connected_exchange,
+                              incast_exchange, ring_exchange)
+from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats
 from repro.rpc.framing import (FLAG_ERROR, FLAG_ONE_WAY, FLAG_REPLY,
                                FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, Frame, decode, encode,
-                               make_frame, method_id)
+                               make_frame, method_id, stream_chunk)
 from repro.rpc.transport import (Delivery, LoopbackTransport, Message,
                                  SimulatedTransport, Transport,
                                  schedule_rounds, spec_of)
 
 __all__ = [
-    "Call", "Channel", "CompletionQueue", "CreditWindow", "Delivery",
-    "Event", "FlightReport", "FlowStats", "Frame", "LoopbackTransport",
-    "Message", "RpcError", "RpcFabric", "Server", "SimulatedTransport",
+    "BidiStream", "Call", "Channel", "ChunkGate", "CompletionQueue",
+    "CreditWindow", "Delivery", "Event", "FlightReport", "FlowStats",
+    "Frame", "LoopbackTransport", "Message", "RpcError", "RpcFabric",
+    "Server", "ServerStream", "SimulatedTransport", "StreamHandle",
     "Transport", "decode", "encode", "fully_connected_exchange",
-    "make_frame", "method_id", "schedule_rounds", "spec_of",
+    "incast_exchange", "make_frame", "method_id", "ring_exchange",
+    "schedule_rounds", "spec_of", "stream_chunk",
     "FLAG_ERROR", "FLAG_ONE_WAY", "FLAG_REPLY", "FLAG_SERIALIZED",
     "FLAG_STREAM", "FLAG_STREAM_END",
 ]

@@ -15,6 +15,7 @@ from typing import Any, Deque, List, Optional
 class Event:
     tag: int                # call_id (or flight id for transport events)
     kind: str               # "sent" | "received" | "replied" | "error"
+                            # | "stream_chunk" | "stream_end"
     ok: bool = True
     payload: Any = None     # usually a framing.Frame
     elapsed_s: float = 0.0

@@ -4,16 +4,28 @@ Client side                         Server side
 -----------                         -----------
 fabric.channel(src, dst)            fabric.add_server(endpoint)
   .call(method, bufs)    ->flight->   server.register(method, handler)
-  .stream(method, [bufs...])          handler(bufs) -> reply bufs
+  .stream(method, [bufs...])          …register(…, streaming=True)
+  .server_stream(method, bufs)        …register_server_stream(m, h)
+  .bidi_stream(method, [chunks])      …register_bidi(m, h)
+
+Four call cardinalities: unary (1 request -> 1 reply), client-streaming
+(N chunks -> 1 reply), server-streaming (1 request -> N chunks), bidi
+(N chunks <-> M chunks). Response-streaming calls return a
+:class:`ServerStream` / :class:`BidiStream` handle instead of a Call;
+delivered chunks land in ``handle.chunks`` and push ``stream_chunk`` /
+``stream_end`` events onto the completion queue.
 
 Calls are buffered and moved in *flights* by ``flush()`` — the event
-loop. One flush: admit calls the credit window allows, deliver them
-through the transport (edge-colored into rounds), dispatch delivered
-frames to endpoint servers, send replies back (a second flight), grant
-credits, resolve futures, and push an :class:`completion.Event` per
-completion. ``flush`` loops until the backlog drains, so a burst larger
-than the flow-control window simply takes several flights — the stall
-count in ``Channel.window.stats`` records the back-pressure.
+loop. One flush: admit frames the per-direction credit windows allow,
+deliver them through the transport (edge-colored into rounds), dispatch
+delivered frames to endpoint servers, send plain replies back (a second
+flight), queue server->client stream chunks behind the *reverse* window
+(``Channel.rwindow`` via its :class:`flow.ChunkGate`), grant credits,
+resolve futures, and push an :class:`completion.Event` per completion.
+``flush`` loops until the backlog and every chunk gate drain, so a
+burst larger than a flow-control window simply takes several flights —
+the stall counts in ``Channel.window.stats`` / ``rwindow.stats`` record
+the back-pressure per direction.
 
 Transports with ``dispatches=False`` (the collective transport) are pure
 exchange datapaths: delivery itself completes the call and the reply
@@ -29,7 +41,7 @@ import numpy as np
 
 from repro.rpc import framing
 from repro.rpc.completion import CompletionQueue, Event
-from repro.rpc.flow import CreditWindow
+from repro.rpc.flow import ChunkGate, CreditWindow
 from repro.rpc.transport import Message, Transport
 
 
@@ -66,73 +78,206 @@ class Call:
 
 Handler = Callable[[List[np.ndarray]], Optional[List[np.ndarray]]]
 
+# method cardinalities
+UNARY = "unary"                    # 1 request frame  -> 1 reply frame
+CLIENT_STREAM = "client_stream"    # N chunks -> 1 reply after END
+SERVER_STREAM = "server_stream"    # 1 request -> N reply chunks
+BIDI = "bidi"                      # N chunks <-> M reply chunks
+
+# a stream-chunk payload a handler may return: real buffers, or a bare
+# tuple of sizes for a spec-only chunk (modeled transports)
+ChunkPayload = object
+
+
+def _error_reply(frame: framing.Frame, msg: str) -> framing.Frame:
+    return frame.reply([np.frombuffer(msg.encode(), dtype=np.uint8)
+                        .copy()], error=True)
+
+
+def _chunk_frames(frame: framing.Frame, chunks: Sequence[ChunkPayload],
+                  *, seq0: int = 0, close: bool = False
+                  ) -> List[framing.Frame]:
+    """Server->client chunk frames for handler output. An empty output
+    with ``close`` becomes one bare END trailer so the client still sees
+    the stream finish."""
+    out: List[framing.Frame] = []
+    for i, c in enumerate(chunks):
+        end = close and i == len(chunks) - 1
+        if isinstance(c, tuple):     # spec-only: sizes, no bytes
+            out.append(frame.reply_chunk(None, seq=seq0 + i, end=end,
+                                         sizes=c))
+        else:
+            out.append(frame.reply_chunk(list(c), seq=seq0 + i, end=end))
+    if close and not out:
+        out.append(frame.reply_chunk(None, seq=seq0, end=True))
+    return out
+
 
 class Server:
-    """Per-endpoint method table. Streaming methods receive the
-    concatenated buffer lists of every frame in the stream."""
+    """Per-endpoint method table. Client-streaming methods receive the
+    concatenated buffer lists of every frame in the stream;
+    server-streaming handlers return an iterable of chunk buffer lists;
+    bidi handlers are called once per incoming chunk (with an ``end``
+    flag) and return 0..M reply chunks each."""
 
     def __init__(self, endpoint: int):
         self.endpoint = endpoint
-        self._methods: Dict[int, Tuple[str, Handler, bool]] = {}
+        self._methods: Dict[int, Tuple[str, Callable, str]] = {}
         self._streams: Dict[int, List[List[np.ndarray]]] = {}
+        self._bidi_seq: Dict[int, int] = {}
         self.calls_served = 0
 
-    def register(self, name: str, handler: Handler, *,
-                 streaming: bool = False) -> None:
-        self._methods[framing.method_id(name)] = (name, handler, streaming)
+    def register(self, name: str, handler: Callable, *,
+                 streaming: bool = False, kind: Optional[str] = None
+                 ) -> None:
+        kind = kind or (CLIENT_STREAM if streaming else UNARY)
+        assert kind in (UNARY, CLIENT_STREAM, SERVER_STREAM, BIDI), kind
+        self._methods[framing.method_id(name)] = (name, handler, kind)
 
-    def dispatch(self, frame: framing.Frame) -> Optional[framing.Frame]:
-        """Handle one delivered frame; return the reply frame (None for
-        one-way calls and non-final stream chunks)."""
+    def register_server_stream(self, name: str, handler: Callable) -> None:
+        """handler(request_bufs) -> iterable of reply chunks."""
+        self.register(name, handler, kind=SERVER_STREAM)
+
+    def register_bidi(self, name: str, handler: Callable) -> None:
+        """handler(chunk_bufs, end: bool) -> iterable of reply chunks
+        (or None). Called once per incoming chunk; the reply chunks
+        produced for the END chunk close the server's direction."""
+        self.register(name, handler, kind=BIDI)
+
+    def _fault(self, frame: framing.Frame, name: str, e: Exception
+               ) -> List[framing.Frame]:
+        self._streams.pop(frame.call_id, None)
+        self._bidi_seq.pop(frame.call_id, None)
+        return [_error_reply(frame, f"{name}: {e}")]
+
+    def dispatch(self, frame: framing.Frame) -> List[framing.Frame]:
+        """Handle one delivered frame; return the outgoing frames: plain
+        replies (no FLAG_STREAM) and/or server->client stream chunks.
+        Empty for one-way calls and non-final client-stream chunks."""
         entry = self._methods.get(frame.method)
         if entry is None:
-            return frame.reply(
-                [np.frombuffer(b"unimplemented", dtype=np.uint8).copy()],
-                error=True)
-        name, handler, streaming = entry
-        is_stream = bool(frame.flags & framing.FLAG_STREAM)
-        if is_stream != streaming:
-            want = "streaming" if streaming else "unary"
+            return [_error_reply(frame, "unimplemented")]
+        name, handler, kind = entry
+        is_stream = frame.is_stream
+        if is_stream != (kind in (CLIENT_STREAM, BIDI)):
             got = "streaming" if is_stream else "unary"
-            msg = f"{name}: cardinality mismatch ({got} call to {want} " \
-                  f"method)".encode()
             self._streams.pop(frame.call_id, None)
-            return frame.reply(
-                [np.frombuffer(msg, dtype=np.uint8).copy()], error=True)
-        if is_stream:
+            return [_error_reply(
+                frame, f"{name}: cardinality mismatch ({got} call to "
+                       f"{kind} method)")]
+
+        if kind == BIDI:
+            end = frame.stream_end
+            try:
+                outs = handler(frame.bufs or [], end) or []
+            except Exception as e:  # noqa: BLE001 — fault -> RPC error
+                return self._fault(frame, name, e)
+            seq0 = self._bidi_seq.get(frame.call_id, 0)
+            frames = _chunk_frames(frame, list(outs), seq0=seq0,
+                                   close=end)
+            self._bidi_seq[frame.call_id] = seq0 + len(frames)
+            if end:
+                del self._bidi_seq[frame.call_id]
+                self.calls_served += 1
+            return frames
+
+        if kind == CLIENT_STREAM:
             chunks = self._streams.setdefault(frame.call_id, [])
             chunks.append(frame.bufs or [])
-            if not frame.flags & framing.FLAG_STREAM_END:
-                return None
+            if not frame.stream_end:
+                return []
             del self._streams[frame.call_id]
             request = [b for bufs in chunks for b in bufs]
         else:
             request = frame.bufs or []
+
         try:
             reply = handler(request)
         except Exception as e:  # noqa: BLE001 — handler fault -> RPC error
-            msg = f"{name}: {e}".encode()
-            return frame.reply(
-                [np.frombuffer(msg, dtype=np.uint8).copy()], error=True)
+            return self._fault(frame, name, e)
         self.calls_served += 1
+
+        if kind == SERVER_STREAM:
+            return _chunk_frames(frame, list(reply or []), close=True)
         if frame.one_way:
-            return None
+            return []
         if reply is None:
             reply = [np.zeros(1, dtype=np.uint8)]
-        return frame.reply([np.ascontiguousarray(r, dtype=np.uint8)
-                            .reshape(-1) for r in reply])
+        return [frame.reply([np.ascontiguousarray(r, dtype=np.uint8)
+                             .reshape(-1) for r in reply])]
+
+
+class StreamHandle:
+    """Client-side handle for a call whose response is a chunk stream
+    (server-streaming or bidi). Driven by the completion queue: every
+    delivered chunk pushes a ``stream_chunk`` event and lands in
+    ``chunks``; END pushes ``stream_end`` and sets ``done``."""
+
+    def __init__(self, channel: "Channel", call_id: int, method: str):
+        self.channel = channel
+        self.call_id = call_id
+        self.method = method
+        self.chunks: List[List[np.ndarray]] = []
+        self.done = False
+        self.error: Optional[str] = None
+
+    @property
+    def dst(self) -> int:
+        return self.channel.dst
+
+    def chunk_bufs(self) -> List[List[np.ndarray]]:
+        assert self.done, "stream not complete — fabric.flush() first"
+        if self.error is not None:
+            raise RpcError(self.error)
+        return self.chunks
+
+
+class ServerStream(StreamHandle):
+    """One request out, N chunks back."""
+
+
+class BidiStream(StreamHandle):
+    """Chunks both ways. ``send`` queues an outgoing chunk behind the
+    channel's forward window; ``close`` (or ``send(..., end=True)``)
+    ends the client's direction. The server's chunks accumulate in
+    ``chunks`` and its END completes the handle."""
+
+    def __init__(self, channel: "Channel", call_id: int, method: str):
+        super().__init__(channel, call_id, method)
+        self._seq = 0
+        self.closed = False
+
+    def send(self, bufs: Optional[List[np.ndarray]], *,
+             sizes: Optional[Sequence[int]] = None,
+             end: bool = False) -> None:
+        assert not self.closed, "bidi stream already closed"
+        frame = framing.stream_chunk(
+            self.call_id, self.method, bufs, seq=self._seq, end=end,
+            serialized=self.channel.serialized, sizes=sizes)
+        self._seq += 1
+        self.closed = end
+        self.channel.fabric.submit_raw(self.channel, frame)
+
+    def close(self) -> None:
+        """End the client direction with a bare END trailer."""
+        self.send(None, end=True)
 
 
 class Channel:
-    """A (src -> dst) flow with its own credit window."""
+    """A (src -> dst) flow with one credit window per direction:
+    ``window`` gates client->server frames, ``rwindow`` (behind
+    ``rx_gate``) gates server->client stream chunks."""
 
     def __init__(self, fabric: "RpcFabric", src: int, dst: int, *,
                  serialized: bool = False,
-                 window: Optional[CreditWindow] = None):
+                 window: Optional[CreditWindow] = None,
+                 rwindow: Optional[CreditWindow] = None):
         self.fabric = fabric
         self.src, self.dst = src, dst
         self.serialized = serialized
         self.window = window or CreditWindow()
+        self.rwindow = rwindow or CreditWindow()
+        self.rx_gate = ChunkGate(self.rwindow)
         self.backlogged = 0      # messages queued behind the window
 
     def call(self, method: str, bufs: Optional[List[np.ndarray]], *,
@@ -144,20 +289,52 @@ class Channel:
         return self.fabric.submit(self, frame, method)
 
     def stream(self, method: str,
-               chunks: Sequence[List[np.ndarray]]) -> Call:
-        """Client-streaming call: N data frames, one reply after END."""
-        assert len(chunks) >= 1
+               chunks: Sequence[List[np.ndarray]], *,
+               one_way: bool = False,
+               sizes: Optional[Sequence[int]] = None) -> Call:
+        """Client-streaming call: N data frames, one reply after END
+        (none when one-way). ``sizes`` sends spec-only chunks of that
+        size list instead of real buffers."""
+        assert len(chunks) >= 1 or sizes is not None
         cid = self.fabric.next_call_id()
-        last = len(chunks) - 1
+        n = len(chunks) if chunks else 1
         call: Optional[Call] = None
-        for i, bufs in enumerate(chunks):
-            frame = framing.make_frame(
-                cid, method, bufs, serialized=self.serialized,
-                stream=True, stream_end=(i == last))
+        for i in range(n):
+            bufs = chunks[i] if chunks else None
+            frame = framing.stream_chunk(
+                cid, method, bufs, seq=i, end=(i == n - 1),
+                serialized=self.serialized, one_way=one_way,
+                sizes=sizes if bufs is None else None)
             c = self.fabric.submit(self, frame, method)
-            call = c if i == last else call
+            call = c if i == n - 1 else call
         assert call is not None
         return call
+
+    def server_stream(self, method: str,
+                      bufs: Optional[List[np.ndarray]], *,
+                      sizes: Optional[Sequence[int]] = None
+                      ) -> ServerStream:
+        """Server-streaming call: one request frame, chunked response."""
+        cid = self.fabric.next_call_id()
+        handle = ServerStream(self, cid, method)
+        self.fabric.register_handle(handle)
+        frame = framing.make_frame(cid, method, bufs, sizes=sizes,
+                                   serialized=self.serialized)
+        self.fabric.submit_raw(self, frame)
+        return handle
+
+    def bidi_stream(self, method: str,
+                    chunks: Optional[Sequence[List[np.ndarray]]] = None
+                    ) -> BidiStream:
+        """Bidirectional stream. With ``chunks`` everything is sent and
+        the client direction closed; without, use ``send``/``close``."""
+        handle = BidiStream(self, self.fabric.next_call_id(), method)
+        self.fabric.register_handle(handle)
+        if chunks is not None:
+            assert len(chunks) >= 1
+            for i, bufs in enumerate(chunks):
+                handle.send(bufs, end=(i == len(chunks) - 1))
+        return handle
 
 
 @dataclass
@@ -181,6 +358,7 @@ class RpcFabric:
         self.cq = CompletionQueue()
         self.servers: Dict[int, Server] = {}
         self._calls: Dict[int, Call] = {}
+        self._handles: Dict[int, StreamHandle] = {}
         self._channels: Dict[Tuple[int, int, bool], Channel] = {}
         self._pending: List[Tuple[Channel, Message]] = []
         self._backlog: List[Tuple[Channel, Message]] = []
@@ -206,7 +384,9 @@ class RpcFabric:
         if key not in self._channels:
             self._channels[key] = Channel(
                 self, src, dst, serialized=serialized,
-                window=CreditWindow(self.window_bytes, self.window_msgs))
+                window=CreditWindow(self.window_bytes, self.window_msgs),
+                rwindow=CreditWindow(self.window_bytes,
+                                     self.window_msgs))
         return self._channels[key]
 
     def add_server(self, endpoint: int) -> Server:
@@ -220,6 +400,13 @@ class RpcFabric:
                method: str) -> Call:
         call = Call(frame.call_id, method, channel.dst)
         self._calls[frame.call_id] = call
+        self.submit_raw(channel, frame)
+        return call
+
+    def submit_raw(self, channel: Channel, frame: framing.Frame) -> None:
+        """Queue a client->server frame behind the forward window
+        without creating a Call future (stream chunks are tracked
+        through their StreamHandle instead)."""
         msg = Message(channel.src, channel.dst, frame)
         # FIFO per channel: once anything is backlogged, later messages
         # queue behind it even if they would fit — a stream's END chunk
@@ -234,7 +421,9 @@ class RpcFabric:
                 channel.window.stats.stalled += 1
             channel.backlogged += 1
             self._backlog.append((channel, msg))
-        return call
+
+    def register_handle(self, handle: StreamHandle) -> None:
+        self._handles[handle.call_id] = handle
 
     def _complete(self, call: Call, frame: Optional[framing.Frame],
                   kind: str, error: Optional[str] = None) -> None:
@@ -244,20 +433,59 @@ class RpcFabric:
         # the caller holds the Call object; the fabric is done with it
         self._calls.pop(call.call_id, None)
 
+    def _finish_handle(self, handle: StreamHandle,
+                       error: Optional[str] = None) -> None:
+        handle.done, handle.error = True, error
+        self.cq.push(Event(handle.call_id,
+                           "error" if error else "stream_end",
+                           ok=error is None))
+        self._handles.pop(handle.call_id, None)
+
     def _grant(self, msg: Message) -> None:
         ch = self._channels.get((msg.src, msg.dst, msg.frame.serialized))
         if ch is not None:
             ch.window.grant(msg.frame.total_bytes)
 
+    def _offer_chunk(self, channel: Channel, frame: framing.Frame
+                     ) -> None:
+        """Queue one server->client stream chunk behind the channel's
+        reverse window; admitted chunks join the next flight."""
+        msg = Message(channel.dst, channel.src, frame)
+        self._pending.extend((channel, m) for m in
+                             channel.rx_gate.offer(msg,
+                                                   frame.total_bytes))
+
+    def _on_client_chunk(self, m: Message) -> None:
+        """A server->client stream chunk was delivered: hand it to the
+        handle, return the reverse-window credits (the client consumed
+        it), and complete the handle on END."""
+        ch = self._channels.get((m.dst, m.src, m.frame.serialized))
+        if ch is not None:
+            ch.rx_gate.grant(m.frame.total_bytes)
+        handle = self._handles.get(m.frame.call_id)
+        if handle is None or handle.done:
+            return
+        if m.frame.n_buffers or not m.frame.stream_end:
+            # bare END trailers carry no payload chunk
+            handle.chunks.append(m.frame.bufs
+                                 if m.frame.bufs is not None
+                                 else list(m.frame.sizes))
+            self.cq.push(Event(m.frame.call_id, "stream_chunk",
+                               payload=_spec_only(m.frame)))
+        if m.frame.stream_end:
+            self._finish_handle(handle)
+
     def flush(self) -> FlightReport:
-        """Drive the event loop until every submitted call completes."""
+        """Drive the event loop until every submitted call completes and
+        every open response stream drains."""
         rep = FlightReport(modeled=self.transport.modeled)
         t0 = time.perf_counter()
-        while self._pending or self._backlog:
+        while self._pending or self._backlog or self._gated_chunks():
             if not self._pending:
-                # admit backlog as credits allow; at least one must fit
-                # or the window is simply too small for the message
-                admitted = self._admit_backlog(force_one=True)
+                # admit as credits allow; at least one must move or the
+                # window is simply too small for the message
+                admitted = (self._admit_backlog(force_one=True)
+                            or self._pump_gates(force_one=True))
                 assert admitted, "flow-control deadlock"
             flight = self._pending
             self._pending = []
@@ -268,33 +496,52 @@ class RpcFabric:
             rep.elapsed_s += delivery.elapsed_s
             replies: List[Message] = []
             for m in delivery.messages:
+                if m.frame.is_reply:
+                    # server->client stream chunk riding a main flight
+                    self._on_client_chunk(m)
+                    continue
                 call = self._calls.get(m.frame.call_id)
+                handle = self._handles.get(m.frame.call_id)
                 if not self.transport.dispatches:
                     # exchange datapath: delivery IS completion
                     self._grant(m)
                     if call is not None and not call.done:
                         self._complete(call, m.frame, "sent")
+                    if handle is not None and m.frame.stream_end:
+                        self._finish_handle(handle)
                     continue
                 srv = self.servers.get(m.dst)
                 if srv is None:
                     self._grant(m)
+                    err = f"no server at endpoint {m.dst}"
                     if call is not None and not call.done:
-                        self._complete(call, None, "error",
-                                       error=f"no server at endpoint "
-                                             f"{m.dst}")
+                        self._complete(call, None, "error", error=err)
+                    if handle is not None and not handle.done:
+                        self._finish_handle(handle, error=err)
                     continue
-                reply = srv.dispatch(m.frame)
+                outs = srv.dispatch(m.frame)
                 self.cq.push(Event(m.frame.call_id, "received",
                                    payload=_spec_only(m.frame)))
-                if reply is None:
+                plain = [o for o in outs if not o.is_stream]
+                chunks = [o for o in outs if o.is_stream]
+                if plain:
+                    # request credits return when the reply lands
+                    self._awaiting_grant.setdefault(m.frame.call_id,
+                                                    []).append(m)
+                    replies.extend(Message(m.dst, m.src, o)
+                                   for o in plain)
+                else:
+                    # stream-kind input (or one-way): receipt is
+                    # consumption — forward credits return now
                     self._grant(m)
                     if call is not None and m.frame.one_way \
                             and not call.done:
                         self._complete(call, None, "sent")
-                    continue
-                self._awaiting_grant.setdefault(m.frame.call_id,
-                                                []).append(m)
-                replies.append(Message(m.dst, m.src, reply))
+                for o in chunks:
+                    ch = self._channels.get((m.src, m.dst,
+                                             m.frame.serialized))
+                    assert ch is not None
+                    self._offer_chunk(ch, o)
             if replies:
                 rdel = self.transport.deliver(replies)
                 rep.flights += 1
@@ -308,18 +555,42 @@ class RpcFabric:
                         self._grant(reqs.pop(0))
                         if not reqs:
                             del self._awaiting_grant[m.frame.call_id]
+                    is_err = bool(m.frame.flags & framing.FLAG_ERROR)
+                    err = None
+                    if is_err:
+                        err = bytes(m.frame.bufs[0]).decode(
+                            errors="replace") if m.frame.bufs else "error"
+                    handle = self._handles.get(m.frame.call_id)
+                    if handle is not None and not handle.done:
+                        # stream request answered with a plain (error)
+                        # reply — fail the handle
+                        self._finish_handle(handle,
+                                            error=err or "protocol error")
                     call = self._calls.get(m.frame.call_id)
                     if call is None or call.done:
                         continue
-                    if m.frame.flags & framing.FLAG_ERROR:
-                        err = bytes(m.frame.bufs[0]).decode(
-                            errors="replace") if m.frame.bufs else "error"
+                    if is_err:
                         self._complete(call, m.frame, "error", error=err)
                     else:
                         self._complete(call, m.frame, "replied")
             self._admit_backlog()
+            self._pump_gates()
         rep.wall_s = time.perf_counter() - t0
         return rep
+
+    def _gated_chunks(self) -> int:
+        return sum(len(ch.rx_gate) for ch in self._channels.values())
+
+    def _pump_gates(self, force_one: bool = False) -> int:
+        """Re-admit reverse-window-stalled chunks after credit grants."""
+        admitted = 0
+        for ch in self._channels.values():
+            if not len(ch.rx_gate):
+                continue
+            msgs = ch.rx_gate.pump(force_one=force_one and not admitted)
+            self._pending.extend((ch, m) for m in msgs)
+            admitted += len(msgs)
+        return admitted
 
     def _admit_backlog(self, force_one: bool = False) -> int:
         admitted, rest = 0, []
@@ -349,8 +620,9 @@ class RpcFabric:
 
 
 # ---------------------------------------------------------------------------
-# benchmark driver: the fully-connected exchange (paper §2's
-# every-worker-to-every-worker process architecture)
+# benchmark drivers: the fully-connected / ring / incast exchanges over
+# one fabric (paper §2's process architecture beyond the 3 fixed
+# benchmarks)
 # ---------------------------------------------------------------------------
 
 def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
@@ -372,3 +644,65 @@ def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                 "exchange", bufs,
                 sizes=sizes if bufs is None else None, one_way=True)
     return fabric.flush()
+
+
+def ring_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
+                  n_chunks: int = 1,
+                  bufs: Optional[List[np.ndarray]] = None,
+                  serialized: bool = False) -> FlightReport:
+    """Every worker streams ``n_chunks`` payload chunks to its
+    successor (i -> (i+1) % n): n one-way client-streams, submitted
+    chunk-major so the transport's edge coloring recovers exactly
+    ``channels.ring_schedule(n, n_chunks)`` — n_chunks rotation
+    rounds."""
+    n = fabric.n_endpoints
+    assert n >= 2, n
+    assert n_chunks >= 1, n_chunks
+    if fabric.transport.dispatches:
+        for e in range(n):
+            if e not in fabric.servers:
+                fabric.add_server(e).register("ring", lambda req: None,
+                                              streaming=True)
+    cids = [fabric.next_call_id() for _ in range(n)]
+    for c in range(n_chunks):
+        for i in range(n):
+            frame = framing.stream_chunk(
+                cids[i], "ring", bufs, seq=c, end=(c == n_chunks - 1),
+                serialized=serialized, one_way=True,
+                sizes=sizes if bufs is None else None)
+            fabric.submit_raw(fabric.channel(i, (i + 1) % n,
+                                             serialized=serialized),
+                              frame)
+    return fabric.flush()
+
+
+def incast_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
+                    n_chunks: int = 1,
+                    bufs: Optional[List[np.ndarray]] = None,
+                    serialized: bool = False) -> FlightReport:
+    """The Cori-style parameter-server hotspot: every worker
+    (endpoints 1..n-1) bidi-streams ``n_chunks`` payload chunks into
+    one server (endpoint 0); on each stream's END the server streams
+    the payload back (the variable fetch) — so the server pays both the
+    N-way ingress of the push AND the N-way egress of the fetch. On
+    non-dispatching transports (collective) only the push half runs."""
+    n = fabric.n_endpoints
+    assert n >= 2, "incast needs >= 1 worker + the server endpoint"
+    assert n_chunks >= 1, n_chunks
+    if fabric.transport.dispatches and 0 not in fabric.servers:
+        fetch = ([list(bufs)] * n_chunks if bufs is not None
+                 else [tuple(sizes)] * n_chunks)
+
+        def push_fetch(chunk, end, _fetch=fetch):
+            return _fetch if end else None
+
+        fabric.add_server(0).register_bidi("push_fetch", push_fetch)
+    handles = [fabric.channel(w, 0, serialized=serialized)
+               .bidi_stream("push_fetch") for w in range(1, n)]
+    for c in range(n_chunks):
+        for h in handles:
+            h.send(bufs, sizes=sizes if bufs is None else None,
+                   end=(c == n_chunks - 1))
+    rep = fabric.flush()
+    assert all(h.done for h in handles)
+    return rep

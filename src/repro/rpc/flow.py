@@ -1,15 +1,27 @@
 """Credit-based flow control (the HTTP/2 / gRPC window analogue).
 
-Each channel holds a :class:`CreditWindow`. Issuing a call consumes
-byte + message credits; completions (replies, or transport delivery for
-one-way calls) grant them back. When credits run dry the fabric queues
-the call locally instead of submitting it — the stall is counted, which
-is exactly the back-pressure signal the paper's flow-control discussion
-(§2.2) says a benchmark suite should expose.
+Each channel holds one :class:`CreditWindow` **per direction**: the
+forward window gates client->server frames, the reverse window gates
+server->client stream chunks. Issuing a frame consumes byte + message
+credits of its direction; completions (replies, chunk delivery, or
+transport delivery for one-way calls) grant them back. When credits run
+dry the frame queues locally instead of being dropped — the stall is
+counted, which is exactly the back-pressure signal the paper's
+flow-control discussion (§2.2) says a benchmark suite should expose —
+and the stream resumes as soon as grants return credits. Because the
+two directions hold independent windows, a bidi stream that is
+window-limited both ways still makes progress: each direction drains on
+its own credits.
+
+:class:`ChunkGate` is the enforcement mechanism for a chunk stream: a
+FIFO of pending chunks in front of one CreditWindow, so a later chunk
+can never overtake an earlier stalled one.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
+from typing import Any, Deque, List, Tuple
 
 
 @dataclass
@@ -56,3 +68,51 @@ class CreditWindow:
                                self.bytes_avail + min(nbytes,
                                                       self.window_bytes))
         self.msgs_avail = min(self.window_msgs, self.msgs_avail + 1)
+
+
+class ChunkGate:
+    """FIFO of stream chunks gated by one direction's CreditWindow.
+
+    ``offer`` admits a chunk immediately when the window has credits and
+    nothing is already queued (FIFO: a stalled chunk blocks all later
+    ones); otherwise the chunk queues and the stall is counted once.
+    ``pump`` re-admits queued chunks after ``grant`` returns credits.
+    Chunks are never dropped: exhaustion only stalls the stream.
+    """
+
+    def __init__(self, window: CreditWindow):
+        self.window = window
+        self._q: Deque[Tuple[Any, int]] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def offer(self, item: Any, nbytes: int) -> List[Any]:
+        """Submit one chunk; returns the (0- or 1-element) admitted list."""
+        if not self._q and self.window.try_acquire(nbytes):
+            return [item]
+        if self._q:     # try_acquire above already counted a fresh stall
+            self.window.stats.stalled += 1
+        self._q.append((item, nbytes))
+        return []
+
+    def pump(self, force_one: bool = False) -> List[Any]:
+        """Admit queued chunks in FIFO order while credits last. With
+        ``force_one`` and an empty window, admit the head anyway — an
+        over-window chunk must occupy the window alone, not deadlock."""
+        out: List[Any] = []
+        while self._q:
+            item, nbytes = self._q[0]
+            # can_acquire first: a retry is not a new stall
+            if self.window.can_acquire(nbytes):
+                self.window.try_acquire(nbytes)
+            elif force_one and not out:
+                pass                    # admit uncredited, head-of-line
+            else:
+                break
+            self._q.popleft()
+            out.append(item)
+        return out
+
+    def grant(self, nbytes: int) -> None:
+        self.window.grant(nbytes)

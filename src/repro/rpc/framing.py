@@ -16,11 +16,20 @@ paper's payload modes:
 Header layout (uint32 words, little-endian), zero-padded to a multiple
 of the 128-byte TPU lane so it can itself be a pack-kernel buffer:
 
-  [MAGIC, call_id, method_id, flags, n_buffers, size_0 .. size_{n-1}]
+  [MAGIC, call_id, method_id, flags, seq, n_buffers, size_0 .. size_{n-1}]
+
+``seq`` orders the chunks of one stream (0 for unary frames). Stream
+*chunks* (``stream_chunk``) carry FLAG_STREAM and a running seq; the
+last chunk of a direction adds FLAG_STREAM_END; server->client chunks
+add FLAG_REPLY. Chunks use the same two wire encodings as unary frames
+— serialized chunks still coalesce through the payload_pack kernel.
 
 Frames may be *spec-only* (``bufs is None``): the sizes are real but no
 bytes are materialized — the simulated transport prices such frames
 analytically without ever allocating hundreds of endpoints' payloads.
+Zero-length iovec buffers are legal (a stream END trailer is a frame
+with no buffers at all); they occupy one zero-filled lane on the
+serialized wire and a zero-size message on the non-serialized wire.
 """
 from __future__ import annotations
 
@@ -64,6 +73,7 @@ class Frame:
     flags: int
     sizes: Tuple[int, ...]           # true (unpadded) iovec byte counts
     bufs: Optional[List[np.ndarray]] = None   # uint8, len == len(sizes)
+    seq: int = 0                     # chunk index within a stream
 
     def __post_init__(self):
         if self.bufs is not None:
@@ -87,6 +97,18 @@ class Frame:
     def one_way(self) -> bool:
         return bool(self.flags & FLAG_ONE_WAY)
 
+    @property
+    def is_stream(self) -> bool:
+        return bool(self.flags & FLAG_STREAM)
+
+    @property
+    def is_reply(self) -> bool:
+        return bool(self.flags & FLAG_REPLY)
+
+    @property
+    def stream_end(self) -> bool:
+        return bool(self.flags & FLAG_STREAM_END)
+
     def reply(self, bufs: Optional[List[np.ndarray]],
               sizes: Optional[Sequence[int]] = None, *,
               error: bool = False) -> "Frame":
@@ -99,33 +121,72 @@ class Frame:
         return Frame(self.call_id, self.method, flags, tuple(sizes),
                      bufs)
 
+    def reply_chunk(self, bufs: Optional[List[np.ndarray]], *, seq: int,
+                    end: bool = False,
+                    sizes: Optional[Sequence[int]] = None) -> "Frame":
+        """A server->client stream chunk answering this frame's call.
+        ``bufs=None`` with explicit ``sizes`` builds a spec-only chunk
+        (modeled transports); ``bufs=None, sizes=None`` a bare END
+        trailer (no payload, still encodable)."""
+        if bufs is None and sizes is None:
+            bufs = []
+        if bufs is not None:
+            bufs = [np.ascontiguousarray(b, dtype=np.uint8).reshape(-1)
+                    for b in bufs]
+        if sizes is None:
+            sizes = [int(b.size) for b in bufs] if bufs is not None else []
+        flags = ((self.flags & FLAG_SERIALIZED) | FLAG_REPLY | FLAG_STREAM
+                 | (FLAG_STREAM_END if end else 0))
+        return Frame(self.call_id, self.method, flags,
+                     tuple(int(s) for s in sizes), bufs, seq=seq)
+
 
 def make_frame(call_id: int, method: str, bufs: Optional[List[np.ndarray]],
                *, sizes: Optional[Sequence[int]] = None,
                serialized: bool = False, one_way: bool = False,
-               stream: bool = False, stream_end: bool = False) -> Frame:
+               stream: bool = False, stream_end: bool = False,
+               reply: bool = False, seq: int = 0) -> Frame:
     if sizes is None:
         assert bufs is not None, "spec-only frames need explicit sizes"
         sizes = [int(b.size) for b in bufs]
-    assert all(s >= 1 for s in sizes), "zero-size iovec buffers unsupported"
+    assert all(s >= 0 for s in sizes), sizes
     bufs = ([np.ascontiguousarray(b, dtype=np.uint8).reshape(-1)
              for b in bufs] if bufs is not None else None)
     flags = ((FLAG_SERIALIZED if serialized else 0)
              | (FLAG_ONE_WAY if one_way else 0)
              | (FLAG_STREAM if stream else 0)
-             | (FLAG_STREAM_END if stream_end else 0))
+             | (FLAG_STREAM_END if stream_end else 0)
+             | (FLAG_REPLY if reply else 0))
     return Frame(call_id, method_id(method), flags, tuple(int(s)
                                                           for s in sizes),
-                 bufs)
+                 bufs, seq=seq)
+
+
+def stream_chunk(call_id: int, method: str,
+                 bufs: Optional[List[np.ndarray]], *, seq: int,
+                 end: bool = False, serialized: bool = False,
+                 one_way: bool = False, reply: bool = False,
+                 sizes: Optional[Sequence[int]] = None) -> Frame:
+    """One chunk of a stream: FLAG_STREAM + running seq; the last chunk
+    of a direction carries FLAG_STREAM_END. ``bufs=None`` with no sizes
+    is the bare END trailer (a header-only frame)."""
+    if bufs is None and sizes is None:
+        bufs = []
+    return make_frame(call_id, method, bufs, sizes=sizes,
+                      serialized=serialized, one_way=one_way, stream=True,
+                      stream_end=end, reply=reply, seq=seq)
 
 
 # ---------------------------------------------------------------------------
 # header
 # ---------------------------------------------------------------------------
 
+_FIXED_WORDS = 6          # MAGIC, call_id, method, flags, seq, n_buffers
+
+
 def header_bytes(frame: Frame) -> np.ndarray:
     """Little-endian uint32 header, zero-padded to a LANE multiple."""
-    words = [MAGIC, frame.call_id, frame.method, frame.flags,
+    words = [MAGIC, frame.call_id, frame.method, frame.flags, frame.seq,
              frame.n_buffers, *frame.sizes]
     raw = np.asarray(words, dtype="<u4").view(np.uint8)
     out = np.zeros(_pad128(raw.size), dtype=np.uint8)
@@ -137,12 +198,13 @@ def parse_header(data: np.ndarray) -> Tuple[Frame, int]:
     """Parse a header prefix -> (spec-only Frame, header length in bytes)."""
     head = np.ascontiguousarray(data[:LANE]).view("<u4")
     assert int(head[0]) == MAGIC, f"bad frame magic {int(head[0]):#x}"
-    call_id, method, flags, n = (int(head[1]), int(head[2]), int(head[3]),
-                                 int(head[4]))
-    hdr_len = _pad128((5 + n) * _WORD)
+    call_id, method, flags, seq, n = (int(head[1]), int(head[2]),
+                                      int(head[3]), int(head[4]),
+                                      int(head[5]))
+    hdr_len = _pad128((_FIXED_WORDS + n) * _WORD)
     words = np.ascontiguousarray(data[:hdr_len]).view("<u4")
-    sizes = tuple(int(s) for s in words[5:5 + n])
-    return Frame(call_id, method, flags, sizes, None), hdr_len
+    sizes = tuple(int(s) for s in words[_FIXED_WORDS:_FIXED_WORDS + n])
+    return Frame(call_id, method, flags, sizes, None, seq=seq), hdr_len
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +213,8 @@ def parse_header(data: np.ndarray) -> Tuple[Frame, int]:
 
 def _pack_numpy(bufs: List[np.ndarray]) -> np.ndarray:
     """Byte-identical host-side layout of the pack kernel: each buffer
-    zero-padded to the 128-byte lane, then concatenated."""
+    zero-padded to the 128-byte lane (a zero-size buffer becomes one
+    zero lane), then concatenated."""
     out = []
     for b in bufs:
         pad = _pad128(b.size) - b.size
@@ -181,13 +244,15 @@ def encode(frame: Frame, *, backend: str = "numpy") -> List[np.ndarray]:
     if not frame.serialized:
         return [hdr] + list(frame.bufs)
     parts = [hdr] + list(frame.bufs)
-    if backend == "kernel":
+    # the pack kernel wants non-empty operands; zero-size buffers (legal
+    # in stream chunks) take the byte-identical numpy layout instead
+    if backend == "kernel" and all(p.size > 0 for p in parts):
         from repro.kernels.payload_pack import pack as kpack
         import jax.numpy as jnp
         packed, _ = kpack([jnp.asarray(b) for b in parts])
         # kernel output is already the lane-padded concatenation
         return [np.asarray(packed)]
-    assert backend == "numpy", backend
+    assert backend in ("numpy", "kernel"), backend
     return [_pack_numpy(parts)]
 
 
@@ -201,11 +266,11 @@ def decode(messages: List[np.ndarray], *, backend: str = "numpy") -> Frame:
     assert len(messages) == 1, "serialized frame is one wire message"
     wire = messages[0]
     sizes = [hdr_len] + list(head.sizes)
-    if backend == "kernel":
+    if backend == "kernel" and all(s > 0 for s in sizes):
         from repro.kernels.payload_pack import unpack as kunpack
         import jax.numpy as jnp
         parts = [np.asarray(p) for p in kunpack(jnp.asarray(wire), sizes)]
     else:
-        assert backend == "numpy", backend
+        assert backend in ("numpy", "kernel"), backend
         parts = _unpack_numpy(wire, sizes)
     return replace(head, bufs=parts[1:])

@@ -7,9 +7,9 @@ how long the flight took:
                         measured. The serving-experiment path.
   SimulatedTransport  — no data moves; elapsed is priced by a
                         ``core.netmodel.NetworkModel`` (receiver-side
-                        NIC serialization + CPU-copy contention), so
-                        topologies of hundreds of endpoints run in
-                        milliseconds.
+                        NIC serialization + CPU-copy contention, plus
+                        sender-side egress), so topologies of hundreds
+                        of endpoints run in milliseconds.
   CollectiveTransport — (repro.rpc.collective) lowers the flight onto
                         the ``ppermute`` schedules of
                         ``core.channels``; measured on real devices.
@@ -135,6 +135,13 @@ class SimulatedTransport(Transport):
     CPU-copy contention term when several messages land on one endpoint
     — the same receiver-bound model ``netmodel.ps_round_time`` uses, so
     a simulated PS pattern reproduces the paper's throughput ratios.
+    Each *sender* additionally serializes its outgoing bytes on its own
+    NIC (the egress term): a flight's elapsed time is the max over
+    endpoints of ingress + copy contention + egress. Egress is what
+    makes the fan-OUT half of an incast contend — one server streaming
+    fetch responses to N workers is limited by its own egress pump,
+    not by any single receiver. Matches ``netmodel.fc_round_time`` /
+    ``ring_round_time`` / ``incast_round_time`` exactly.
     Frames may be spec-only; nothing is allocated or copied.
     """
 
@@ -153,23 +160,34 @@ class SimulatedTransport(Transport):
                                           serialized=serialized)
                 + self.network.msg_time(64))
 
+    def egress_price(self, frame: framing.Frame) -> float:
+        """One message's cost at the sender: pumping the bytes onto the
+        wire (alpha and the RPC software overhead are receiver-side)."""
+        return frame.total_bytes / self.network.beta_Bps
+
     def deliver(self, messages: Sequence[Message]) -> Delivery:
         per_dst: Dict[int, float] = {}
         per_dst_count: Dict[int, int] = {}
         per_dst_bytes: Dict[int, int] = {}
+        per_src: Dict[int, float] = {}
         for m in messages:
             assert 0 <= m.dst < self.n_endpoints, m.dst
+            assert 0 <= m.src < self.n_endpoints, m.src
             per_dst[m.dst] = per_dst.get(m.dst, 0.0) + self.price(m.frame)
             per_dst_count[m.dst] = per_dst_count.get(m.dst, 0) + 1
             per_dst_bytes[m.dst] = (per_dst_bytes.get(m.dst, 0)
                                     + m.frame.total_bytes)
+            per_src[m.src] = (per_src.get(m.src, 0.0)
+                              + self.egress_price(m.frame))
         elapsed = 0.0
-        for d, t in per_dst.items():
-            k = per_dst_count[d]
-            avg_bytes = per_dst_bytes[d] / k
-            contention = (k * (k - 1) * avg_bytes
-                          / self.network.cpu_copy_Bps)
-            elapsed = max(elapsed, t + contention)
+        for e in set(per_dst) | set(per_src):
+            t = per_dst.get(e, 0.0)
+            k = per_dst_count.get(e, 0)
+            if k:
+                avg_bytes = per_dst_bytes[e] / k
+                t += (k * (k - 1) * avg_bytes
+                      / self.network.cpu_copy_Bps)
+            elapsed = max(elapsed, t + per_src.get(e, 0.0))
         self.clock_s += elapsed
         rounds = schedule_rounds(messages)
         return Delivery(list(messages), elapsed, len(rounds), modeled=True)

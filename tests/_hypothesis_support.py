@@ -15,6 +15,9 @@ import pytest
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
+    # the "ci" profile (--hypothesis-profile=ci) is registered in
+    # tests/conftest.py: profile lookup happens at pytest configure
+    # time, before this module is ever imported
 except ImportError:
     HAVE_HYPOTHESIS = False
 

@@ -1,0 +1,19 @@
+"""Hypothesis settings profiles must be registered before pytest
+resolves --hypothesis-profile (the hypothesis pytest plugin loads the
+named profile at configure time, before any test module is imported),
+so they live in conftest rather than tests/_hypothesis_support.py.
+
+CI runs the property tests deterministically on every push:
+`pytest --hypothesis-profile=ci --hypothesis-seed=0` (see
+.github/workflows/ci.yml). derandomize makes the examples a pure
+function of the test, so a red CI reproduces locally with the same
+flags.
+"""
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", settings(max_examples=100,
+                                             deadline=None,
+                                             derandomize=True))
+except ImportError:      # tests degrade via tests/_hypothesis_support
+    pass

@@ -1,0 +1,270 @@
+"""Streaming call types (server-streaming, bidi) and the per-direction
+credit windows behind them: exhaustion stalls (never drops), interleaved
+window-limited bidi streams make progress, and credits come back on
+stream close. These tests are deliberately sensitive to the credit
+accounting — flipping a grant breaks window-restoration asserts, and
+dropping a stalled chunk breaks the content asserts."""
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.core.netmodel import NETWORKS
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+# ---------------------------------------------------------------------------
+# server streaming
+# ---------------------------------------------------------------------------
+
+def test_server_stream_basic():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream(
+        "range", lambda req: [[np.full(8, i, np.uint8)] for i in range(4)])
+    h = fab.channel(0, 1).server_stream("range", [np.zeros(1, np.uint8)])
+    fab.flush()
+    got = h.chunk_bufs()
+    assert len(got) == 4
+    for i, c in enumerate(got):
+        assert np.array_equal(c[0], np.full(8, i, np.uint8))
+
+
+def test_server_stream_empty_response_sends_bare_end():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream("none", lambda req: [])
+    h = fab.channel(0, 1).server_stream("none", [np.zeros(1, np.uint8)])
+    fab.flush()
+    assert h.done and h.chunk_bufs() == []
+
+
+def test_server_stream_chunk_seqs_are_ordered():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream(
+        "r", lambda req: [[np.full(4, i, np.uint8)] for i in range(3)])
+    fab.channel(0, 1).server_stream("r", [np.zeros(1, np.uint8)])
+    fab.flush()
+    seqs = [e.payload.seq for e in fab.cq.drain()
+            if e.kind == "stream_chunk"]
+    assert seqs == [0, 1, 2]
+
+
+def test_server_stream_unknown_method_errors_handle():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1)
+    h = fab.channel(0, 1).server_stream("nosuch", [np.zeros(1, np.uint8)])
+    fab.flush()
+    assert h.done
+    with pytest.raises(rpc.RpcError, match="unimplemented"):
+        h.chunk_bufs()
+
+
+def test_server_stream_handler_fault_errors_handle():
+    def boom(req):
+        raise ValueError("nope")
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream("boom", boom)
+    ch = fab.channel(0, 1)
+    h = ch.server_stream("boom", [np.zeros(1, np.uint8)])
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="nope"):
+        h.chunk_bufs()
+    # the error reply still restored the request's forward credits
+    assert ch.window.bytes_avail == ch.window.window_bytes
+
+
+def test_cardinality_stream_call_to_server_stream_method():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream("ss", lambda req: [])
+    h = fab.channel(0, 1).bidi_stream("ss", [[np.ones(4, np.uint8)]])
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="cardinality mismatch"):
+        h.chunk_bufs()
+
+
+# ---------------------------------------------------------------------------
+# flow control: exhaustion stalls, never drops
+# ---------------------------------------------------------------------------
+
+def test_reverse_window_exhaustion_stalls_stream_not_drops():
+    """5 chunks of 800 B through a 1 KB reverse window: one chunk per
+    flight, every chunk arrives, in order, with the stalls counted."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1024, window_msgs=8)
+    fab.add_server(1).register_server_stream(
+        "big", lambda req: [[np.full(800, i, np.uint8)]
+                            for i in range(5)])
+    ch = fab.channel(0, 1)
+    h = ch.server_stream("big", [np.zeros(1, np.uint8)])
+    rep = fab.flush()
+    got = h.chunk_bufs()
+    assert [int(c[0][0]) for c in got] == [0, 1, 2, 3, 4]  # none dropped
+    assert ch.rwindow.stats.stalled == 4       # all but the first waited
+    assert rep.flights >= 5                    # window forced extra flights
+    # credits returned on stream close: window fully restored
+    assert ch.rwindow.bytes_avail == ch.rwindow.window_bytes
+    assert ch.rwindow.msgs_avail == ch.rwindow.window_msgs
+
+
+def test_stream_resumes_on_credit_grant_not_force():
+    """With a window that fits exactly one chunk, every admission after
+    the first must come from a *grant* (delivery of the previous chunk),
+    not the deadlock-breaker: byte credits never go negative-equivalent,
+    i.e. the window is exactly restored and stalls == chunks - 1."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1000, window_msgs=1)
+    fab.add_server(1).register_server_stream(
+        "s", lambda req: [[np.full(1000, i, np.uint8)] for i in range(3)])
+    ch = fab.channel(0, 1)
+    h = ch.server_stream("s", [np.zeros(1, np.uint8)])
+    fab.flush()
+    assert len(h.chunk_bufs()) == 3
+    assert ch.rwindow.stats.stalled == 2
+    assert ch.rwindow.stats.acquired >= 3
+    assert ch.rwindow.bytes_avail == 1000
+    assert ch.rwindow.msgs_avail == 1
+
+
+def test_forward_window_stalls_bidi_sends():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=512, window_msgs=2)
+    fab.add_server(1).register_bidi("sink", lambda c, end: None)
+    ch = fab.channel(0, 1)
+    h = ch.bidi_stream("sink")
+    for i in range(6):
+        h.send([np.full(400, i, np.uint8)], end=(i == 5))
+    fab.flush()
+    assert h.done and h.chunks == []           # sink: END trailer only
+    assert ch.window.stats.stalled >= 4
+    assert ch.window.bytes_avail == 512        # all forward credits back
+
+
+# ---------------------------------------------------------------------------
+# bidi: interleaving and both-direction window limits
+# ---------------------------------------------------------------------------
+
+def test_bidi_echo_roundtrip():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_bidi(
+        "inc", lambda c, end: [[(c[0] + 1).astype(np.uint8)]]
+        if c else None)
+    h = fab.channel(0, 1).bidi_stream(
+        "inc", [[np.full(4, i, np.uint8)] for i in range(3)])
+    fab.flush()
+    assert [int(c[0][0]) for c in h.chunk_bufs()] == [1, 2, 3]
+
+
+def test_interleaved_bidi_streams_no_deadlock_when_window_limited():
+    """Two bidi streams share one channel whose windows (both
+    directions) admit a single 400 B chunk at a time; both streams must
+    drain completely with their data intact."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=512, window_msgs=1)
+    fab.add_server(1).register_bidi(
+        "echo", lambda c, end: [c] if c else None)
+    ch = fab.channel(0, 1)
+    h1, h2 = ch.bidi_stream("echo"), ch.bidi_stream("echo")
+    for i in range(3):
+        h1.send([np.full(400, i, np.uint8)], end=(i == 2))
+        h2.send([np.full(400, 10 + i, np.uint8)], end=(i == 2))
+    fab.flush()
+    assert [int(c[0][0]) for c in h1.chunk_bufs()] == [0, 1, 2]
+    assert [int(c[0][0]) for c in h2.chunk_bufs()] == [10, 11, 12]
+    assert ch.window.stats.stalled > 0         # both directions were
+    assert ch.window.bytes_avail == 512        # limited, and both
+    assert ch.rwindow.bytes_avail == 512       # fully recovered
+
+
+def test_bidi_incremental_send_close_with_trailer():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_bidi(
+        "echo", lambda c, end: [c] if c else None)
+    h = fab.channel(0, 1).bidi_stream("echo")
+    h.send([np.full(4, 1, np.uint8)])
+    h.send([np.full(4, 2, np.uint8)])
+    h.close()                                  # bare END trailer
+    fab.flush()
+    assert [int(c[0][0]) for c in h.chunk_bufs()] == [1, 2]
+    with pytest.raises(AssertionError):
+        h.send([np.zeros(1, np.uint8)])        # closed is closed
+
+
+def test_stream_events_on_completion_queue():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream(
+        "r", lambda req: [[np.full(4, i, np.uint8)] for i in range(2)])
+    h = fab.channel(0, 1).server_stream("r", [np.zeros(1, np.uint8)])
+    fab.flush()
+    kinds = [e.kind for e in fab.cq.drain() if e.tag == h.call_id]
+    assert kinds.count("stream_chunk") == 2
+    assert kinds[-1] == "stream_end"
+
+
+def test_streaming_state_does_not_accumulate():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register_server_stream(
+        "r", lambda req: [[np.full(8, i, np.uint8)] for i in range(3)])
+    srv.register_bidi("e", lambda c, end: [c] if c else None)
+    ch = fab.channel(0, 1)
+    for i in range(20):
+        ch.server_stream("r", [np.zeros(1, np.uint8)])
+        ch.bidi_stream("e", [[np.full(16, i % 250, np.uint8)]])
+        fab.flush()
+    assert len(fab._handles) == 0
+    assert len(fab._calls) == 0
+    assert srv._streams == {} and srv._bidi_seq == {}
+    assert len(ch.rx_gate) == 0
+
+
+# ---------------------------------------------------------------------------
+# ring / incast exchanges over the fabric
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunks", [(2, 1), (3, 4), (8, 2)])
+def test_ring_exchange_simulated_counts(n, chunks):
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(n, NETWORKS["rdma_edr"]))
+    rep = rpc.ring_exchange(fab, [1024, 64], n_chunks=chunks)
+    assert rep.messages == n * chunks
+    assert rep.rounds == chunks        # rotation rounds, independent of n
+    assert rep.modeled and rep.elapsed_s > 0
+
+
+def test_ring_exchange_loopback_delivers_chunks():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(3))
+    rep = rpc.ring_exchange(fab, [256], n_chunks=2, bufs=_bufs([256]))
+    assert not rep.modeled
+    assert rep.messages == 6
+    # every endpoint's sink saw one complete 2-chunk stream
+    assert all(s.calls_served == 1 for s in fab.servers.values())
+
+
+def test_incast_exchange_pushes_and_fetches():
+    n_workers, chunks = 3, 2
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(n_workers + 1))
+    bufs = _bufs([512, 128])
+    rep = rpc.incast_exchange(fab, [512, 128], n_chunks=chunks,
+                              bufs=bufs)
+    # push (workers->server) + fetch (server->workers), both streamed
+    assert rep.messages == 2 * n_workers * chunks
+    assert fab.servers[0].calls_served == n_workers
+
+
+def test_incast_single_worker_degenerates_to_p2p_stream():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    rep = rpc.incast_exchange(fab, [256], n_chunks=3, bufs=_bufs([256]))
+    assert rep.messages == 6                   # 3 push + 3 fetch
+
+
+def test_incast_fetch_respects_reverse_window():
+    """The fetch half (server->worker chunks) is gated by the reverse
+    window: a tiny window forces per-chunk flights but loses nothing."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=600, window_msgs=4)
+    rep = rpc.incast_exchange(fab, [512], n_chunks=3, bufs=_bufs([512]))
+    ch = fab._channels[(1, 0, False)]
+    assert rep.messages == 6
+    assert ch.rwindow.stats.stalled >= 2
+    assert ch.rwindow.bytes_avail == 600

@@ -1,0 +1,93 @@
+"""Property-based framing tests: encode -> decode must round-trip
+byte-identically for ARBITRARY iovec lists — zero-length and max-size
+buffers included — in both wire modes, for unary and stream-chunk
+frames. Runs under the numpy backend (the kernel path is pinned
+byte-identical to it by tests/test_rpc.py); skips cleanly when
+hypothesis is absent and runs with --hypothesis-profile=ci in CI."""
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro.rpc import framing
+
+# size strategy: bias toward the interesting boundaries of the 128-byte
+# lane besides arbitrary sizes; 0 is legal (empty iovec / END trailer)
+_SIZES = st.lists(
+    st.one_of(st.integers(0, 4096),
+              st.sampled_from([0, 1, 127, 128, 129, 255, 256, 4095])),
+    min_size=0, max_size=12)
+
+
+def _bufs(sizes, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+def _assert_roundtrip(f: framing.Frame) -> None:
+    g = framing.decode(framing.encode(f))
+    assert (g.call_id, g.method, g.flags, g.seq, g.sizes) == \
+        (f.call_id, f.method, f.flags, f.seq, f.sizes)
+    assert len(g.bufs) == len(f.bufs)
+    for a, b in zip(f.bufs, g.bufs):
+        assert np.array_equal(a, b)
+
+
+@given(sizes=_SIZES, serialized=st.booleans(), seed=st.integers(0, 999),
+       one_way=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_unary_frame_roundtrip(sizes, serialized, seed, one_way):
+    f = framing.make_frame(3, "prop", _bufs(sizes, seed),
+                           serialized=serialized, one_way=one_way)
+    if serialized:
+        assert len(framing.encode(f)) == 1
+    else:
+        assert len(framing.encode(f)) == len(sizes) + 1
+    _assert_roundtrip(f)
+
+
+@given(sizes=_SIZES, serialized=st.booleans(), seed=st.integers(0, 999),
+       seq=st.integers(0, 2**31 - 1), end=st.booleans(),
+       reply=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_stream_chunk_roundtrip(sizes, serialized, seed, seq, end, reply):
+    f = framing.stream_chunk(11, "chunk", _bufs(sizes, seed), seq=seq,
+                             end=end, serialized=serialized, reply=reply)
+    assert f.is_stream and f.seq == seq
+    assert f.stream_end == end and f.is_reply == reply
+    _assert_roundtrip(f)
+
+
+@given(sizes=_SIZES, seq=st.integers(0, 2**31 - 1),
+       flags=st.integers(0, 63))
+@settings(max_examples=60, deadline=None)
+def test_header_roundtrip(sizes, seq, flags):
+    f = framing.Frame(99, framing.method_id("h"), flags, tuple(sizes),
+                      None, seq=seq)
+    g, hdr_len = framing.parse_header(framing.header_bytes(f))
+    assert hdr_len % framing.LANE == 0
+    assert (g.call_id, g.method, g.flags, g.seq, g.sizes) == \
+        (f.call_id, f.method, f.flags, f.seq, f.sizes)
+
+
+@pytest.mark.parametrize("serialized", [False, True])
+@pytest.mark.parametrize("stream", [False, True])
+def test_max_size_chunk_roundtrip(serialized, stream):
+    """The paper's Large-category ceiling (10 MB) in one iovec."""
+    big = np.random.default_rng(0).integers(
+        0, 255, 10 * 1024 * 1024, dtype=np.uint8)
+    if stream:
+        f = framing.stream_chunk(1, "big", [big], seq=0, end=True,
+                                 serialized=serialized)
+    else:
+        f = framing.make_frame(1, "big", [big], serialized=serialized)
+    _assert_roundtrip(f)
+
+
+@pytest.mark.parametrize("serialized", [False, True])
+def test_bare_end_trailer_roundtrip(serialized):
+    """A stream END with no payload at all is a legal, encodable frame."""
+    f = framing.stream_chunk(5, "t", None, seq=7, end=True,
+                             serialized=serialized)
+    assert f.sizes == () and f.total_bytes == 0
+    g = framing.decode(framing.encode(f))
+    assert g.stream_end and g.seq == 7 and g.bufs == []

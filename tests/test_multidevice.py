@@ -57,6 +57,32 @@ print("OK")
 
 
 @pytest.mark.slow
+def test_ring_fn_rotates_payload():
+    out = _run("""
+import jax, numpy as np
+from repro.core import channels as ch
+from repro.core.payload import generate_spec
+from repro.configs.tfgrpc_bench import BenchConfig
+mesh = ch.make_net_mesh(4)
+spec = generate_spec(BenchConfig(iovec_count=3))
+bufs = ch.device_payload(mesh, spec, seed=3)
+for ser in (False, True):
+    for chunks in (1, 3):
+        fn = ch.ring_fn(mesh, spec.n_buffers, 4, n_chunks=chunks,
+                        serialized=ser)
+        out = jax.block_until_ready(fn(*bufs))
+        # chunks successor hops: row i's payload lands on (i+chunks)%4
+        for a, b in zip(bufs, out):
+            a, b = np.asarray(a), np.asarray(b)
+            for i in range(4):
+                assert np.array_equal(a[i], b[(i + chunks) % 4]), \
+                    (ser, chunks, i)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_ps_round_and_benches():
     out = _run("""
 import jax, numpy as np

@@ -404,6 +404,81 @@ def test_fully_connected_loopback_measured():
 
 
 # ---------------------------------------------------------------------------
+# ring / incast drivers + sweep CLI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("benchmark", ["ring", "incast"])
+def test_bench_streaming_simulated_matches_projection(benchmark):
+    """bench.run end-to-end on the simulated transport: the measured
+    stat IS the netmodel projection for the chosen network."""
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+    st = bench.run(BenchConfig(benchmark=benchmark, num_workers=12,
+                               transport="simulated", network="eth10g",
+                               stream_chunks=3))
+    assert st.derived["rpcs_per_s"] > 0
+    assert st.derived["rpcs_per_round"] == 12 * 3
+    assert st.model_projection["eth10g"] == pytest.approx(
+        st.derived["rpcs_per_s"], rel=1e-6)
+
+
+def test_bench_ring_needs_two_workers():
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+    with pytest.raises(RuntimeError, match="num-workers"):
+        bench.run(BenchConfig(benchmark="ring", num_workers=1,
+                              transport="simulated"))
+
+
+@pytest.mark.parametrize("benchmark", ["ring", "incast"])
+def test_bench_streaming_loopback_measured(benchmark):
+    from repro.configs.tfgrpc_bench import BenchConfig
+    from repro.core import bench
+    st = bench.run(BenchConfig(
+        benchmark=benchmark, num_workers=2, transport="loopback",
+        stream_chunks=2, iovec_count=2, large_bytes=1 << 20,
+        categories=("small", "medium"), warmup_s=0.05, duration_s=0.1))
+    assert st.derived["rpcs_per_s"] > 0
+    assert st.derived["chunks_per_stream"] == 2.0
+
+
+def test_bench_comm_sweep_single_table(capsys, tmp_path):
+    """--sweep runs the cross-product in one invocation and emits one
+    table plus one JSON row list."""
+    import json as _json
+
+    from repro.launch import bench_comm
+    out = tmp_path / "rows.json"
+    bench_comm.main(["--sweep", "scheme,mode", "--benchmark", "incast",
+                     "--transport", "simulated", "--network", "eth40g",
+                     "--num-workers", "4", "--json", str(out)])
+    table = capsys.readouterr().out
+    rows = _json.loads(out.read_text())
+    assert len(rows) == 3 * 2              # schemes x modes
+    combos = {(r["scheme"], r["mode"]) for r in rows}
+    assert combos == {(s, m) for s in ("uniform", "random", "skew")
+                      for m in ("non_serialized", "serialized")}
+    assert all(r["value"] > 0 for r in rows)
+    for s in ("uniform", "random", "skew"):
+        assert table.count(s) >= 2
+
+
+def test_bench_comm_rejects_unknown_category(capsys):
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--categories", "small,mediun"])
+    err = capsys.readouterr().err
+    assert "mediun" in err and "choose from" in err
+
+
+def test_bench_comm_rejects_transport_sweep_of_paper_benchmarks():
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--sweep", "transport",
+                         "--benchmark", "p2p_latency"])
+
+
+# ---------------------------------------------------------------------------
 # serve over rpc
 # ---------------------------------------------------------------------------
 

@@ -1,9 +1,13 @@
-"""Pure schedule math: bipartite edge coloring (PS rounds) edge cases
-and the all-to-all schedule behind the fully_connected family."""
+"""Pure schedule math: bipartite edge coloring (PS rounds) edge cases,
+the all-to-all schedule behind the fully_connected family, and the
+ring/incast rotation schedules — cross-checked against the netmodel
+closed forms through the simulated transport."""
 import pytest
 
 from repro.core.channels import (all_to_all_schedule, bipartite_schedule,
-                                 fc_rpcs_per_round)
+                                 fc_rpcs_per_round, incast_rpcs_per_round,
+                                 incast_schedule, ring_rpcs_per_round,
+                                 ring_schedule)
 
 
 def _check_rounds(rounds, srcs, dsts):
@@ -50,3 +54,120 @@ def test_all_to_all_schedule(n):
 def test_all_to_all_rejects_singleton():
     with pytest.raises(AssertionError):
         all_to_all_schedule(1)
+
+
+# ---------------------------------------------------------------------------
+# ring / incast schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 5, 7, 8])
+@pytest.mark.parametrize("chunks", [1, 3])
+def test_ring_schedule_rounds_are_successor_permutations(n, chunks):
+    rounds = ring_schedule(n, chunks)
+    assert len(rounds) == chunks
+    want = {(i, (i + 1) % n) for i in range(n)}
+    for r in rounds:
+        assert set(r) == want
+        ss, dd = [s for s, _ in r], [d for _, d in r]
+        assert len(set(ss)) == len(ss) == n     # a full permutation:
+        assert len(set(dd)) == len(dd) == n     # unique src AND dst
+    assert ring_rpcs_per_round(n, chunks) == n * chunks
+
+
+def test_ring_schedule_two_workers_is_the_swap():
+    """n == 2: the successor rotation degenerates to the 0<->1 swap and
+    must still be a legal (unique-port) round."""
+    rounds = ring_schedule(2, 2)
+    assert rounds == [[(0, 1), (1, 0)], [(0, 1), (1, 0)]]
+
+
+def test_ring_schedule_rejects_singleton():
+    with pytest.raises(AssertionError):
+        ring_schedule(1)
+
+
+@pytest.mark.parametrize("n_workers,chunks", [(1, 1), (1, 4), (3, 2),
+                                              (7, 1)])
+def test_incast_schedule_serializes_on_the_server(n_workers, chunks):
+    rounds = incast_schedule(n_workers, n_chunks=chunks)
+    # one destination => one message per round, nothing lost
+    assert len(rounds) == n_workers * chunks
+    assert all(len(r) == 1 for r in rounds)
+    pairs = [p for r in rounds for p in r]
+    assert all(d == 0 for _, d in pairs)
+    assert {s for s, _ in pairs} == set(range(1, n_workers + 1))
+    # chunk-major: each worker appears once per chunk wave
+    for c in range(chunks):
+        wave = pairs[c * n_workers:(c + 1) * n_workers]
+        assert {s for s, _ in wave} == set(range(1, n_workers + 1))
+    assert incast_rpcs_per_round(n_workers, chunks) == n_workers * chunks
+
+
+def test_incast_schedule_single_worker_is_chunked_p2p():
+    assert incast_schedule(1, n_chunks=3) == [[(1, 0)]] * 3
+
+
+# ---------------------------------------------------------------------------
+# cross-check: the simulated transport driving these schedules must land
+# exactly on the netmodel closed forms (the analytic counterparts)
+# ---------------------------------------------------------------------------
+
+def _stream_fabric(n_endpoints, net, total_bytes, chunks):
+    from repro import rpc
+    return rpc.RpcFabric(
+        rpc.SimulatedTransport(n_endpoints, net),
+        window_bytes=(chunks + 1) * total_bytes,
+        window_msgs=chunks + 1)
+
+
+@pytest.mark.parametrize("net_name", ["eth40g", "rdma_edr", "eth10g"])
+@pytest.mark.parametrize("n,chunks", [(2, 1), (6, 3), (16, 4)])
+def test_simulated_ring_matches_netmodel(net_name, n, chunks):
+    from repro import rpc
+    from repro.core.netmodel import NETWORKS
+    from repro.core.payload import PayloadSpec
+    spec = PayloadSpec(sizes=(65536,) * 4, scheme="t",
+                       categories=("medium",) * 4)
+    net = NETWORKS[net_name]
+    fab = _stream_fabric(n, net, spec.total_bytes, chunks)
+    rep = rpc.ring_exchange(fab, list(spec.sizes), n_chunks=chunks)
+    assert rep.modeled
+    assert rep.elapsed_s == pytest.approx(
+        net.ring_round_time(spec, n, n_chunks=chunks), rel=1e-9)
+
+
+@pytest.mark.parametrize("net_name", ["eth40g", "rdma_edr", "eth10g"])
+@pytest.mark.parametrize("n_workers,chunks", [(1, 1), (4, 3), (32, 2)])
+def test_simulated_incast_matches_netmodel(net_name, n_workers, chunks):
+    from repro import rpc
+    from repro.core.netmodel import NETWORKS
+    from repro.core.payload import PayloadSpec
+    spec = PayloadSpec(sizes=(65536,) * 4, scheme="t",
+                       categories=("medium",) * 4)
+    net = NETWORKS[net_name]
+    fab = _stream_fabric(n_workers + 1, net, spec.total_bytes, chunks)
+    rep = rpc.incast_exchange(fab, list(spec.sizes), n_chunks=chunks)
+    assert rep.modeled
+    assert rep.elapsed_s == pytest.approx(
+        net.incast_round_time(spec, n_workers, n_chunks=chunks),
+        rel=1e-9)
+
+
+def test_incast_contends_where_ring_does_not():
+    """The signature of the two families: ring time is flat in the
+    worker count, incast time grows superlinearly on kernel-TCP
+    networks (quadratic host-copy contention at the one server)."""
+    from repro.core.netmodel import NETWORKS
+    from repro.core.payload import PayloadSpec
+    spec = PayloadSpec(sizes=(1 << 20,), scheme="t",
+                       categories=("large",))
+    net = NETWORKS["eth10g"]
+    assert net.ring_round_time(spec, 32) == pytest.approx(
+        net.ring_round_time(spec, 4))
+    t4 = net.incast_round_time(spec, 4)
+    t32 = net.incast_round_time(spec, 32)
+    assert t32 > 8 * t4                  # 8x workers, > 8x round time
+    # and the fetch egress term keeps even zero-copy (RDMA) incast
+    # scaling at least linearly with the fan-in
+    r = NETWORKS["rdma_edr"]
+    assert r.incast_round_time(spec, 32) > 7 * r.incast_round_time(spec, 4)
