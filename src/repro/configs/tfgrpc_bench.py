@@ -54,6 +54,10 @@ class BenchConfig:
     transport: str = "collective"
     # chunks per stream for the ring/incast streaming families
     stream_chunks: int = 4
+    # incast asymmetry: the fetch payload is this fraction/multiple of
+    # the push payload (1.0 = symmetric; 0.25 models a small variable
+    # pull against a large gradient push)
+    fetch_ratio: float = 1.0
     # explicit payload override (e.g. --arch): a core.payload.PayloadSpec;
     # when set, the S/M/L generator fields above are ignored
     payload_spec: Optional[object] = None

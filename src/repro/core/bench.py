@@ -44,6 +44,9 @@ class BenchStats:
     derived: Dict[str, float] = field(default_factory=dict)
     resources: Optional[ResourceReport] = None
     model_projection: Dict[str, float] = field(default_factory=dict)
+    # per-method interceptor metrics (fabric families): call counts +
+    # latency percentiles from the MetricsInterceptor on the fabric
+    rpc_metrics: Dict[str, dict] = field(default_factory=dict)
 
     def row(self) -> str:
         d = ",".join(f"{k}={v:.6g}" for k, v in self.derived.items())
@@ -92,7 +95,7 @@ def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
         elif name == "incast":
             st.model_projection[net_name] = net.incast_throughput(
                 spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
-                serialized=serialized)
+                serialized=serialized, fetch_ratio=cfg.fetch_ratio)
         else:
             st.model_projection[net_name] = net.ps_throughput(
                 spec, cfg.num_ps, cfg.num_workers, serialized=serialized)
@@ -147,9 +150,10 @@ def ps_throughput(cfg: BenchConfig) -> BenchStats:
 def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
                  family: str):
     """Build the rpc fabric (+ materialized bufs where the transport
-    moves real bytes) for one fabric-family benchmark under
-    cfg.transport. Windows are sized so a whole stream
-    (cfg.stream_chunks payloads) fits in flight per channel — the
+    moves real bytes, + the MetricsInterceptor every fabric benchmark
+    reports from) for one fabric-family benchmark under cfg.transport.
+    Windows are sized so a whole stream (cfg.stream_chunks payloads,
+    fetch asymmetry included) fits in flight per channel — the
     benchmark measures the traffic pattern, not an arbitrarily small
     default window; shrink RpcFabric windows directly to study
     back-pressure."""
@@ -182,23 +186,31 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
     else:
         raise ValueError(f"unknown transport {cfg.transport!r}")
     chunks = max(1, cfg.stream_chunks)
+    per_chunk = int(spec.total_bytes * max(1.0, cfg.fetch_ratio))
+    metrics = rpclib.MetricsInterceptor()
     fabric = rpclib.RpcFabric(
         transport,
-        window_bytes=max(4 * 1024 * 1024,
-                         (chunks + 1) * spec.total_bytes),
-        window_msgs=max(32, chunks + 1))
-    return fabric, bufs
+        window_bytes=max(4 * 1024 * 1024, (chunks + 1) * per_chunk),
+        window_msgs=max(32, chunks + 1),
+        client_interceptors=[metrics])
+    return fabric, bufs, metrics
 
 
-def _fabric_bench(cfg: BenchConfig, exchange, fabric) -> List[float]:
+def _fabric_bench(cfg: BenchConfig, exchange, fabric,
+                  metrics=None) -> List[float]:
     """Measured-vs-modeled timing protocol shared by the fabric
-    families: modeled transports are exact (no warmup loop needed)."""
+    families: modeled transports are exact (no warmup loop needed).
+    ``metrics`` (the fabric's MetricsInterceptor) is reset after
+    warmup so the published percentiles cover only measured
+    iterations — never the compile/touch call."""
     if fabric.transport.modeled:
         return [exchange().elapsed_s for _ in range(3)]
     exchange()                                       # compile/touch
     t_end = time.perf_counter() + cfg.warmup_s
     while time.perf_counter() < t_end:
         exchange()
+    if metrics is not None:
+        metrics.reset()
     times, t_stop = [], time.perf_counter() + cfg.duration_s
     while time.perf_counter() < t_stop or len(times) < 5:
         times.append(exchange().elapsed_s)
@@ -213,8 +225,8 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
         raise RuntimeError("fully_connected needs --num-workers >= 2")
     from repro import rpc as rpclib
     spec = generate_spec(cfg)
-    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers,
-                                "fully_connected")
+    fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers,
+                                         "fully_connected")
     serialized = cfg.mode == "serialized"
 
     def exchange():
@@ -223,10 +235,12 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
 
     rpcs = ch.fc_rpcs_per_round(cfg.num_workers)
     with ResourceMonitor() as mon:
-        times = _fabric_bench(cfg, exchange, fabric)
-    return _stats("fully_connected", cfg, spec, times,
-                  {"rpcs_per_s": rpcs / float(np.mean(times)),
-                   "rpcs_per_round": float(rpcs)}, mon.report)
+        times = _fabric_bench(cfg, exchange, fabric, metrics)
+    st = _stats("fully_connected", cfg, spec, times,
+                {"rpcs_per_s": rpcs / float(np.mean(times)),
+                 "rpcs_per_round": float(rpcs)}, mon.report)
+    st.rpc_metrics = metrics.snapshot()
+    return st
 
 
 def ring(cfg: BenchConfig) -> BenchStats:
@@ -238,7 +252,8 @@ def ring(cfg: BenchConfig) -> BenchStats:
     from repro import rpc as rpclib
     spec = generate_spec(cfg)
     n_chunks = max(1, cfg.stream_chunks)
-    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers, "ring")
+    fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers,
+                                         "ring")
     serialized = cfg.mode == "serialized"
 
     def exchange():
@@ -248,39 +263,49 @@ def ring(cfg: BenchConfig) -> BenchStats:
 
     rpcs = ch.ring_rpcs_per_round(cfg.num_workers, n_chunks)
     with ResourceMonitor() as mon:
-        times = _fabric_bench(cfg, exchange, fabric)
-    return _stats("ring", cfg, spec, times,
-                  {"rpcs_per_s": rpcs / float(np.mean(times)),
-                   "rpcs_per_round": float(rpcs),
-                   "chunks_per_stream": float(n_chunks)}, mon.report)
+        times = _fabric_bench(cfg, exchange, fabric, metrics)
+    st = _stats("ring", cfg, spec, times,
+                {"rpcs_per_s": rpcs / float(np.mean(times)),
+                 "rpcs_per_round": float(rpcs),
+                 "chunks_per_stream": float(n_chunks)}, mon.report)
+    st.rpc_metrics = metrics.snapshot()
+    return st
 
 
 def incast(cfg: BenchConfig) -> BenchStats:
     """cfg.num_workers workers stream cfg.stream_chunks payload chunks
-    each into ONE server endpoint, which streams the payload back per
-    stream (the Cori-style parameter-server hotspot: N-way ingress +
-    N-way fetch egress on one node)."""
+    each into ONE server endpoint, which streams a fetch sized
+    ``cfg.fetch_ratio`` of the push payload back per stream (the
+    Cori-style parameter-server hotspot: N-way ingress + N-way fetch
+    egress on one node, push/fetch asymmetry configurable)."""
     if cfg.num_workers < 1:
         raise RuntimeError("incast needs --num-workers >= 1")
+    if cfg.fetch_ratio <= 0:
+        raise RuntimeError("incast needs --fetch-ratio > 0")
     from repro import rpc as rpclib
     spec = generate_spec(cfg)
     n_chunks = max(1, cfg.stream_chunks)
     # endpoint 0 is the server; workers are 1..num_workers
-    fabric, bufs = _make_fabric(cfg, spec, cfg.num_workers + 1, "incast")
+    fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers + 1,
+                                         "incast")
     serialized = cfg.mode == "serialized"
 
     def exchange():
         return rpclib.incast_exchange(fabric, list(spec.sizes),
                                       n_chunks=n_chunks, bufs=bufs,
-                                      serialized=serialized)
+                                      serialized=serialized,
+                                      fetch_ratio=cfg.fetch_ratio)
 
     rpcs = ch.incast_rpcs_per_round(cfg.num_workers, n_chunks)
     with ResourceMonitor() as mon:
-        times = _fabric_bench(cfg, exchange, fabric)
-    return _stats("incast", cfg, spec, times,
-                  {"rpcs_per_s": rpcs / float(np.mean(times)),
-                   "rpcs_per_round": float(rpcs),
-                   "chunks_per_stream": float(n_chunks)}, mon.report)
+        times = _fabric_bench(cfg, exchange, fabric, metrics)
+    st = _stats("incast", cfg, spec, times,
+                {"rpcs_per_s": rpcs / float(np.mean(times)),
+                 "rpcs_per_round": float(rpcs),
+                 "chunks_per_stream": float(n_chunks),
+                 "fetch_ratio": float(cfg.fetch_ratio)}, mon.report)
+    st.rpc_metrics = metrics.snapshot()
+    return st
 
 
 BENCHMARKS: Dict[str, Callable[[BenchConfig], BenchStats]] = {

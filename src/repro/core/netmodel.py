@@ -151,36 +151,53 @@ class NetworkModel:
 
     def incast_round_time(self, spec: PayloadSpec, n_workers: int, *,
                           n_chunks: int = 1,
-                          serialized: bool = False) -> float:
+                          serialized: bool = False,
+                          fetch_ratio: float = 1.0) -> float:
         """The Cori-style PS hotspot: n_workers stream n_chunks payload
         chunks each into ONE server, which answers every stream with a
-        payload-sized fetch response. Push half: the server ingests
-        n_workers * n_chunks messages serially with quadratic host-copy
-        contention (the classic incast cliff). Fetch half: the server's
-        own egress pump (n_workers * n_chunks payloads out) races each
-        worker's ingress of its n_chunks responses — without the egress
-        term the fan-out half would be free no matter how many workers
-        hang off the server. Matches rpc.SimulatedTransport pricing of
-        rpc.incast_exchange exactly (push flight + fetch flight)."""
+        fetch response sized ``fetch_ratio`` times the push payload
+        (1.0 = symmetric; <1 a small variable pull against a large
+        gradient push; >1 a fetch-heavy read). Push half: the server
+        ingests n_workers * n_chunks messages serially with quadratic
+        host-copy contention (the classic incast cliff). Fetch half:
+        the server's own egress pump (n_workers * n_chunks fetch
+        payloads out) races each worker's ingress of its n_chunks
+        responses — without the egress term the fan-out half would be
+        free no matter how many workers hang off the server. Matches
+        rpc.SimulatedTransport pricing of rpc.incast_exchange exactly
+        (push flight + fetch flight, asymmetric fetch sizes
+        included)."""
+        from repro.core.payload import classify, scale_sizes
         per_rpc = (self.payload_time(spec, serialized=serialized)
                    + self.msg_time(64))
         k = n_workers * n_chunks
         push = (per_rpc * k
                 + k * (k - 1) * spec.total_bytes / self.cpu_copy_Bps)
-        per_worker_fetch = (per_rpc * n_chunks
+        if fetch_ratio == 1.0:
+            fspec = spec
+        else:
+            fsizes = tuple(scale_sizes(spec.sizes, fetch_ratio))
+            fspec = PayloadSpec(sizes=fsizes, scheme=spec.scheme,
+                                categories=tuple(classify(s)
+                                                 for s in fsizes))
+        per_fetch_rpc = (self.payload_time(fspec, serialized=serialized)
+                         + self.msg_time(64))
+        per_worker_fetch = (per_fetch_rpc * n_chunks
                             + n_chunks * (n_chunks - 1)
-                            * spec.total_bytes / self.cpu_copy_Bps)
-        fetch = max(k * self.egress_time(spec), per_worker_fetch)
+                            * fspec.total_bytes / self.cpu_copy_Bps)
+        fetch = max(k * self.egress_time(fspec), per_worker_fetch)
         return push + fetch
 
     def incast_throughput(self, spec: PayloadSpec, n_workers: int, *,
                           n_chunks: int = 1,
-                          serialized: bool = False) -> float:
+                          serialized: bool = False,
+                          fetch_ratio: float = 1.0) -> float:
         """Aggregate pushed chunk-RPCs/s of the incast round."""
         rpcs = n_workers * n_chunks
         return rpcs / self.incast_round_time(spec, n_workers,
                                              n_chunks=n_chunks,
-                                             serialized=serialized)
+                                             serialized=serialized,
+                                             fetch_ratio=fetch_ratio)
 
 
 # fitted constants (benchmarks/calibrate.py; cluster A max err 2.7%,

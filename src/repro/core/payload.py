@@ -115,6 +115,14 @@ def materialize(spec: PayloadSpec, *, dtype=np.uint8, seed: int = 0,
     return bufs
 
 
+def scale_sizes(sizes: Sequence[int], ratio: float) -> List[int]:
+    """Scale every iovec size by ``ratio`` (min 1 byte each) — the
+    incast push/fetch asymmetry knob. ``ratio=1.0`` is the identity,
+    so symmetric paths stay byte-exact."""
+    assert ratio > 0, ratio
+    return [max(1, int(round(s * ratio))) for s in sizes]
+
+
 def classify(nbytes: int) -> str:
     if nbytes < T.SMALL_RANGE[1]:
         return "small"

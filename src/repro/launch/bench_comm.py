@@ -29,9 +29,14 @@ instead of the S/M/L generator (core.payload.from_arch) and benchmarks
 THAT payload. --transport picks the rpc-fabric datapath for the fabric
 families: collective (measured ppermute), loopback (measured
 shared-buffer memcpy), simulated (netmodel projection; endpoint counts
-far beyond the host device count). --sweep takes a comma-separated list
-of axes (scheme, mode, transport, benchmark, network) and runs the full
-cross-product of their values in one invocation.
+far beyond the host device count). --fetch-ratio sizes the incast
+fetch payload relative to the push (gradient-push vs variable-pull
+asymmetry). --sweep takes a comma-separated list of axes (scheme,
+mode, transport, benchmark, network, workers, stream_chunks — the last
+two generate scaling curves) and runs the full cross-product of their
+values in one invocation. Fabric-family rows carry per-method
+interceptor metrics (call counts + latency percentiles) under
+"rpc_metrics" in the --json output.
 """
 import argparse
 import json
@@ -45,14 +50,21 @@ TRANSPORT_CHOICES = ("collective", "loopback", "simulated")
 
 #: values an axis takes when swept (benchmark sweeps over the fabric
 #: families: the three paper benchmarks ignore --transport so crossing
-#: them with transports would repeat identical runs)
+#: them with transports would repeat identical runs). workers and
+#: stream_chunks are the scaling axes — one invocation yields a
+#: worker-count or chunk-count curve.
 SWEEP_AXES = {
     "scheme": ("uniform", "random", "skew"),
     "mode": ("non_serialized", "serialized"),
     "transport": TRANSPORT_CHOICES,
     "benchmark": FABRIC_BENCHMARKS,
     "network": None,     # filled from netmodel.NETWORKS lazily
+    "workers": (2, 4, 8, 16),
+    "stream_chunks": (1, 2, 4, 8),
 }
+
+#: sweep axis -> BenchConfig field (identity unless listed)
+AXIS_FIELD = {"workers": "num_workers"}
 
 
 def _metric(st) -> str:
@@ -80,7 +92,8 @@ def _build_config(args, payload_spec, **overrides):
         categories=tuple(args.categories.split(",")),
         warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
         network=args.network, transport=args.transport,
-        stream_chunks=args.stream_chunks, payload_spec=payload_spec)
+        stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
+        payload_spec=payload_spec)
     base.update(overrides)
     return BenchConfig(**base)
 
@@ -130,13 +143,22 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
         vals = SWEEP_AXES[ax]
         if ax == "network":
             vals = tuple(sorted(NETWORKS))
-        values.append([(ax, v) for v in vals])
+        if ax == "benchmark" and "stream_chunks" in axes:
+            # crossing benchmark x stream_chunks only makes sense for
+            # benchmarks that read the chunk count — fully_connected
+            # would repeat identical rows dressed up as a curve
+            vals = tuple(b for b in vals if b in ("ring", "incast"))
+        values.append([(AXIS_FIELD.get(ax, ax), v) for v in vals])
     rows = []
     for combo in itertools.product(*values):
         overrides = dict(combo)
         cfg = _build_config(args, payload_spec, **overrides)
         row = {"benchmark": cfg.benchmark, "scheme": cfg.scheme,
                "mode": cfg.mode, "network": _effective_network(cfg)}
+        if "workers" in axes:
+            row["workers"] = cfg.num_workers
+        if "stream_chunks" in axes:
+            row["stream_chunks"] = cfg.stream_chunks
         if cfg.benchmark in FABRIC_BENCHMARKS:
             row["transport"] = cfg.transport
         try:
@@ -149,13 +171,19 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
         row.update(mean_us=st.mean_s * 1e6, p95_us=st.p95_s * 1e6,
                    n_iters=st.n_iters, metric=m,
                    value=st.derived.get(m, st.derived.get("rpcs_per_s")))
+        if st.rpc_metrics:
+            row["rpc_metrics"] = st.rpc_metrics
         rows.append(row)
     return rows
 
 
 def _print_sweep(rows: List[dict]) -> None:
-    cols = ["benchmark", "scheme", "mode", "transport", "network",
-            "mean_us", "metric", "value"]
+    cols = ["benchmark", "scheme", "mode", "transport", "network"]
+    for extra in ("workers", "stream_chunks"):   # swept scaling axes
+        if any(extra in r for r in rows):
+            cols.append(extra)
+    n_id = len(cols)                             # identity columns
+    cols += ["mean_us", "metric", "value"]
     widths = {c: max(len(c), *(len(_cell(r, c)) for r in rows))
               for c in cols}
     print("  ".join(c.ljust(widths[c]) for c in cols))
@@ -163,7 +191,7 @@ def _print_sweep(rows: List[dict]) -> None:
     for r in rows:
         if "error" in r:
             line = "  ".join(_cell(r, c).ljust(widths[c])
-                             for c in cols[:5])
+                             for c in cols[:n_id])
             print(f"{line}  SKIPPED: {r['error']}")
         else:
             print("  ".join(_cell(r, c).ljust(widths[c]) for c in cols))
@@ -189,6 +217,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                     choices=list(TRANSPORT_CHOICES))
     ap.add_argument("--stream-chunks", type=int, default=4,
                     help="chunks per stream (ring/incast families)")
+    ap.add_argument("--fetch-ratio", type=float, default=1.0,
+                    help="incast: fetch payload as a fraction/multiple "
+                         "of the push payload (1.0 = symmetric)")
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
     ap.add_argument("--scheme", default="uniform",
@@ -227,6 +258,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                  f"choose from {', '.join(CATEGORIES)}")
     args.categories = ",".join(cats)
 
+    if args.fetch_ratio <= 0:
+        ap.error(f"--fetch-ratio must be > 0, got {args.fetch_ratio}")
+
     axes = None
     if args.sweep is not None:
         axes = [a.strip() for a in args.sweep.split(",") if a.strip()]
@@ -234,10 +268,32 @@ def main(argv: Optional[List[str]] = None) -> None:
         if bad or not axes:
             ap.error(f"--sweep: unknown axes {bad or '(empty)'}; choose "
                      f"from {', '.join(SWEEP_AXES)}")
+        dups = sorted({a for a in axes if axes.count(a) > 1})
+        if dups:
+            ap.error(f"--sweep: duplicate ax"
+                     f"{'is' if len(dups) == 1 else 'es'} "
+                     f"{', '.join(repr(a) for a in dups)}; each axis "
+                     f"may appear once")
         if "transport" in axes and "benchmark" not in axes \
                 and args.benchmark not in FABRIC_BENCHMARKS:
             ap.error(f"--sweep transport needs a fabric benchmark "
                      f"({', '.join(FABRIC_BENCHMARKS)}); "
+                     f"got --benchmark {args.benchmark}")
+        # the scaling axes only scale benchmarks that read them —
+        # sweeping them elsewhere would print identical rows dressed
+        # up as a curve
+        workers_ok = FABRIC_BENCHMARKS + ("ps_throughput",)
+        if "workers" in axes and "benchmark" not in axes \
+                and args.benchmark not in workers_ok:
+            ap.error(f"--sweep workers needs a benchmark that scales "
+                     f"with workers ({', '.join(workers_ok)}); "
+                     f"got --benchmark {args.benchmark}")
+        streaming_ok = ("ring", "incast")
+        if "stream_chunks" in axes \
+                and args.benchmark not in streaming_ok \
+                and "benchmark" not in axes:
+            ap.error(f"--sweep stream_chunks needs a streaming "
+                     f"benchmark ({', '.join(streaming_ok)}); "
                      f"got --benchmark {args.benchmark}")
 
     from repro.core import bench
@@ -267,6 +323,8 @@ def main(argv: Optional[List[str]] = None) -> None:
                  "metric": m,
                  "value": st.derived.get(m,
                                          st.derived.get("rpcs_per_s"))}]
+        if st.rpc_metrics:
+            rows[0]["rpc_metrics"] = st.rpc_metrics
     if args.json:
         text = json.dumps(rows, indent=2)
         if args.json == "-":

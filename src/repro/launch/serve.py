@@ -4,9 +4,12 @@
       [--batch 4] [--prompt-len 16] [--new-tokens 8]
 
 Requests travel through the rpc fabric (loopback transport, serialized
-framing) by default, so serving traffic exercises the same RPC runtime
-the communication benchmarks measure; --no-rpc calls the engine
-directly.
+framing) by default, via the generated ``Serve`` stub's
+server-streaming ``generate_stream`` method — one chunk per decoded
+token — so serving traffic exercises the same RPC runtime the
+communication benchmarks measure, streaming included. ``--unary`` uses
+the unary ``generate`` method (whole block in one reply); --no-rpc
+calls the engine directly.
 """
 from __future__ import annotations
 
@@ -33,6 +36,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--no-rpc", action="store_true",
                     help="bypass the rpc fabric, call the engine directly")
+    ap.add_argument("--unary", action="store_true",
+                    help="use the unary generate method instead of the "
+                         "server-streaming generate_stream")
     args = ap.parse_args()
 
     acfg = (get_reduced_config(args.arch) if args.reduced
@@ -46,7 +52,6 @@ def main() -> None:
 
     channel = None
     if not args.no_rpc:
-        from repro.serve.engine import rpc_generate
         _, channel = engine.serve_loopback()
 
     rng = np.random.default_rng(0)
@@ -55,13 +60,19 @@ def main() -> None:
                                (args.batch, args.prompt_len),
                                dtype=np.int32)
         t0 = time.perf_counter()
-        if channel is not None:
-            out = rpc_generate(channel, prompts)
-        else:
+        if channel is None:
             out = engine.generate(prompts)
+            via = "direct"
+        elif args.unary:
+            from repro.serve.engine import serve_stub
+            out = serve_stub(channel).generate((prompts, 0)).result()
+            via = "rpc/unary"
+        else:
+            from repro.serve.engine import rpc_generate_stream
+            out = rpc_generate_stream(channel, prompts)
+            via = f"rpc/stream({out.shape[1]} chunks)"
         dt = time.perf_counter() - t0
         tps = out.size / dt
-        via = "direct" if channel is None else "rpc"
         print(f"request {i} [{via}]: batch={args.batch} "
               f"new={out.shape[1]} {dt*1e3:.1f} ms ({tps:.1f} tok/s) "
               f"sample={out[0][:8].tolist()}")

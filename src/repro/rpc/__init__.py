@@ -13,16 +13,31 @@ Layers, bottom-up:
   collective  transport lowering flights onto core.channels ppermute
               schedules (measured on real devices)
   fabric      Channel/Server API, unary + client/server/bidi streaming
-              calls, flush loop; fully_connected/ring/incast exchanges
+              calls, flush loop (with deadline enforcement);
+              fully_connected/ring/incast exchanges
+  interceptors client/server interceptor chains: metrics,
+              deadline defaults, retry-on-transient
+  service     declarative ServiceDef/MethodSpec + generated Stubs —
+              the gRPC-style API surface over the fabric
 
 See docs/RPC.md for the architecture and transport matrix.
 """
 from repro.rpc.completion import CompletionQueue, Event
-from repro.rpc.fabric import (BidiStream, Call, Channel, FlightReport,
-                              RpcError, RpcFabric, Server, ServerStream,
-                              StreamHandle, fully_connected_exchange,
-                              incast_exchange, ring_exchange)
+from repro.rpc.fabric import (BIDI, CLIENT_STREAM, DEADLINE_EXCEEDED,
+                              SERVER_STREAM, UNARY, BidiStream, Call,
+                              Channel, FlightReport, RpcError, RpcFabric,
+                              Server, ServerStream, StreamHandle,
+                              fully_connected_exchange, incast_exchange,
+                              ring_exchange)
 from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats
+from repro.rpc.interceptors import (CallContext, ClientInterceptor,
+                                    DeadlineInterceptor,
+                                    MetricsInterceptor, RetryInterceptor,
+                                    ServerContext, ServerInterceptor,
+                                    TransientError)
+from repro.rpc.service import (EXCHANGE_SERVICE, INCAST_SERVICE,
+                               RING_SERVICE, Codec, MethodSpec,
+                               ServiceDef, Stub, StubMethod, UnaryCall)
 from repro.rpc.framing import (FLAG_ERROR, FLAG_ONE_WAY, FLAG_REPLY,
                                FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, Frame, decode, encode,
@@ -32,13 +47,19 @@ from repro.rpc.transport import (Delivery, LoopbackTransport, Message,
                                  schedule_rounds, spec_of)
 
 __all__ = [
-    "BidiStream", "Call", "Channel", "ChunkGate", "CompletionQueue",
-    "CreditWindow", "Delivery", "Event", "FlightReport", "FlowStats",
-    "Frame", "LoopbackTransport", "Message", "RpcError", "RpcFabric",
-    "Server", "ServerStream", "SimulatedTransport", "StreamHandle",
-    "Transport", "decode", "encode", "fully_connected_exchange",
-    "incast_exchange", "make_frame", "method_id", "ring_exchange",
-    "schedule_rounds", "spec_of", "stream_chunk",
+    "BIDI", "BidiStream", "Call", "CallContext", "Channel", "ChunkGate",
+    "CLIENT_STREAM", "ClientInterceptor", "Codec", "CompletionQueue",
+    "CreditWindow", "DEADLINE_EXCEEDED", "DeadlineInterceptor",
+    "Delivery", "EXCHANGE_SERVICE", "Event", "FlightReport", "FlowStats",
+    "Frame", "INCAST_SERVICE", "LoopbackTransport", "Message",
+    "MethodSpec", "MetricsInterceptor", "RING_SERVICE", "RetryInterceptor",
+    "RpcError", "RpcFabric", "SERVER_STREAM", "Server", "ServerContext",
+    "ServerInterceptor", "ServerStream", "ServiceDef",
+    "SimulatedTransport", "StreamHandle", "Stub", "StubMethod",
+    "Transport", "TransientError", "UNARY", "UnaryCall", "decode",
+    "encode", "fully_connected_exchange", "incast_exchange", "make_frame",
+    "method_id", "ring_exchange", "schedule_rounds", "spec_of",
+    "stream_chunk",
     "FLAG_ERROR", "FLAG_ONE_WAY", "FLAG_REPLY", "FLAG_SERIALIZED",
     "FLAG_STREAM", "FLAG_STREAM_END",
 ]

@@ -16,6 +16,7 @@ class Event:
     tag: int                # call_id (or flight id for transport events)
     kind: str               # "sent" | "received" | "replied" | "error"
                             # | "stream_chunk" | "stream_end"
+                            # | "deadline_exceeded" | "retry"
     ok: bool = True
     payload: Any = None     # usually a framing.Frame
     elapsed_s: float = 0.0

@@ -1,19 +1,21 @@
 """The RPC fabric: Channel/Server API over a pluggable Transport.
 
-Client side                         Server side
------------                         -----------
-fabric.channel(src, dst)            fabric.add_server(endpoint)
-  .call(method, bufs)    ->flight->   server.register(method, handler)
-  .stream(method, [bufs...])          …register(…, streaming=True)
-  .server_stream(method, bufs)        …register_server_stream(m, h)
-  .bidi_stream(method, [chunks])      …register_bidi(m, h)
+Client side                          Server side
+-----------                          -----------
+fabric.stub(service, src, dst)       fabric.add_server(endpoint)
+  .method(request)      ->flight->     server.add_service(service, handlers)
 
-Four call cardinalities: unary (1 request -> 1 reply), client-streaming
-(N chunks -> 1 reply), server-streaming (1 request -> N chunks), bidi
-(N chunks <-> M chunks). Response-streaming calls return a
-:class:`ServerStream` / :class:`BidiStream` handle instead of a Call;
-delivered chunks land in ``handle.chunks`` and push ``stream_chunk`` /
-``stream_end`` events onto the completion queue.
+Services are declared once (:mod:`repro.rpc.service`): a ``ServiceDef``
+of ``MethodSpec``\\ s with four cardinalities — unary (1 request ->
+1 reply), client-streaming (N chunks -> 1 reply), server-streaming
+(1 request -> N chunks), bidi (N <-> M chunks). ``add_service`` binds
+every method of a service at once; the generated ``Stub``'s methods
+return call handles uniformly: :class:`service.UnaryCall` for the
+reply-bearing kinds, :class:`ServerStream` / :class:`BidiStream` for
+the response-streaming kinds. The per-kind ``Server.register*`` /
+``Channel.call``/``stream``/... entry points below remain as the
+mechanism under the stubs (and as deprecated direct API for one
+release).
 
 Calls are buffered and moved in *flights* by ``flush()`` — the event
 loop. One flush: admit frames the per-direction credit windows allow,
@@ -27,6 +29,20 @@ burst larger than a flow-control window simply takes several flights —
 the stall counts in ``Channel.window.stats`` / ``rwindow.stats`` record
 the back-pressure per direction.
 
+Interceptors (:mod:`repro.rpc.interceptors`) thread through this loop:
+every call gets a :class:`interceptors.CallContext`; the client chain
+sees submit (``on_start``), every completion-queue event
+(``on_event``), and the terminal event (``on_complete``, which may
+answer ``"retry"`` to resubmit a failed unary call); the server chain
+brackets handler dispatch. Calls carry an optional **deadline**
+(relative seconds at submit, absolute on the context): the flush loop
+cancels expired calls — failing the future/handle with a
+``deadline_exceeded`` event and dropping their window-stalled chunks —
+and when everything is stalled on credits it advances the clock to the
+earliest stalled deadline (the transport's modeled clock, or a real
+sleep) instead of force-admitting, so back-pressure with a deadline
+resolves by cancellation, exactly gRPC's contract.
+
 Transports with ``dispatches=False`` (the collective transport) are pure
 exchange datapaths: delivery itself completes the call and the reply
 flight is skipped (the 64B ack is priced inside the transport).
@@ -34,19 +50,27 @@ flight is skipped (the 64B ack is priced inside the transport).
 from __future__ import annotations
 
 import time
+from collections.abc import Mapping
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
 from repro.rpc import framing
 from repro.rpc.completion import CompletionQueue, Event
 from repro.rpc.flow import ChunkGate, CreditWindow
+from repro.rpc.interceptors import (TRANSIENT_PREFIX, CallContext,
+                                    ClientInterceptor, ServerContext,
+                                    ServerInterceptor, TransientError)
 from repro.rpc.transport import Message, Transport
 
 
 class RpcError(Exception):
     pass
+
+
+DEADLINE_EXCEEDED = "deadline exceeded"
 
 
 def _spec_only(frame: Optional[framing.Frame]) -> Optional[framing.Frame]:
@@ -114,41 +138,129 @@ def _chunk_frames(frame: framing.Frame, chunks: Sequence[ChunkPayload],
 
 
 class Server:
-    """Per-endpoint method table. Client-streaming methods receive the
+    """Per-endpoint method table. The primary registration surface is
+    :meth:`add_service` — bind a whole ``ServiceDef`` at once under its
+    ``Service/method`` wire names. The per-kind ``register*`` methods
+    remain as the mechanism underneath (and as deprecated direct API
+    for one release); duplicate method or service registration raises
+    ``ValueError`` instead of silently last-write-winning.
+
+    Handler shapes per kind: client-streaming methods receive the
     concatenated buffer lists of every frame in the stream;
     server-streaming handlers return an iterable of chunk buffer lists;
     bidi handlers are called once per incoming chunk (with an ``end``
     flag) and return 0..M reply chunks each."""
 
-    def __init__(self, endpoint: int):
+    def __init__(self, endpoint: int, *,
+                 interceptors=None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.endpoint = endpoint
+        # a list, or a zero-arg callable returning one (the fabric
+        # passes a getter so reassigning fabric.server_interceptors
+        # after add_server still takes effect)
+        self._interceptors = interceptors
+        self._clock = clock
         self._methods: Dict[int, Tuple[str, Callable, str]] = {}
+        self._services: Set[str] = set()
         self._streams: Dict[int, List[List[np.ndarray]]] = {}
         self._bidi_seq: Dict[int, int] = {}
         self.calls_served = 0
+
+    @property
+    def interceptors(self) -> List[ServerInterceptor]:
+        it = self._interceptors
+        if callable(it):
+            return it()
+        return it if it is not None else []
+
+    def add_service(self, service, handlers) -> "Server":
+        """Bind every method of ``service`` (a ``ServiceDef``) at once.
+        ``handlers`` is an object with an attribute per method name, or
+        a mapping ``{method_name: callable}``. Validates the full
+        binding before registering anything, so a bad service is
+        atomic; re-adding a service name raises ``ValueError``."""
+        if service.name in self._services:
+            raise ValueError(f"endpoint {self.endpoint}: service "
+                             f"{service.name!r} already added")
+        resolved = []
+        for spec in service.methods:
+            h = (handlers.get(spec.name) if isinstance(handlers, Mapping)
+                 else getattr(handlers, spec.name, None))
+            if h is None:
+                raise ValueError(
+                    f"handlers for service {service.name!r} missing "
+                    f"method {spec.name!r}")
+            full = service.full_name(spec.name)
+            if framing.method_id(full) in self._methods:
+                raise ValueError(f"endpoint {self.endpoint}: method "
+                                 f"{full!r} already registered")
+            resolved.append((spec, h))
+        for spec, h in resolved:
+            self.register(service.full_name(spec.name), h,
+                          kind=spec.kind)
+        self._services.add(service.name)
+        return self
 
     def register(self, name: str, handler: Callable, *,
                  streaming: bool = False, kind: Optional[str] = None
                  ) -> None:
         kind = kind or (CLIENT_STREAM if streaming else UNARY)
         assert kind in (UNARY, CLIENT_STREAM, SERVER_STREAM, BIDI), kind
-        self._methods[framing.method_id(name)] = (name, handler, kind)
+        mid = framing.method_id(name)
+        if mid in self._methods:
+            raise ValueError(f"endpoint {self.endpoint}: method "
+                             f"{self._methods[mid][0]!r} already "
+                             f"registered")
+        self._methods[mid] = (name, handler, kind)
 
     def register_server_stream(self, name: str, handler: Callable) -> None:
-        """handler(request_bufs) -> iterable of reply chunks."""
+        """Deprecated — use :meth:`add_service` with a SERVER_STREAM
+        ``MethodSpec``. handler(request_bufs) -> iterable of chunks."""
         self.register(name, handler, kind=SERVER_STREAM)
 
     def register_bidi(self, name: str, handler: Callable) -> None:
-        """handler(chunk_bufs, end: bool) -> iterable of reply chunks
-        (or None). Called once per incoming chunk; the reply chunks
-        produced for the END chunk close the server's direction."""
+        """Deprecated — use :meth:`add_service` with a BIDI
+        ``MethodSpec``. handler(chunk_bufs, end: bool) -> iterable of
+        reply chunks (or None). Called once per incoming chunk; the
+        reply chunks produced for the END chunk close the server's
+        direction."""
         self.register(name, handler, kind=BIDI)
+
+    def abort_call(self, call_id: int) -> None:
+        """Drop per-call stream state (a cancelled stream's END frame
+        will never arrive to clean it up)."""
+        self._streams.pop(call_id, None)
+        self._bidi_seq.pop(call_id, None)
+
+    def _invoke(self, frame: framing.Frame, name: str, kind: str,
+                handler: Callable, args: tuple):
+        """Run one handler invocation through the server interceptor
+        chain: on_receive outer->inner, on_done inner->outer (with the
+        fault when the handler raised)."""
+        chain = self.interceptors
+        if not chain:
+            return handler(*args)
+        sctx = ServerContext(self.endpoint, frame.call_id, name, kind,
+                             self._clock())
+        for si in chain:
+            si.on_receive(sctx)
+        try:
+            out = handler(*args)
+        except Exception as e:
+            for si in reversed(chain):
+                si.on_done(sctx, False, str(e))
+            raise
+        for si in reversed(chain):
+            si.on_done(sctx, True)
+        return out
 
     def _fault(self, frame: framing.Frame, name: str, e: Exception
                ) -> List[framing.Frame]:
-        self._streams.pop(frame.call_id, None)
-        self._bidi_seq.pop(frame.call_id, None)
-        return [_error_reply(frame, f"{name}: {e}")]
+        self.abort_call(frame.call_id)
+        msg = f"{name}: {e}"
+        if isinstance(e, TransientError):
+            msg = f"{TRANSIENT_PREFIX} {msg}"
+        return [_error_reply(frame, msg)]
 
     def dispatch(self, frame: framing.Frame) -> List[framing.Frame]:
         """Handle one delivered frame; return the outgoing frames: plain
@@ -169,7 +281,8 @@ class Server:
         if kind == BIDI:
             end = frame.stream_end
             try:
-                outs = handler(frame.bufs or [], end) or []
+                outs = self._invoke(frame, name, kind, handler,
+                                    (frame.bufs or [], end)) or []
             except Exception as e:  # noqa: BLE001 — fault -> RPC error
                 return self._fault(frame, name, e)
             seq0 = self._bidi_seq.get(frame.call_id, 0)
@@ -191,14 +304,18 @@ class Server:
         else:
             request = frame.bufs or []
 
+        if kind == SERVER_STREAM:
+            # materialize inside the fault boundary: handlers may
+            # return lazy generators whose errors surface mid-iteration
+            handler = (lambda req, _h=handler: list(_h(req) or []))
         try:
-            reply = handler(request)
+            reply = self._invoke(frame, name, kind, handler, (request,))
         except Exception as e:  # noqa: BLE001 — handler fault -> RPC error
             return self._fault(frame, name, e)
         self.calls_served += 1
 
         if kind == SERVER_STREAM:
-            return _chunk_frames(frame, list(reply or []), close=True)
+            return _chunk_frames(frame, reply, close=True)
         if frame.one_way:
             return []
         if reply is None:
@@ -230,6 +347,13 @@ class StreamHandle:
         if self.error is not None:
             raise RpcError(self.error)
         return self.chunks
+
+    def result(self) -> List[List[np.ndarray]]:
+        """Flush the fabric if needed, then return the chunks (uniform
+        with ``service.UnaryCall.result``)."""
+        if not self.done:
+            self.channel.fabric.flush()
+        return self.chunk_bufs()
 
 
 class ServerStream(StreamHandle):
@@ -266,7 +390,9 @@ class BidiStream(StreamHandle):
 class Channel:
     """A (src -> dst) flow with one credit window per direction:
     ``window`` gates client->server frames, ``rwindow`` (behind
-    ``rx_gate``) gates server->client stream chunks."""
+    ``rx_gate``) gates server->client stream chunks. ``deadline_s`` on
+    any call kind is relative seconds on the fabric clock; the flush
+    loop enforces it (see :class:`RpcFabric`)."""
 
     def __init__(self, fabric: "RpcFabric", src: int, dst: int, *,
                  serialized: bool = False,
@@ -282,22 +408,27 @@ class Channel:
 
     def call(self, method: str, bufs: Optional[List[np.ndarray]], *,
              sizes: Optional[Sequence[int]] = None,
-             one_way: bool = False) -> Call:
+             one_way: bool = False,
+             deadline_s: Optional[float] = None) -> Call:
         frame = framing.make_frame(
             self.fabric.next_call_id(), method, bufs, sizes=sizes,
             serialized=self.serialized, one_way=one_way)
-        return self.fabric.submit(self, frame, method)
+        return self.fabric.submit(self, frame, method, kind=UNARY,
+                                  deadline_s=deadline_s, retryable=True)
 
     def stream(self, method: str,
                chunks: Sequence[List[np.ndarray]], *,
                one_way: bool = False,
-               sizes: Optional[Sequence[int]] = None) -> Call:
+               sizes: Optional[Sequence[int]] = None,
+               n_chunks: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> Call:
         """Client-streaming call: N data frames, one reply after END
         (none when one-way). ``sizes`` sends spec-only chunks of that
-        size list instead of real buffers."""
-        assert len(chunks) >= 1 or sizes is not None
+        size list instead of real buffers — ``n_chunks`` of them."""
+        assert (chunks is not None and len(chunks) >= 1) \
+            or sizes is not None
         cid = self.fabric.next_call_id()
-        n = len(chunks) if chunks else 1
+        n = len(chunks) if chunks else max(1, n_chunks or 1)
         call: Optional[Call] = None
         for i in range(n):
             bufs = chunks[i] if chunks else None
@@ -305,31 +436,36 @@ class Channel:
                 cid, method, bufs, seq=i, end=(i == n - 1),
                 serialized=self.serialized, one_way=one_way,
                 sizes=sizes if bufs is None else None)
-            c = self.fabric.submit(self, frame, method)
+            c = self.fabric.submit(self, frame, method,
+                                   kind=CLIENT_STREAM,
+                                   deadline_s=deadline_s)
             call = c if i == n - 1 else call
         assert call is not None
         return call
 
     def server_stream(self, method: str,
                       bufs: Optional[List[np.ndarray]], *,
-                      sizes: Optional[Sequence[int]] = None
+                      sizes: Optional[Sequence[int]] = None,
+                      deadline_s: Optional[float] = None
                       ) -> ServerStream:
         """Server-streaming call: one request frame, chunked response."""
         cid = self.fabric.next_call_id()
         handle = ServerStream(self, cid, method)
-        self.fabric.register_handle(handle)
+        self.fabric.register_handle(handle, kind=SERVER_STREAM,
+                                    deadline_s=deadline_s)
         frame = framing.make_frame(cid, method, bufs, sizes=sizes,
                                    serialized=self.serialized)
         self.fabric.submit_raw(self, frame)
         return handle
 
     def bidi_stream(self, method: str,
-                    chunks: Optional[Sequence[List[np.ndarray]]] = None
-                    ) -> BidiStream:
+                    chunks: Optional[Sequence[List[np.ndarray]]] = None,
+                    *, deadline_s: Optional[float] = None) -> BidiStream:
         """Bidirectional stream. With ``chunks`` everything is sent and
         the client direction closed; without, use ``send``/``close``."""
         handle = BidiStream(self, self.fabric.next_call_id(), method)
-        self.fabric.register_handle(handle)
+        self.fabric.register_handle(handle, kind=BIDI,
+                                    deadline_s=deadline_s)
         if chunks is not None:
             assert len(chunks) >= 1
             for i, bufs in enumerate(chunks):
@@ -351,27 +487,50 @@ class FlightReport:
 class RpcFabric:
     def __init__(self, transport: Transport, *,
                  window_bytes: int = 4 * 1024 * 1024,
-                 window_msgs: int = 32):
+                 window_msgs: int = 32,
+                 client_interceptors: Optional[
+                     List[ClientInterceptor]] = None,
+                 server_interceptors: Optional[
+                     List[ServerInterceptor]] = None):
         self.transport = transport
         self.window_bytes = window_bytes
         self.window_msgs = window_msgs
         self.cq = CompletionQueue()
+        self.client_interceptors: List[ClientInterceptor] = \
+            list(client_interceptors or [])
+        self.server_interceptors: List[ServerInterceptor] = \
+            list(server_interceptors or [])
         self.servers: Dict[int, Server] = {}
         self._calls: Dict[int, Call] = {}
         self._handles: Dict[int, StreamHandle] = {}
+        self._ctx: Dict[int, CallContext] = {}
         self._channels: Dict[Tuple[int, int, bool], Channel] = {}
+        self._stubs: Dict[Tuple[str, int, int, bool], Any] = {}
         self._pending: List[Tuple[Channel, Message]] = []
         self._backlog: List[Tuple[Channel, Message]] = []
         # request messages whose credits are granted when their reply
         # lands; a list because stream chunks share one call_id and can
         # each draw a (error) reply
         self._awaiting_grant: Dict[int, List[Message]] = {}
+        # (sizes, fetch_ratio) the incast server was bound with — the
+        # fetch payload lives in its handler closure, so a later
+        # incast_exchange with a different shape must be rejected
+        self._incast_setup: Optional[Tuple] = None
         self._next_id = 1
 
     # ------------------------------------------------------------------
     @property
     def n_endpoints(self) -> int:
         return self.transport.n_endpoints
+
+    def now(self) -> float:
+        """The fabric clock: the transport's modeled clock when one
+        exists, host wall time otherwise. Deadlines and interceptor
+        latencies are measured on this clock, so simulated runs get
+        deterministic modeled latencies."""
+        if self.transport.modeled and hasattr(self.transport, "clock_s"):
+            return float(self.transport.clock_s)
+        return time.perf_counter()
 
     def next_call_id(self) -> int:
         cid = self._next_id
@@ -389,17 +548,41 @@ class RpcFabric:
                                      self.window_msgs))
         return self._channels[key]
 
+    def stub(self, service, src: int, dst: int, *,
+             serialized: bool = False):
+        """The generated client for ``service`` over the (src -> dst)
+        channel; cached per (service, channel). Keyed by service
+        *identity* — the cached Stub keeps its ServiceDef alive, so two
+        live definitions sharing a name never alias."""
+        from repro.rpc.service import Stub
+        key = (id(service), src, dst, serialized)
+        st = self._stubs.get(key)
+        if st is None:
+            st = Stub(self.channel(src, dst, serialized=serialized),
+                      service)
+            self._stubs[key] = st
+        return st
+
     def add_server(self, endpoint: int) -> Server:
         assert endpoint not in self.servers, endpoint
-        srv = Server(endpoint)
+        # a getter, not the list: reassigning fabric.server_interceptors
+        # later still reaches existing servers
+        srv = Server(endpoint,
+                     interceptors=lambda: self.server_interceptors,
+                     clock=self.now)
         self.servers[endpoint] = srv
         return srv
 
     # ------------------------------------------------------------------
     def submit(self, channel: Channel, frame: framing.Frame,
-               method: str) -> Call:
+               method: str, *, kind: str = UNARY,
+               deadline_s: Optional[float] = None,
+               retryable: bool = False) -> Call:
         call = Call(frame.call_id, method, channel.dst)
         self._calls[frame.call_id] = call
+        self._start_ctx(frame.call_id, method, kind, channel,
+                        deadline_s=deadline_s,
+                        request=frame if retryable else None)
         self.submit_raw(channel, frame)
         return call
 
@@ -422,24 +605,107 @@ class RpcFabric:
             channel.backlogged += 1
             self._backlog.append((channel, msg))
 
-    def register_handle(self, handle: StreamHandle) -> None:
+    def register_handle(self, handle: StreamHandle, *,
+                        kind: str = SERVER_STREAM,
+                        deadline_s: Optional[float] = None) -> None:
         self._handles[handle.call_id] = handle
+        self._start_ctx(handle.call_id, handle.method, kind,
+                        handle.channel, deadline_s=deadline_s)
 
+    # interceptor plumbing ---------------------------------------------
+    def _start_ctx(self, call_id: int, method: str, kind: str,
+                   channel: Channel, *,
+                   deadline_s: Optional[float] = None,
+                   request: Optional[framing.Frame] = None
+                   ) -> CallContext:
+        existing = self._ctx.get(call_id)
+        if existing is not None:     # later chunks of one client stream
+            return existing
+        now = self.now()
+        ctx = CallContext(
+            call_id, method, kind, channel.dst, now, channel=channel,
+            deadline_s=(now + deadline_s) if deadline_s is not None
+            else None,
+            request=request)
+        self._ctx[call_id] = ctx
+        for ic in self.client_interceptors:
+            ic.on_start(ctx)
+        return ctx
+
+    def _emit(self, ev: Event) -> None:
+        """Push one event through the completion queue and the client
+        chain's ``on_event`` hooks."""
+        self.cq.push(ev)
+        if self.client_interceptors:
+            ctx = self._ctx.get(ev.tag)
+            if ctx is not None:
+                for ic in self.client_interceptors:
+                    ic.on_event(ctx, ev)
+
+    def _client_complete(self, ctx: CallContext, ev: Event) -> bool:
+        """Unwind the client chain inner->outer for a terminal event.
+        The first interceptor to answer ``"retry"`` (on a retryable
+        call) consumes the failure — interceptors outer to it never see
+        this attempt; returns True when a retry was scheduled."""
+        for ic in reversed(self.client_interceptors):
+            if ic.on_complete(ctx, ev) == "retry" \
+                    and ctx.request is not None:
+                self._resubmit(ctx)
+                return True
+        return False
+
+    def _resubmit(self, ctx: CallContext) -> None:
+        """Re-issue a failed unary call under a fresh call_id; the
+        caller's Call future stays open across attempts."""
+        old_id = ctx.call_id
+        call = self._calls.pop(old_id, None)
+        self._ctx.pop(old_id, None)
+        new_id = self.next_call_id()
+        frame = replace(ctx.request, call_id=new_id)
+        ctx.call_id, ctx.attempts = new_id, ctx.attempts + 1
+        ctx.request = frame
+        self._ctx[new_id] = ctx
+        if call is not None:
+            call.call_id = new_id
+            self._calls[new_id] = call
+        self._emit(Event(new_id, "retry"))
+        self.submit_raw(ctx.channel, frame)
+
+    # completion --------------------------------------------------------
     def _complete(self, call: Call, frame: Optional[framing.Frame],
                   kind: str, error: Optional[str] = None) -> None:
+        ctx = self._ctx.get(call.call_id)
+        ev = Event(call.call_id, kind, ok=error is None,
+                   payload=_spec_only(frame))
+        if ctx is not None:
+            ctx.end_s = self.now()
+            ctx.meta["error"] = error
+            # uniform terminal order, every outcome: on_complete unwinds
+            # the chain first (it may consume an error as a retry), then
+            # the terminal event hits the cq and on_event
+            if self._client_complete(ctx, ev):
+                return                       # retried; future stays open
         call.done, call.result, call.error = True, frame, error
-        self.cq.push(Event(call.call_id, kind, ok=error is None,
-                           payload=_spec_only(frame)))
+        self._emit(ev)
         # the caller holds the Call object; the fabric is done with it
         self._calls.pop(call.call_id, None)
+        self._ctx.pop(call.call_id, None)
 
     def _finish_handle(self, handle: StreamHandle,
-                       error: Optional[str] = None) -> None:
+                       error: Optional[str] = None,
+                       kind: Optional[str] = None) -> None:
         handle.done, handle.error = True, error
-        self.cq.push(Event(handle.call_id,
-                           "error" if error else "stream_end",
-                           ok=error is None))
+        ev = Event(handle.call_id,
+                   kind or ("error" if error else "stream_end"),
+                   ok=error is None)
+        ctx = self._ctx.get(handle.call_id)
+        if ctx is not None:
+            ctx.end_s = self.now()
+            ctx.meta["error"] = error
+            self._client_complete(ctx, ev)   # streams never retry
+        self._emit(ev)
         self._handles.pop(handle.call_id, None)
+        self._ctx.pop(handle.call_id, None)
 
     def _grant(self, msg: Message) -> None:
         ch = self._channels.get((msg.src, msg.dst, msg.frame.serialized))
@@ -470,23 +736,107 @@ class RpcFabric:
             handle.chunks.append(m.frame.bufs
                                  if m.frame.bufs is not None
                                  else list(m.frame.sizes))
-            self.cq.push(Event(m.frame.call_id, "stream_chunk",
-                               payload=_spec_only(m.frame)))
+            self._emit(Event(m.frame.call_id, "stream_chunk",
+                             payload=_spec_only(m.frame)))
         if m.frame.stream_end:
             self._finish_handle(handle)
 
+    # deadlines ---------------------------------------------------------
+    def _have_deadlines(self) -> bool:
+        return any(c.deadline_s is not None for c in self._ctx.values())
+
+    def _cancel_expired(self) -> int:
+        now = self.now()
+        expired = [c for c in self._ctx.values()
+                   if c.deadline_s is not None and now >= c.deadline_s]
+        for ctx in expired:
+            self._cancel(ctx, DEADLINE_EXCEEDED)
+        return len(expired)
+
+    def _cancel(self, ctx: CallContext, reason: str) -> None:
+        """Cancel one call: purge its frames — backlogged, gated, AND
+        already admitted to the next flight (refunding the admitted
+        frames' window credits) — drop the server's partial-stream
+        state, and fail the future/handle with a ``deadline_exceeded``
+        event. Dropping pending frames matters: a chunk delivered
+        after the cancel would silently re-create the server-side
+        stream state that no END will ever clean up."""
+        cid = ctx.call_id
+        kept: List[Tuple[Channel, Message]] = []
+        for ch_, msg in self._backlog:
+            if msg.frame.call_id == cid:
+                ch_.backlogged -= 1     # queued frames held no credits
+            else:
+                kept.append((ch_, msg))
+        self._backlog = kept
+        kept = []
+        for ch_, msg in self._pending:
+            if msg.frame.call_id != cid:
+                kept.append((ch_, msg))
+            elif msg.frame.is_reply:    # admitted server->client chunk
+                ch_.rx_gate.grant(msg.frame.total_bytes)
+            else:                       # admitted client->server frame
+                ch_.window.grant(msg.frame.total_bytes)
+        self._pending = kept
+        for ch_ in self._channels.values():
+            ch_.rx_gate.drop(lambda m: m.frame.call_id == cid)
+        for srv in self.servers.values():
+            srv.abort_call(cid)     # partial streams never get their END
+        call = self._calls.get(cid)
+        if call is not None and not call.done:
+            self._complete(call, None, "deadline_exceeded", error=reason)
+        handle = self._handles.get(cid)
+        if handle is not None and not handle.done:
+            self._finish_handle(handle, error=reason,
+                                kind="deadline_exceeded")
+        self._ctx.pop(cid, None)
+
+    def _deadline_wait(self) -> bool:
+        """Everything is stalled on credits and nothing is in flight.
+        If any *stalled* frame's call carries a deadline, advance the
+        fabric clock to the earliest one (the modeled transport clock,
+        or a real sleep) and cancel — back-pressure with a deadline
+        resolves by cancellation, not by forcing uncredited admission.
+        Returns True when a cancellation freed the loop."""
+        stalled = {m.frame.call_id for _, m in self._backlog}
+        for ch in self._channels.values():
+            stalled.update(m.frame.call_id for m, _ in ch.rx_gate.items())
+        deadlines = [self._ctx[c].deadline_s for c in stalled
+                     if c in self._ctx
+                     and self._ctx[c].deadline_s is not None]
+        if not deadlines:
+            return False
+        target = min(deadlines)
+        if self.transport.modeled and hasattr(self.transport, "clock_s"):
+            self.transport.clock_s = max(self.transport.clock_s, target)
+        else:
+            time.sleep(max(0.0, target - time.perf_counter()))
+        return self._cancel_expired() > 0
+
+    # event loop --------------------------------------------------------
     def flush(self) -> FlightReport:
-        """Drive the event loop until every submitted call completes and
-        every open response stream drains."""
+        """Drive the event loop until every submitted call completes,
+        every open response stream drains, and every expired deadline
+        has cancelled its call."""
         rep = FlightReport(modeled=self.transport.modeled)
         t0 = time.perf_counter()
-        while self._pending or self._backlog or self._gated_chunks():
+        while True:
+            if self._ctx and self._have_deadlines():
+                self._cancel_expired()
+            if not (self._pending or self._backlog
+                    or self._gated_chunks()):
+                break
             if not self._pending:
-                # admit as credits allow; at least one must move or the
-                # window is simply too small for the message
-                admitted = (self._admit_backlog(force_one=True)
-                            or self._pump_gates(force_one=True))
-                assert admitted, "flow-control deadlock"
+                # admit as credits allow; otherwise wait out a stalled
+                # deadline; as a last resort one message must move or
+                # the window is simply too small for the message
+                admitted = self._admit_backlog() or self._pump_gates()
+                if not admitted:
+                    if self._deadline_wait():
+                        continue
+                    admitted = (self._admit_backlog(force_one=True)
+                                or self._pump_gates(force_one=True))
+                    assert admitted, "flow-control deadlock"
             flight = self._pending
             self._pending = []
             delivery = self.transport.deliver([m for _, m in flight])
@@ -503,9 +853,13 @@ class RpcFabric:
                 call = self._calls.get(m.frame.call_id)
                 handle = self._handles.get(m.frame.call_id)
                 if not self.transport.dispatches:
-                    # exchange datapath: delivery IS completion
+                    # exchange datapath: delivery IS completion — a
+                    # stream's call completes when its END lands, so
+                    # deadlines/metrics cover the whole stream
                     self._grant(m)
-                    if call is not None and not call.done:
+                    if call is not None and not call.done \
+                            and (not m.frame.is_stream
+                                 or m.frame.stream_end):
                         self._complete(call, m.frame, "sent")
                     if handle is not None and m.frame.stream_end:
                         self._finish_handle(handle)
@@ -520,8 +874,8 @@ class RpcFabric:
                         self._finish_handle(handle, error=err)
                     continue
                 outs = srv.dispatch(m.frame)
-                self.cq.push(Event(m.frame.call_id, "received",
-                                   payload=_spec_only(m.frame)))
+                self._emit(Event(m.frame.call_id, "received",
+                                 payload=_spec_only(m.frame)))
                 plain = [o for o in outs if not o.is_stream]
                 chunks = [o for o in outs if o.is_stream]
                 if plain:
@@ -532,10 +886,15 @@ class RpcFabric:
                                    for o in plain)
                 else:
                     # stream-kind input (or one-way): receipt is
-                    # consumption — forward credits return now
+                    # consumption — forward credits return now. A
+                    # one-way STREAM call completes only when its END
+                    # chunk is consumed, keeping the call context (and
+                    # its deadline) live for the whole stream
                     self._grant(m)
                     if call is not None and m.frame.one_way \
-                            and not call.done:
+                            and not call.done \
+                            and (not m.frame.is_stream
+                                 or m.frame.stream_end):
                         self._complete(call, None, "sent")
                 for o in chunks:
                     ch = self._channels.get((m.src, m.dst,
@@ -622,27 +981,32 @@ class RpcFabric:
 # ---------------------------------------------------------------------------
 # benchmark drivers: the fully-connected / ring / incast exchanges over
 # one fabric (paper §2's process architecture beyond the 3 fixed
-# benchmarks)
+# benchmarks), each expressed as stub calls against its declared
+# service (service.EXCHANGE_SERVICE / RING_SERVICE / INCAST_SERVICE)
 # ---------------------------------------------------------------------------
 
 def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                              bufs: Optional[List[np.ndarray]] = None,
                              serialized: bool = False) -> FlightReport:
     """Every endpoint sends one payload to every other endpoint
-    (n * (n-1) one-way RPCs), generated in the shift order of
-    ``channels.all_to_all_schedule`` so the transport's edge coloring
-    recovers exactly n-1 rounds."""
+    (n * (n-1) one-way unary RPCs through ``Exchange/exchange`` stubs),
+    generated in the shift order of ``channels.all_to_all_schedule`` so
+    the transport's edge coloring recovers exactly n-1 rounds."""
+    from repro.rpc.service import EXCHANGE_SERVICE
     n = fabric.n_endpoints
     assert n >= 2, n
     if fabric.transport.dispatches:
+        handlers = {"exchange": lambda req: None}
         for e in range(n):
             if e not in fabric.servers:
-                fabric.add_server(e).register("exchange", lambda req: None)
+                fabric.add_server(e).add_service(EXCHANGE_SERVICE,
+                                                 handlers)
     for r in range(1, n):
         for i in range(n):
-            fabric.channel(i, (i + r) % n, serialized=serialized).call(
-                "exchange", bufs,
-                sizes=sizes if bufs is None else None, one_way=True)
+            stub = fabric.stub(EXCHANGE_SERVICE, i, (i + r) % n,
+                               serialized=serialized)
+            stub.exchange(bufs, sizes=sizes if bufs is None else None,
+                          one_way=True)
     return fabric.flush()
 
 
@@ -650,55 +1014,76 @@ def ring_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                   n_chunks: int = 1,
                   bufs: Optional[List[np.ndarray]] = None,
                   serialized: bool = False) -> FlightReport:
-    """Every worker streams ``n_chunks`` payload chunks to its
-    successor (i -> (i+1) % n): n one-way client-streams, submitted
-    chunk-major so the transport's edge coloring recovers exactly
+    """Every worker client-streams ``n_chunks`` payload chunks to its
+    successor (i -> (i+1) % n) through ``Ring/ring`` stubs: n one-way
+    streams whose chunks the transport edge-colors back into exactly
     ``channels.ring_schedule(n, n_chunks)`` — n_chunks rotation
     rounds."""
+    from repro.rpc.service import RING_SERVICE
     n = fabric.n_endpoints
     assert n >= 2, n
     assert n_chunks >= 1, n_chunks
     if fabric.transport.dispatches:
+        handlers = {"ring": lambda req: None}
         for e in range(n):
             if e not in fabric.servers:
-                fabric.add_server(e).register("ring", lambda req: None,
-                                              streaming=True)
-    cids = [fabric.next_call_id() for _ in range(n)]
-    for c in range(n_chunks):
-        for i in range(n):
-            frame = framing.stream_chunk(
-                cids[i], "ring", bufs, seq=c, end=(c == n_chunks - 1),
-                serialized=serialized, one_way=True,
-                sizes=sizes if bufs is None else None)
-            fabric.submit_raw(fabric.channel(i, (i + 1) % n,
-                                             serialized=serialized),
-                              frame)
+                fabric.add_server(e).add_service(RING_SERVICE, handlers)
+    for i in range(n):
+        stub = fabric.stub(RING_SERVICE, i, (i + 1) % n,
+                           serialized=serialized)
+        stub.ring([bufs] * n_chunks if bufs is not None else None,
+                  sizes=sizes if bufs is None else None,
+                  n_chunks=n_chunks, one_way=True)
     return fabric.flush()
 
 
 def incast_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                     n_chunks: int = 1,
                     bufs: Optional[List[np.ndarray]] = None,
-                    serialized: bool = False) -> FlightReport:
+                    serialized: bool = False,
+                    fetch_ratio: float = 1.0) -> FlightReport:
     """The Cori-style parameter-server hotspot: every worker
     (endpoints 1..n-1) bidi-streams ``n_chunks`` payload chunks into
-    one server (endpoint 0); on each stream's END the server streams
-    the payload back (the variable fetch) — so the server pays both the
-    N-way ingress of the push AND the N-way egress of the fetch. On
-    non-dispatching transports (collective) only the push half runs."""
+    one server (endpoint 0) through ``Incast/push_fetch`` stubs; on
+    each stream's END the server streams the fetch back — sized
+    ``fetch_ratio`` times the push payload (1.0 = symmetric; <1 models
+    a small variable pull, >1 a fetch-heavy read) — so the server pays
+    both the N-way ingress of the push AND the N-way egress of the
+    fetch. On non-dispatching transports (collective) only the push
+    half runs."""
+    from repro.core.payload import scale_sizes
+    from repro.rpc.service import INCAST_SERVICE
     n = fabric.n_endpoints
     assert n >= 2, "incast needs >= 1 worker + the server endpoint"
     assert n_chunks >= 1, n_chunks
+    assert fetch_ratio > 0, fetch_ratio
+    fetch_sizes = scale_sizes(sizes, fetch_ratio)
+    # the fetch payload is baked into the server's handler closure on
+    # first registration; a later call with a different shape would be
+    # silently served the old fetch — reject it instead
+    setup = (tuple(int(s) for s in sizes), float(fetch_ratio))
+    prev = fabric._incast_setup
+    if prev is not None and prev != setup:
+        raise ValueError(
+            f"incast server on this fabric already bound with "
+            f"sizes/fetch_ratio {prev}; got {setup} — use a fresh "
+            f"fabric to change the fetch shape")
+    fabric._incast_setup = setup
     if fabric.transport.dispatches and 0 not in fabric.servers:
-        fetch = ([list(bufs)] * n_chunks if bufs is not None
-                 else [tuple(sizes)] * n_chunks)
+        if bufs is not None:
+            fetch_bufs = [np.resize(b, s).astype(np.uint8)
+                          for b, s in zip(bufs, fetch_sizes)]
+            fetch = [list(fetch_bufs)] * n_chunks
+        else:
+            fetch = [tuple(fetch_sizes)] * n_chunks
 
         def push_fetch(chunk, end, _fetch=fetch):
             return _fetch if end else None
 
-        fabric.add_server(0).register_bidi("push_fetch", push_fetch)
-    handles = [fabric.channel(w, 0, serialized=serialized)
-               .bidi_stream("push_fetch") for w in range(1, n)]
+        fabric.add_server(0).add_service(INCAST_SERVICE,
+                                         {"push_fetch": push_fetch})
+    handles = [fabric.stub(INCAST_SERVICE, w, 0, serialized=serialized)
+               .push_fetch() for w in range(1, n)]
     for c in range(n_chunks):
         for h in handles:
             h.send(bufs, sizes=sizes if bufs is None else None,

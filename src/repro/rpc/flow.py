@@ -116,3 +116,18 @@ class ChunkGate:
 
     def grant(self, nbytes: int) -> None:
         self.window.grant(nbytes)
+
+    def items(self) -> List[Tuple[Any, int]]:
+        """The queued (item, nbytes) pairs, FIFO order (inspection —
+        e.g. the fabric's deadline scan over stalled chunks)."""
+        return list(self._q)
+
+    def drop(self, pred) -> List[Tuple[Any, int]]:
+        """Remove queued chunks whose item matches ``pred`` (call
+        cancellation). Queued chunks hold no credits, so nothing is
+        granted back; returns the dropped (item, nbytes) pairs."""
+        dropped = [(it, nb) for it, nb in self._q if pred(it)]
+        if dropped:
+            self._q = deque((it, nb) for it, nb in self._q
+                            if not pred(it))
+        return dropped

@@ -1,0 +1,244 @@
+"""Client/server interceptor chains for the RPC fabric (the gRPC
+interceptor analogue), threaded through the completion queue.
+
+A *client* interceptor observes every call made through a fabric:
+``on_start`` when the first frame is submitted, ``on_event`` for every
+completion-queue event the call produces, ``on_complete`` once when the
+call reaches a terminal state (the chain's ``on_complete`` unwinds
+first, then the terminal event itself reaches the cq and ``on_event`` —
+uniformly for success, error, and deadline outcomes). The chain nests like gRPC's: for
+``fabric.client_interceptors = [outer, inner]`` the start hooks run
+outer->inner and the completion hooks unwind inner->outer; an
+interceptor that answers ``"retry"`` from ``on_complete`` consumes the
+failure — interceptors outer to it never see the failed attempt, only
+the final outcome.
+
+A *server* interceptor brackets handler dispatch on every endpoint the
+fabric creates after it is installed: ``on_receive`` before the handler
+runs (outer->inner), ``on_done`` after (inner->outer), with the fault
+carried when the handler raised.
+
+Three stock interceptors cover the bookkeeping the paper's §2.2 calls
+out as part of the RPC interface layer itself:
+
+  MetricsInterceptor   per-method call counts + latency percentiles
+                       (and stream chunk counts), measured on the
+                       fabric clock — wall time for measured
+                       transports, the transport's modeled clock for
+                       simulated ones.
+  DeadlineInterceptor  applies a default deadline to calls that set
+                       none and counts ``deadline_exceeded`` events;
+                       the fabric enforces deadlines (cancelling
+                       stalled calls and dropping their gated chunks).
+  RetryInterceptor     resubmits unary calls that failed with a
+                       transient error (``TransientError`` on the
+                       server, or "no server at endpoint").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.rpc import framing
+from repro.rpc.completion import Event
+
+
+class TransientError(Exception):
+    """Raise from a handler to mark the failure retryable: the error
+    reply is prefixed ``TRANSIENT:`` and a RetryInterceptor resubmits
+    the call."""
+
+
+TRANSIENT_PREFIX = "TRANSIENT:"
+
+
+@dataclass
+class CallContext:
+    """Per-call state shared by the fabric and the client chain."""
+    call_id: int
+    method: str
+    kind: str                      # fabric.UNARY/.CLIENT_STREAM/...
+    dst: int
+    start_s: float                 # fabric clock at submit
+    channel: Any = None
+    deadline_s: Optional[float] = None   # absolute fabric-clock time
+    end_s: Optional[float] = None
+    attempts: int = 1
+    # retained for retries (unary only; the bufs are caller-owned)
+    request: Optional[framing.Frame] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ServerContext:
+    """Per-dispatch state shared by the server chain."""
+    endpoint: int
+    call_id: int
+    method: str
+    kind: str
+    start_s: float
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class ClientInterceptor:
+    def on_start(self, ctx: CallContext) -> None:
+        pass
+
+    def on_event(self, ctx: CallContext, event: Event) -> None:
+        pass
+
+    def on_complete(self, ctx: CallContext, event: Event
+                    ) -> Optional[str]:
+        """Terminal hook; return ``"retry"`` to consume the failure and
+        resubmit (unary calls only)."""
+        return None
+
+
+class ServerInterceptor:
+    def on_receive(self, ctx: ServerContext) -> None:
+        pass
+
+    def on_done(self, ctx: ServerContext, ok: bool,
+                error: Optional[str] = None) -> None:
+        pass
+
+
+def is_transient(error: Optional[str]) -> bool:
+    """Transient = a server fault raised as TransientError (the reply
+    text is prefixed ``TRANSIENT:`` by the fabric's fault path) or a
+    not-yet-registered endpoint. Matched at the start only, so a
+    permanent error that merely *quotes* a transient one is not
+    retried."""
+    return bool(error) and (error.startswith(TRANSIENT_PREFIX)
+                            or error.startswith("no server at endpoint"))
+
+
+# ---------------------------------------------------------------------------
+# stock interceptors
+# ---------------------------------------------------------------------------
+
+class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
+    """Per-method call counts and latency percentiles, for free on every
+    stub call. Client side: one record per call attempt's terminal
+    event, latency on the fabric clock. Server side (install in
+    ``fabric.server_interceptors``): handler invocation counts under a
+    ``server:`` key prefix."""
+
+    def __init__(self):
+        self._recs: Dict[str, Dict[str, Any]] = {}
+
+    def _rec(self, method: str) -> Dict[str, Any]:
+        return self._recs.setdefault(method, {
+            "calls": 0, "ok": 0, "errors": 0, "deadline_exceeded": 0,
+            "retries": 0, "chunks": 0, "latencies_s": []})
+
+    def reset(self) -> None:
+        """Discard everything recorded so far (benchmarks call this
+        after warmup so compile/warmup calls don't pollute the
+        published percentiles)."""
+        self._recs.clear()
+
+    # client side --------------------------------------------------------
+    def on_start(self, ctx: CallContext) -> None:
+        self._rec(ctx.method)["calls"] += 1
+
+    def on_event(self, ctx: CallContext, event: Event) -> None:
+        if event.kind == "stream_chunk":
+            self._rec(ctx.method)["chunks"] += 1
+        elif event.kind == "retry":
+            self._rec(ctx.method)["retries"] += 1
+            self._rec(ctx.method)["calls"] += 1     # the new attempt
+
+    def on_complete(self, ctx: CallContext, event: Event
+                    ) -> Optional[str]:
+        rec = self._rec(ctx.method)
+        if event.kind == "deadline_exceeded":
+            rec["deadline_exceeded"] += 1
+        if event.ok:
+            rec["ok"] += 1
+        else:
+            rec["errors"] += 1
+        if ctx.end_s is not None:
+            rec["latencies_s"].append(ctx.end_s - ctx.start_s)
+        return None
+
+    # server side --------------------------------------------------------
+    def on_receive(self, ctx: ServerContext) -> None:
+        self._rec("server:" + ctx.method)["calls"] += 1
+
+    def on_done(self, ctx: ServerContext, ok: bool,
+                error: Optional[str] = None) -> None:
+        rec = self._rec("server:" + ctx.method)
+        rec["ok" if ok else "errors"] += 1
+
+    # reporting ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """JSON-ready per-method summary with latency percentiles."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for method, rec in self._recs.items():
+            row = {k: v for k, v in rec.items() if k != "latencies_s"}
+            lat = rec["latencies_s"]
+            if lat:
+                a = np.asarray(lat) * 1e6
+                row["latency_us"] = {
+                    "mean": float(a.mean()),
+                    "p50": float(np.percentile(a, 50)),
+                    "p95": float(np.percentile(a, 95)),
+                    "p99": float(np.percentile(a, 99)),
+                }
+            out[method] = row
+        return out
+
+
+class DeadlineInterceptor(ClientInterceptor):
+    """Applies ``default_deadline_s`` (relative) to calls that set no
+    deadline and counts deadline-exceeded completions. Enforcement —
+    cancelling the call, failing its handle, dropping its window-stalled
+    chunks — lives in the fabric's flush loop, which honors
+    ``ctx.deadline_s`` wherever it was set from."""
+
+    def __init__(self, default_deadline_s: Optional[float] = None):
+        self.default_deadline_s = default_deadline_s
+        self.exceeded = 0
+
+    def on_start(self, ctx: CallContext) -> None:
+        if ctx.deadline_s is None and self.default_deadline_s is not None:
+            ctx.deadline_s = ctx.start_s + self.default_deadline_s
+
+    def on_complete(self, ctx: CallContext, event: Event
+                    ) -> Optional[str]:
+        if event.kind == "deadline_exceeded":
+            self.exceeded += 1
+        return None
+
+
+class RetryInterceptor(ClientInterceptor):
+    """Retries unary calls that failed transiently, up to
+    ``max_attempts`` total attempts. The retry consumes the failure:
+    interceptors outer to this one see only the final outcome."""
+
+    def __init__(self, max_attempts: int = 3,
+                 retry_on: Callable[[Optional[str]], bool] = is_transient):
+        assert max_attempts >= 1
+        self.max_attempts = max_attempts
+        self.retry_on = retry_on
+        self.retries = 0
+
+    def on_complete(self, ctx: CallContext, event: Event
+                    ) -> Optional[str]:
+        if (event.kind == "error" and ctx.request is not None
+                and ctx.attempts < self.max_attempts
+                and self.retry_on(ctx.meta.get("error"))):
+            self.retries += 1
+            return "retry"
+        return None
+
+
+__all__ = [
+    "CallContext", "ClientInterceptor", "DeadlineInterceptor",
+    "MetricsInterceptor", "RetryInterceptor", "ServerContext",
+    "ServerInterceptor", "TransientError", "TRANSIENT_PREFIX",
+    "is_transient",
+]

@@ -2,15 +2,25 @@
 greedy/temperature sampling, static batch with slot reuse.
 
 Generation requests can also arrive through the rpc fabric: the engine
-exposes a ``generate`` method on an ``rpc.Server`` endpoint
-(``attach``/``serve_loopback``), so serving traffic exercises the same
-framing / flow-control / transport stack the communication benchmarks
-measure. ``rpc_generate`` is the matching client stub.
+binds the ``Serve`` service (:data:`SERVE_SERVICE`) on an
+``rpc.Server`` endpoint via ``attach``/``serve_loopback``, so serving
+traffic exercises the same framing / flow-control / transport stack the
+communication benchmarks measure. The service has two methods:
+
+  ``generate``         unary — the whole (B, new) token block in one
+                       reply (the original wire shape).
+  ``generate_stream``  server-streaming — one chunk per decode step,
+                       each a (B,) int32 token vector, so clients see
+                       token-by-token generation over the fabric.
+
+``serve_stub(channel)`` builds the generated client stub;
+``rpc_generate`` / ``rpc_generate_stream`` are convenience wrappers
+over it (``rpc_generate`` is the deprecated shim for the pre-stub API).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,10 +63,15 @@ class ServeEngine:
         return jax.random.categorical(key,
                                       logits[:, -1] / self.cfg.temperature)
 
-    def generate(self, prompts: np.ndarray,
-                 max_new_tokens: Optional[int] = None) -> np.ndarray:
-        """prompts: (B, S) int32 (right-aligned, no padding support needed
-        for fixed-length prompt batches). Returns (B, new) int32."""
+    def generate_tokens(self, prompts: np.ndarray,
+                        max_new_tokens: Optional[int] = None
+                        ) -> Iterator[jax.Array]:
+        """Token-by-token generation: yields one (B,) token vector per
+        decode step — the unit the server-streaming ``generate_stream``
+        method ships as a chunk. Yields *device* arrays so the unary
+        ``generate`` keeps async dispatch and transfers once; streaming
+        consumers pay the per-step host transfer, which they need
+        anyway to put bytes on the wire."""
         B, S = prompts.shape
         mnt = max_new_tokens or self.cfg.max_new_tokens
         assert S + mnt <= self.cfg.max_seq, (S, mnt, self.cfg.max_seq)
@@ -65,31 +80,46 @@ class ServeEngine:
         states, logits = self._prefill(self.params,
                                        {"tokens": jnp.asarray(prompts)})
         decode = self._decode_fn(B)
-        out = []
         key, k0 = jax.random.split(key)
         tok = self._sample(logits, k0)
-        out.append(tok)
+        yield tok
         for _ in range(mnt - 1):
             key, k = jax.random.split(key)
             states, logits = decode(self.params, states, tok[:, None],
                                     None)
             tok = self._sample(logits, k)
-            out.append(tok)
-        return np.asarray(jnp.stack(out, axis=1))
+            yield tok
+
+    def generate(self, prompts: np.ndarray,
+                 max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for fixed-length prompt batches). Returns (B, new) int32."""
+        toks = list(self.generate_tokens(prompts, max_new_tokens))
+        return np.asarray(jnp.stack(toks, axis=1))
 
     # ------------------------------------------------------------------
     # rpc endpoint
     # ------------------------------------------------------------------
 
     def rpc_handler(self, bufs: List[np.ndarray]) -> List[np.ndarray]:
-        """``generate`` method body: iovec request -> iovec reply."""
+        """``Serve/generate`` method body: iovec request -> iovec reply."""
         prompts, mnt = decode_generate_request(bufs)
         out = self.generate(prompts, mnt or None)
         return encode_generate_reply(out)
 
+    def rpc_stream_handler(self, bufs: List[np.ndarray]):
+        """``Serve/generate_stream`` method body: iovec request -> one
+        chunk per decode step, each a (B,) int32 token vector."""
+        prompts, mnt = decode_generate_request(bufs)
+        return ([_i32_buf(tok)]
+                for tok in self.generate_tokens(prompts, mnt or None))
+
     def attach(self, server) -> None:
-        """Register this engine's methods on an ``rpc.Server``."""
-        server.register(GENERATE_METHOD, self.rpc_handler)
+        """Bind this engine's Serve service on an ``rpc.Server``."""
+        server.add_service(SERVE_SERVICE, {
+            "generate": self.rpc_handler,
+            "generate_stream": self.rpc_stream_handler,
+        })
 
     def serve_loopback(self, *, endpoint: int = 0, client: int = 1,
                        serialized: bool = True):
@@ -105,11 +135,8 @@ class ServeEngine:
 
 
 # ---------------------------------------------------------------------------
-# generate-over-rpc wire codec + client stub
+# generate-over-rpc wire codec + generated stub
 # ---------------------------------------------------------------------------
-
-GENERATE_METHOD = "generate"
-
 
 def _i32_buf(values) -> np.ndarray:
     return np.ascontiguousarray(np.asarray(values, dtype="<i4")) \
@@ -143,10 +170,55 @@ def decode_generate_reply(bufs: List[np.ndarray]) -> np.ndarray:
         .reshape(int(B), int(N))
 
 
+def decode_token_chunk(bufs: List[np.ndarray]) -> np.ndarray:
+    """One ``generate_stream`` chunk -> (B,) int32 token vector."""
+    return np.ascontiguousarray(bufs[0]).view("<i4").copy()
+
+
+def _build_serve_service():
+    from repro.rpc.service import (SERVER_STREAM, UNARY, Codec,
+                                   MethodSpec, ServiceDef)
+    request_codec = Codec(
+        encode=lambda r: encode_generate_request(*r),
+        decode=lambda bufs: decode_generate_request(bufs))
+    reply_codec = Codec(encode=lambda t: encode_generate_reply(t),
+                        decode=decode_generate_reply)
+    return ServiceDef("Serve", (
+        MethodSpec("generate", UNARY, request_codec=request_codec,
+                   response_codec=reply_codec),
+        MethodSpec("generate_stream", SERVER_STREAM,
+                   request_codec=request_codec),
+    ))
+
+
+#: the serving service: unary ``generate`` + streaming ``generate_stream``
+SERVE_SERVICE = _build_serve_service()
+
+#: wire name of the unary method (kept for callers that log/match on it)
+GENERATE_METHOD = SERVE_SERVICE.full_name("generate")
+
+
+def serve_stub(channel):
+    """The generated ``Serve`` client stub over an existing channel
+    (served from the fabric's stub cache)."""
+    return channel.fabric.stub(SERVE_SERVICE, channel.src, channel.dst,
+                               serialized=channel.serialized)
+
+
 def rpc_generate(channel, prompts: np.ndarray,
                  max_new_tokens: int = 0) -> np.ndarray:
-    """Client stub: one unary ``generate`` call, driven to completion."""
-    call = channel.call(GENERATE_METHOD,
-                        encode_generate_request(prompts, max_new_tokens))
-    channel.fabric.flush()
-    return decode_generate_reply(call.reply_bufs())
+    """Deprecated shim (one release): delegates to the generated stub's
+    unary ``generate`` method. Use ``serve_stub(channel).generate``."""
+    return serve_stub(channel).generate((prompts, max_new_tokens)) \
+        .result()
+
+
+def rpc_generate_stream(channel, prompts: np.ndarray,
+                        max_new_tokens: int = 0) -> np.ndarray:
+    """Client for the streaming method: drives the ``ServerStream``
+    handle to completion and reassembles the per-step token chunks into
+    the same (B, new) block ``generate`` returns."""
+    handle = serve_stub(channel).generate_stream(
+        (prompts, max_new_tokens))
+    chunks = handle.result()
+    return np.stack([decode_token_chunk(c) for c in chunks], axis=1)

@@ -1,0 +1,680 @@
+"""The gRPC-style service/stub API: ServiceDef/Stub binding, interceptor
+chains (ordering, metrics, deadline, retry), deadline enforcement on
+stalled streams, duplicate-registration errors, incast fetch asymmetry,
+the scaling sweep axes, and the deprecated-shim delegation contract."""
+import json
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core.netmodel import NETWORKS
+from repro.core.payload import PayloadSpec, scale_sizes
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+ECHO = rpc.ServiceDef("Echo", (
+    rpc.MethodSpec("inc", rpc.UNARY),
+    rpc.MethodSpec("concat", rpc.CLIENT_STREAM),
+    rpc.MethodSpec("rng", rpc.SERVER_STREAM),
+    rpc.MethodSpec("mirror", rpc.BIDI),
+))
+
+ECHO_HANDLERS = {
+    "inc": lambda req: [(req[0] + 1).astype(np.uint8)],
+    "concat": lambda req: [np.concatenate(req)],
+    "rng": lambda req: [[np.full(8, i, np.uint8)] for i in range(3)],
+    "mirror": lambda c, end: [c] if c else None,
+}
+
+
+def _echo_fabric(**kw):
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2), **kw)
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    return fab
+
+
+# ---------------------------------------------------------------------------
+# ServiceDef / Stub
+# ---------------------------------------------------------------------------
+
+def test_stub_all_four_kinds():
+    fab = _echo_fabric()
+    stub = fab.stub(ECHO, 0, 1)
+    u = stub.inc([np.zeros(4, np.uint8)])
+    cs = stub.concat([[np.full(2, 1, np.uint8)], [np.full(2, 2, np.uint8)]])
+    ss = stub.rng([np.zeros(1, np.uint8)])
+    bd = stub.mirror([[np.full(4, 7, np.uint8)]])
+    fab.flush()
+    assert np.array_equal(u.result()[0], np.ones(4, np.uint8))
+    assert np.array_equal(cs.result()[0], np.array([1, 1, 2, 2],
+                                                   np.uint8))
+    assert [int(c[0][0]) for c in ss.chunk_bufs()] == [0, 1, 2]
+    assert [int(c[0][0]) for c in bd.chunk_bufs()] == [7]
+
+
+def test_unary_call_result_drives_flush():
+    """UnaryCall.result() flushes the fabric itself when needed."""
+    fab = _echo_fabric()
+    call = fab.stub(ECHO, 0, 1).inc([np.zeros(4, np.uint8)])
+    assert not call.done
+    assert np.array_equal(call.result()[0], np.ones(4, np.uint8))
+
+
+def test_stub_method_kind_mismatch_errors():
+    fab = _echo_fabric()
+    stub = fab.stub(ECHO, 0, 1)
+    with pytest.raises(ValueError, match="method-kind mismatch"):
+        stub.inc.server_stream([np.zeros(1, np.uint8)])
+    with pytest.raises(ValueError, match="method-kind mismatch"):
+        stub.rng.unary([np.zeros(1, np.uint8)])
+    with pytest.raises(ValueError, match="method-kind mismatch"):
+        stub.mirror.client_stream([[np.zeros(1, np.uint8)]])
+    with pytest.raises(ValueError, match="method-kind mismatch"):
+        stub.concat.bidi()
+    with pytest.raises(AttributeError, match="no method 'nosuch'"):
+        stub.nosuch
+
+
+def test_stub_attribute_probe_on_unpopulated_instance():
+    """__getattr__ must degrade to AttributeError (not recurse) when
+    the instance dict is empty — copy/pickle protocols probe attributes
+    on instances created via object.__new__."""
+    from repro.rpc.service import Stub
+    bare = object.__new__(Stub)
+    with pytest.raises(AttributeError):
+        getattr(bare, "__setstate__")
+    assert getattr(bare, "__setstate__", None) is None
+
+
+def test_sweep_benchmark_cross_stream_chunks_drops_fully_connected(
+        tmp_path):
+    """benchmark x stream_chunks crosses only the streaming families —
+    fully_connected ignores the chunk count and would emit identical
+    rows dressed up as a curve."""
+    from repro.launch import bench_comm
+    out = tmp_path / "rows.json"
+    bench_comm.main(["--sweep", "benchmark,stream_chunks",
+                     "--transport", "simulated", "--network", "eth40g",
+                     "--num-workers", "4", "--json", str(out)])
+    rows = json.loads(out.read_text())
+    assert {r["benchmark"] for r in rows} == {"ring", "incast"}
+    assert len(rows) == 2 * 4
+
+
+def test_service_def_validation():
+    with pytest.raises(ValueError, match="duplicate method"):
+        rpc.ServiceDef("S", (rpc.MethodSpec("m"), rpc.MethodSpec("m")))
+    with pytest.raises(ValueError, match="unknown kind"):
+        rpc.MethodSpec("m", kind="datagram")
+    with pytest.raises(ValueError, match="no method"):
+        ECHO.spec("nosuch")
+
+
+def test_duplicate_registration_raises():
+    """Re-registering a method (or re-adding a service) is an error,
+    not silent last-write-wins."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register("m", lambda req: req)
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("m", lambda req: None)
+    srv.add_service(ECHO, ECHO_HANDLERS)
+    with pytest.raises(ValueError, match="already added"):
+        srv.add_service(ECHO, ECHO_HANDLERS)
+
+
+def test_add_service_is_atomic_on_missing_handler():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    with pytest.raises(ValueError, match="missing"):
+        srv.add_service(ECHO, {"inc": lambda req: req})
+    # nothing half-registered: the full service binds cleanly after
+    srv.add_service(ECHO, ECHO_HANDLERS)
+
+
+def test_stub_is_cached_per_channel():
+    fab = _echo_fabric()
+    assert fab.stub(ECHO, 0, 1) is fab.stub(ECHO, 0, 1)
+    assert fab.stub(ECHO, 0, 1) is not fab.stub(ECHO, 0, 1,
+                                                serialized=True)
+    # keyed by service identity: a different live ServiceDef sharing
+    # the name must not alias into the cached stub
+    echo2 = rpc.ServiceDef("Echo", (rpc.MethodSpec("other", rpc.UNARY),))
+    assert fab.stub(echo2, 0, 1).other.spec.name == "other"
+
+
+def test_add_service_atomic_on_wire_name_collision():
+    """A method already registered through the deprecated direct API
+    must fail add_service BEFORE any of the service's methods bind."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.register(ECHO.full_name("rng"), lambda req: [])   # squatter
+    with pytest.raises(ValueError, match="already registered"):
+        srv.add_service(ECHO, ECHO_HANDLERS)
+    # nothing half-bound: 'inc' (earlier in the def) was not registered
+    c = fab.stub(ECHO, 0, 1).inc([np.zeros(4, np.uint8)])
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="unimplemented"):
+        c.reply_bufs()
+
+
+def test_server_stream_generator_fault_becomes_rpc_error():
+    """Lazy server-stream handlers (generators) whose errors surface
+    mid-iteration must produce an RPC error reply, not crash flush."""
+    def gen_handler(req):
+        def g():
+            yield [np.zeros(4, np.uint8)]
+            raise ValueError("mid-stream boom")
+        return g()
+
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).register_server_stream("g", gen_handler)
+    h = fab.channel(0, 1).server_stream("g", [np.zeros(1, np.uint8)])
+    fab.flush()                       # must not raise
+    with pytest.raises(rpc.RpcError, match="mid-stream boom"):
+        h.chunk_bufs()
+
+
+def test_deadline_cancel_drops_pending_frames_and_refunds_credits():
+    """A cancelled stream's already-admitted frames are dropped from
+    the next flight with their credits refunded — a chunk delivered
+    after the cancel would re-create server stream state that no END
+    will ever clean up."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1000, window_msgs=8)
+    srv = fab.add_server(1)
+    srv.add_service(ECHO, ECHO_HANDLERS)
+    ch = fab.channel(0, 1)
+    # chunk 0 is admitted at submit; 1..2 backlog; deadline pre-expired
+    c = fab.stub(ECHO, 0, 1).concat.client_stream(
+        [[np.full(900, i, np.uint8)] for i in range(3)],
+        deadline_s=-1.0)
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        c.result()
+    assert srv._streams == {}         # nothing delivered, nothing leaked
+    assert ch.window.bytes_avail == 1000 and ch.backlogged == 0
+
+
+def test_one_way_stream_completes_on_end_not_first_chunk():
+    """The 'sent' completion of a one-way stream fires when the END
+    chunk is consumed, so the call context (deadline, metrics) covers
+    the whole stream."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=512, window_msgs=8)
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    c = fab.stub(ECHO, 0, 1).concat.client_stream(
+        [[np.full(400, i, np.uint8)] for i in range(3)], one_way=True)
+    fab.flush()
+    kinds = [e.kind for e in fab.cq.drain() if e.tag == c.call_id]
+    assert kinds.count("sent") == 1
+    assert kinds[:3] == ["received"] * 3      # all chunks consumed first
+    assert kinds[-1] == "sent"
+
+
+def test_deadline_cancel_cleans_server_stream_state():
+    """Cancelling a partially-delivered stream must drop the server's
+    buffered chunks / bidi seq state — the END that would clean them up
+    will never arrive."""
+    import time as _t
+
+    from repro.rpc import framing
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    srv = fab.add_server(1)
+    srv.add_service(ECHO, ECHO_HANDLERS)
+    ch = fab.channel(0, 1)
+    # a client-stream chunk with no END, under a short deadline
+    cid = fab.next_call_id()
+    frame = framing.stream_chunk(cid, ECHO.full_name("concat"),
+                                 [np.zeros(8, np.uint8)], seq=0)
+    c = fab.submit(ch, frame, ECHO.full_name("concat"),
+                   kind=rpc.CLIENT_STREAM, deadline_s=0.01)
+    fab.flush()
+    assert cid in srv._streams        # partial stream buffered
+    _t.sleep(0.02)
+    fab.flush()                       # deadline scan cancels the call
+    assert srv._streams == {}
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        c.reply_bufs()
+    # bidi half: per-call seq state is cleaned the same way
+    h = fab.stub(ECHO, 0, 1).mirror(deadline_s=0.01)
+    h.send([np.zeros(4, np.uint8)])
+    fab.flush()
+    assert h.call_id in srv._bidi_seq
+    _t.sleep(0.02)
+    fab.flush()
+    assert h.done and srv._bidi_seq == {}
+
+
+# ---------------------------------------------------------------------------
+# interceptors
+# ---------------------------------------------------------------------------
+
+class _Rec(rpc.ClientInterceptor, rpc.ServerInterceptor):
+    def __init__(self, name, log):
+        self.name, self.log = name, log
+
+    def on_start(self, ctx):
+        self.log.append(f"{self.name}.start")
+
+    def on_complete(self, ctx, ev):
+        self.log.append(f"{self.name}.complete")
+
+    def on_receive(self, ctx):
+        self.log.append(f"{self.name}.recv")
+
+    def on_done(self, ctx, ok, error=None):
+        self.log.append(f"{self.name}.done")
+
+
+def test_interceptor_ordering_client_wire_server_and_back():
+    """The chain nests gRPC-style: client start outer->inner, server
+    receive outer->inner, server done inner->outer, client complete
+    inner->outer."""
+    log = []
+    a, b = _Rec("A", log), _Rec("B", log)
+    s1, s2 = _Rec("S1", log), _Rec("S2", log)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        client_interceptors=[a, b],
+                        server_interceptors=[s1, s2])
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    fab.stub(ECHO, 0, 1).inc([np.zeros(4, np.uint8)])
+    fab.flush()
+    assert log == ["A.start", "B.start",            # client, outer->inner
+                   "S1.recv", "S2.recv",            # wire -> server
+                   "S2.done", "S1.done",            # server unwind
+                   "B.complete", "A.complete"]      # client unwind
+
+
+def test_metrics_interceptor_counts_and_percentiles():
+    m = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        client_interceptors=[m])
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    stub = fab.stub(ECHO, 0, 1)
+    for _ in range(4):
+        stub.inc([np.zeros(4, np.uint8)])
+    stub.rng([np.zeros(1, np.uint8)])
+    fab.flush()
+    snap = m.snapshot()
+    inc = snap["Echo/inc"]
+    assert inc["calls"] == 4 and inc["ok"] == 4 and inc["errors"] == 0
+    assert inc["latency_us"]["p50"] > 0
+    assert inc["latency_us"]["p95"] >= inc["latency_us"]["p50"]
+    assert snap["Echo/rng"]["chunks"] == 3
+
+
+def test_metrics_on_modeled_clock():
+    """On a simulated transport latencies come from the modeled clock,
+    so they are deterministic and equal the flight pricing."""
+    m = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(2, NETWORKS["eth40g"]),
+                        client_interceptors=[m])
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    fab.stub(ECHO, 0, 1).inc(None, sizes=[1 << 20])
+    rep = fab.flush()
+    lat = m.snapshot()["Echo/inc"]["latency_us"]
+    assert lat["p50"] == pytest.approx(rep.elapsed_s * 1e6)
+
+
+def test_server_interceptor_sees_handler_fault():
+    log = []
+    s = _Rec("S", log)
+
+    done = []
+
+    class Catch(rpc.ServerInterceptor):
+        def on_done(self, ctx, ok, error=None):
+            done.append((ctx.method, ok, error))
+
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        server_interceptors=[s, Catch()])
+
+    def boom(req):
+        raise ValueError("nope")
+    fab.add_server(1).register("boom", boom)
+    c = fab.channel(0, 1).call("boom", [np.zeros(1, np.uint8)])
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="nope"):
+        c.reply_bufs()
+    assert done == [("boom", False, "nope")]
+
+
+def test_retry_interceptor_on_transient():
+    seen = {"n": 0}
+
+    def flaky(req):
+        seen["n"] += 1
+        if seen["n"] < 3:
+            raise rpc.TransientError("warming up")
+        return req
+
+    retry = rpc.RetryInterceptor(max_attempts=5)
+    metrics = rpc.MetricsInterceptor()
+    # metrics OUTER to retry: sees only the final outcome
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        client_interceptors=[metrics, retry])
+    fab.add_server(1).register("flaky", flaky)
+    c = fab.channel(0, 1).call("flaky", [np.arange(4, dtype=np.uint8)])
+    fab.flush()
+    assert seen["n"] == 3 and retry.retries == 2
+    assert np.array_equal(c.reply_bufs()[0],
+                          np.arange(4, dtype=np.uint8))
+    rec = metrics.snapshot()["flaky"]
+    assert rec["errors"] == 0 and rec["ok"] == 1
+    assert rec["retries"] == 2          # visible as retry events
+
+
+def test_retry_gives_up_after_max_attempts():
+    def always(req):
+        raise rpc.TransientError("still down")
+    fab = rpc.RpcFabric(
+        rpc.LoopbackTransport(2),
+        client_interceptors=[rpc.RetryInterceptor(max_attempts=3)])
+    fab.add_server(1).register("always", always)
+    c = fab.channel(0, 1).call("always", [np.zeros(2, np.uint8)])
+    fab.flush()
+    assert c.done
+    with pytest.raises(rpc.RpcError, match="still down"):
+        c.reply_bufs()
+
+
+def test_retry_not_triggered_by_permanent_errors():
+    retry = rpc.RetryInterceptor(max_attempts=5)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        client_interceptors=[retry])
+
+    def boom(req):
+        raise ValueError("permanent")
+    fab.add_server(1).register("boom", boom)
+    c = fab.channel(0, 1).call("boom", [np.zeros(1, np.uint8)])
+    fab.flush()
+    assert retry.retries == 0
+    with pytest.raises(rpc.RpcError, match="permanent"):
+        c.reply_bufs()
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_exceeded_on_stalled_stream():
+    """A server stream stalled behind a zero-credit ChunkGate must fail
+    with deadline-exceeded, not wait forever (or force uncredited
+    admission past the stall)."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1024, window_msgs=4)
+    fab.add_server(1).add_service(ECHO, dict(
+        ECHO_HANDLERS,
+        rng=lambda req: [[np.full(800, i, np.uint8)] for i in range(3)]))
+    ch = fab.channel(0, 1)
+    # drain the reverse window: the gate has zero credits, every chunk
+    # stalls — the consumer never reads
+    assert ch.rwindow.try_acquire(ch.rwindow.window_bytes)
+    h = fab.stub(ECHO, 0, 1).rng.server_stream(
+        [np.zeros(1, np.uint8)], deadline_s=0.05)
+    fab.flush()                       # terminates via cancellation
+    assert h.done
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        h.chunk_bufs()
+    kinds = [e.kind for e in fab.cq.drain() if e.tag == h.call_id]
+    assert kinds[-1] == "deadline_exceeded"
+    assert len(ch.rx_gate) == 0       # gated chunks were dropped
+
+
+def test_deadline_exceeded_is_deterministic_on_modeled_clock():
+    """On the simulated transport the deadline wait advances the
+    modeled clock instead of sleeping, so expiry is exact."""
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(2, NETWORKS["eth40g"]),
+                        window_bytes=1024, window_msgs=4)
+    fab.add_server(1).add_service(ECHO, dict(
+        ECHO_HANDLERS, rng=lambda req: [(800,) for _ in range(3)]))
+    ch = fab.channel(0, 1)
+    assert ch.rwindow.try_acquire(ch.rwindow.window_bytes)
+    h = fab.stub(ECHO, 0, 1).rng.server_stream(None, sizes=[1],
+                                               deadline_s=5.0)
+    fab.flush()
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        h.chunk_bufs()
+    assert fab.transport.clock_s >= 5.0     # clock advanced to expiry
+
+
+def test_deadline_interceptor_applies_default_and_counts():
+    dl = rpc.DeadlineInterceptor(default_deadline_s=0.02)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1024, window_msgs=4,
+                        client_interceptors=[dl])
+    fab.add_server(1).add_service(ECHO, dict(
+        ECHO_HANDLERS,
+        rng=lambda req: [[np.full(900, i, np.uint8)] for i in range(2)]))
+    ch = fab.channel(0, 1)
+    assert ch.rwindow.try_acquire(ch.rwindow.window_bytes)
+    h = fab.stub(ECHO, 0, 1).rng([np.zeros(1, np.uint8)])
+    fab.flush()
+    assert h.done and dl.exceeded == 1
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        h.chunk_bufs()
+
+
+def test_deadline_does_not_fire_on_healthy_calls():
+    fab = _echo_fabric()
+    c = fab.stub(ECHO, 0, 1).inc([np.zeros(4, np.uint8)],
+                                 deadline_s=30.0)
+    fab.flush()
+    assert np.array_equal(c.result()[0], np.ones(4, np.uint8))
+    assert len(fab._ctx) == 0         # contexts do not accumulate
+
+
+def test_stalled_deadline_unary_cancels_from_backlog():
+    """A unary call stuck in the forward backlog behind a zero-credit
+    window cancels at its deadline, and the backlog entry is purged."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1024, window_msgs=4)
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    ch = fab.channel(0, 1)
+    assert ch.window.try_acquire(ch.window.window_bytes)
+    c = fab.stub(ECHO, 0, 1).inc([np.zeros(100, np.uint8)],
+                                 deadline_s=0.05)
+    fab.flush()
+    assert c.done
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        c.result()
+    assert not fab._backlog and ch.backlogged == 0
+
+
+# ---------------------------------------------------------------------------
+# incast fetch asymmetry
+# ---------------------------------------------------------------------------
+
+def test_scale_sizes():
+    assert scale_sizes([1000, 4], 0.25) == [250, 1]
+    assert scale_sizes([1000, 4], 1.0) == [1000, 4]
+    assert scale_sizes([1000], 2.5) == [2500]
+    with pytest.raises(AssertionError):
+        scale_sizes([8], 0.0)
+
+
+@pytest.mark.parametrize("ratio", [0.25, 1.0, 2.0])
+def test_incast_exchange_fetch_ratio_matches_netmodel(ratio):
+    spec = PayloadSpec(sizes=(65536,) * 4, scheme="t",
+                       categories=("medium",) * 4)
+    net = NETWORKS["eth10g"]
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(9, net))
+    rep = rpc.incast_exchange(fab, list(spec.sizes), n_chunks=2,
+                              fetch_ratio=ratio)
+    assert rep.elapsed_s == pytest.approx(
+        net.incast_round_time(spec, 8, n_chunks=2, fetch_ratio=ratio),
+        rel=1e-9)
+
+
+def test_incast_exchange_fetch_ratio_loopback_sizes():
+    """Real-buffer path: the fetch chunks the workers receive are the
+    scaled size (512, 128 pushed -> 128, 32 fetched at ratio 0.25)."""
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    bufs = _bufs([512, 128])
+    rep = rpc.incast_exchange(fab, [512, 128], n_chunks=1, bufs=bufs,
+                              fetch_ratio=0.25)
+    assert rep.messages == 2 and fab.servers[0].calls_served == 1
+    # a second stream against the handler the exchange registered
+    # exposes the fetch payload directly
+    h = fab.stub(rpc.INCAST_SERVICE, 1, 0).push_fetch([bufs])
+    fab.flush()
+    (chunk,) = h.chunk_bufs()
+    assert [b.size for b in chunk] == [128, 32]
+
+
+def test_bench_incast_fetch_ratio_end_to_end():
+    """bench.run on the simulated transport: measured == projection
+    with the asymmetric fetch, and asymmetry actually moves the
+    number."""
+    from repro.core import bench
+    kw = dict(benchmark="incast", num_workers=8, transport="simulated",
+              network="eth40g", stream_chunks=2)
+    st = bench.run(BenchConfig(fetch_ratio=0.25, **kw))
+    sym = bench.run(BenchConfig(fetch_ratio=1.0, **kw))
+    assert st.model_projection["eth40g"] == pytest.approx(
+        st.derived["rpcs_per_s"], rel=1e-6)
+    assert st.derived["fetch_ratio"] == 0.25
+    assert st.derived["rpcs_per_s"] > sym.derived["rpcs_per_s"]
+
+
+def test_incast_exchange_rejects_changed_fetch_shape():
+    """The fetch payload is baked into the server closure on first
+    registration; silently serving the old shape for a new ratio would
+    corrupt measurements — it must error instead."""
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(3, NETWORKS["eth40g"]))
+    rpc.incast_exchange(fab, [1024], fetch_ratio=0.25)
+    rpc.incast_exchange(fab, [1024], fetch_ratio=0.25)   # same: fine
+    with pytest.raises(ValueError, match="already bound"):
+        rpc.incast_exchange(fab, [1024], fetch_ratio=2.0)
+    with pytest.raises(ValueError, match="already bound"):
+        rpc.incast_exchange(fab, [2048], fetch_ratio=0.25)
+
+
+def test_server_interceptors_reassignment_is_live():
+    """Reassigning fabric.server_interceptors after add_server still
+    reaches existing servers (the server holds a getter, not the
+    list)."""
+    log = []
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).add_service(ECHO, ECHO_HANDLERS)
+    fab.server_interceptors = [_Rec("S", log)]
+    fab.stub(ECHO, 0, 1).inc([np.zeros(4, np.uint8)])
+    fab.flush()
+    assert log == ["S.recv", "S.done"]
+
+
+def test_bench_comm_rejects_scaling_axes_on_fixed_benchmarks(capsys):
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--sweep", "workers",
+                         "--benchmark", "p2p_latency"])
+    assert "scales with workers" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--sweep", "stream_chunks",
+                         "--benchmark", "fully_connected",
+                         "--transport", "simulated"])
+    assert "streaming benchmark" in capsys.readouterr().err
+
+
+def test_bench_comm_rejects_bad_fetch_ratio():
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--benchmark", "incast", "--fetch-ratio", "0"])
+
+
+# ---------------------------------------------------------------------------
+# sweep scaling axes
+# ---------------------------------------------------------------------------
+
+def test_bench_comm_sweep_scaling_axes(tmp_path):
+    from repro.launch import bench_comm
+    out = tmp_path / "rows.json"
+    bench_comm.main(["--sweep", "workers,stream_chunks",
+                     "--benchmark", "ring", "--transport", "simulated",
+                     "--network", "eth40g", "--json", str(out)])
+    rows = json.loads(out.read_text())
+    assert len(rows) == 4 * 4
+    combos = {(r["workers"], r["stream_chunks"]) for r in rows}
+    assert combos == {(w, c) for w in (2, 4, 8, 16)
+                      for c in (1, 2, 4, 8)}
+    assert all(r["value"] > 0 for r in rows)
+    # scaling curve: ring round time grows with chunk count, so the
+    # per-chunk throughput at fixed workers is not constant in chunks
+    by_w4 = {r["stream_chunks"]: r["value"] for r in rows
+             if r["workers"] == 4}
+    assert len(set(round(v, 3) for v in by_w4.values())) > 1
+
+
+def test_bench_comm_rejects_duplicate_sweep_axes(capsys):
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--sweep", "workers,workers",
+                         "--benchmark", "ring",
+                         "--transport", "simulated"])
+    assert "duplicate" in capsys.readouterr().err
+
+
+def test_bench_comm_json_carries_rpc_metrics(tmp_path):
+    from repro.launch import bench_comm
+    out = tmp_path / "row.json"
+    bench_comm.main(["--benchmark", "incast", "--transport", "simulated",
+                     "--network", "eth40g", "--num-workers", "4",
+                     "--fetch-ratio", "0.25", "--json", str(out)])
+    (row,) = json.loads(out.read_text())
+    m = row["rpc_metrics"]["Incast/push_fetch"]
+    assert m["calls"] > 0 and m["ok"] == m["calls"]
+    assert m["latency_us"]["p50"] > 0
+    assert m["latency_us"]["p95"] >= m["latency_us"]["p50"]
+
+
+# ---------------------------------------------------------------------------
+# migration: deprecated shims delegate to stubs; no direct
+# registration remains outside repro.rpc
+# ---------------------------------------------------------------------------
+
+def test_rpc_generate_shims_delegate_to_stub(monkeypatch):
+    from repro.serve import engine as E
+    tokens = np.arange(6, dtype=np.int32).reshape(2, 3)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).add_service(E.SERVE_SERVICE, {
+        "generate": lambda bufs: E.encode_generate_reply(tokens),
+        "generate_stream": lambda bufs: [
+            [E._i32_buf(tokens[:, i])] for i in range(3)],
+    })
+    ch = fab.channel(0, 1)
+    used = []
+    real = E.serve_stub
+    monkeypatch.setattr(
+        E, "serve_stub", lambda c: (used.append(c), real(c))[1])
+    out = E.rpc_generate(ch, np.zeros((2, 4), np.int32))
+    assert used == [ch], "rpc_generate must delegate through the stub"
+    assert np.array_equal(out, tokens)
+    out2 = E.rpc_generate_stream(ch, np.zeros((2, 4), np.int32))
+    assert used == [ch, ch]
+    assert np.array_equal(out2, tokens)
+
+
+def test_no_direct_registration_outside_rpc():
+    """The deprecation gate the CI step enforces, as a test: every
+    module outside src/repro/rpc/ goes through ServiceDef + Stub."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src"
+    pat = re.compile(r"register_unary|register_server_stream"
+                     r"|register_bidi|call_unary|\.register\(")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        rel = p.relative_to(root)
+        if rel.parts[:2] == ("repro", "rpc"):
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, offenders
