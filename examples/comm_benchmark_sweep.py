@@ -1,23 +1,57 @@
-"""Paper §4 in one script: the full scheme x network x benchmark sweep
-(figures 7-14), printed as one table.
+"""Communication scaling sweeps, driven through the `bench_comm` CLI.
+
+Earlier revisions of this example re-implemented the paper's sweep
+loops by hand over `benchmarks.figures`; the suite has since grown
+cross-product sweep axes, so the example now *is* one `bench_comm`
+invocation: the streaming fabric families (ring / incast) crossed with
+the worker-count and chunk-count scaling axes — the paper §4 scaling
+story in a single table (per-row `rpc_metrics` included in --json).
 
     PYTHONPATH=src python examples/comm_benchmark_sweep.py [--quick]
+        [--transport simulated|cluster|loopback|collective]
+        [--network rdma_edr] [--json rows.json]
+
+The default `simulated` transport prices every cell analytically, so
+the full 2x4x4 cross-product runs in seconds; `--transport cluster`
+routes the same sweep over a multi-endpoint cluster transport instead
+(per-link pricing, per-endpoint metrics). The paper's per-figure
+tables still live in `benchmarks/figures.py`.
 """
 import os
+
 if "--xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # device fabric for collective cells; set before any jax import
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
 
-import sys  # noqa: E402
+import argparse  # noqa: E402
+from typing import List, Optional  # noqa: E402
 
-from benchmarks.figures import ALL_FIGURES  # noqa: E402
 
-quick = "--quick" in sys.argv
-names = (["fig7", "paper_claims"] if quick else list(ALL_FIGURES))
-for name in names:
-    print(f"==== {name} " + "=" * (60 - len(name)))
-    for row in ALL_FIGURES[name]():
-        extras = " ".join(f"{k}={v}" for k, v in row.items()
-                          if k not in ("name", "us_per_call"))
-        print(f"  {row['name']:42s} {row['us_per_call']:12.2f} us  "
-              f"{extras}")
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny warmup/duration (smoke-test config)")
+    ap.add_argument("--transport", default="simulated")
+    ap.add_argument("--network", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    from repro.launch import bench_comm
+
+    warmup, duration = ("0.05", "0.1") if args.quick else ("0.5", "2.0")
+    bench_args = [
+        "--sweep", "benchmark,workers,stream_chunks",
+        "--transport", args.transport,
+        "--warmup", warmup, "--duration", duration,
+    ]
+    if args.network:
+        bench_args += ["--network", args.network]
+    if args.json:
+        bench_args += ["--json", args.json]
+    bench_comm.main(bench_args)
+
+
+if __name__ == "__main__":
+    main()

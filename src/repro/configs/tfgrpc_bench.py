@@ -49,9 +49,13 @@ class BenchConfig:
     seed: int = 0
     dtype: str = "uint8"
     network: Optional[str] = None    # key into core.netmodel.NETWORKS
-    # rpc fabric transport: collective | loopback | simulated
+    # rpc fabric transport: collective | loopback | simulated | cluster
     # (fabric families only; the three paper benchmarks are collective)
     transport: str = "collective"
+    # cluster transport topology: a repro.rpc.ClusterSpec (or dict/JSON
+    # accepted by rpc.as_cluster_spec). None synthesizes a homogeneous
+    # cluster of the needed size on `network`
+    cluster_spec: Optional[object] = None
     # chunks per stream for the ring/incast streaming families
     stream_chunks: int = 4
     # incast asymmetry: the fetch payload is this fraction/multiple of

@@ -147,6 +147,24 @@ def ps_throughput(cfg: BenchConfig) -> BenchStats:
                   {"rpcs_per_s": rpcs / float(np.mean(times))}, mon.report)
 
 
+def _resolve_cluster(cfg: BenchConfig, n_endpoints: int, family: str):
+    """The ClusterSpec a ``--transport cluster`` run binds: the given
+    spec (which must cover the benchmark's endpoint count), or a
+    synthesized homogeneous cluster on cfg.network."""
+    from repro.rpc.cluster import as_cluster_spec, homogeneous
+    if cfg.cluster_spec is None:
+        return homogeneous(n_endpoints, cfg.network or "eth40g")
+    cluster = as_cluster_spec(cfg.cluster_spec)
+    if cluster.n_endpoints != n_endpoints:
+        # the exchanges span every fabric endpoint, so a mismatched
+        # spec would silently benchmark a different topology
+        raise RuntimeError(
+            f"{family}/cluster needs exactly {n_endpoints} endpoints "
+            f"(incl. the server for incast), the cluster spec has "
+            f"{cluster.n_endpoints}")
+    return cluster
+
+
 def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
                  family: str):
     """Build the rpc fabric (+ materialized bufs where the transport
@@ -158,11 +176,12 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
     default window; shrink RpcFabric windows directly to study
     back-pressure."""
     from repro import rpc as rpclib
-    from repro.core.netmodel import NETWORKS
     from repro.core.payload import materialize
 
     serialized = cfg.mode == "serialized"
     bufs = None
+    per_endpoint = False
+    endpoint_name = None
     if cfg.transport == "collective":
         mesh = ch.make_net_mesh()
         if mesh.shape[ch.AXIS] < n_endpoints:
@@ -170,30 +189,62 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
                 f"{family}/collective needs >= {n_endpoints} devices, "
                 f"have {mesh.shape[ch.AXIS]}; run under "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
-        transport = rpclib.CollectiveTransport(
-            mesh, spec, serialized=serialized, n_endpoints=n_endpoints,
-            seed=cfg.seed)
+        transport = rpclib.make_transport(
+            "collective", n_endpoints, mesh=mesh, spec=spec,
+            serialized=serialized, seed=cfg.seed)
     elif cfg.transport == "loopback":
-        transport = rpclib.LoopbackTransport(n_endpoints)
+        transport = rpclib.make_transport("loopback", n_endpoints)
         bufs = materialize(spec, seed=cfg.seed)
     elif cfg.transport == "simulated":
-        net_name = cfg.network or "eth40g"
-        if net_name not in NETWORKS:
-            raise ValueError(f"unknown --network {net_name!r}; choose "
-                             f"from {sorted(NETWORKS)}")
-        transport = rpclib.SimulatedTransport(n_endpoints,
-                                              NETWORKS[net_name])
+        # unknown names raise inside make_transport
+        transport = rpclib.make_transport(
+            "simulated", n_endpoints, network=cfg.network or "eth40g")
+    elif cfg.transport == "cluster":
+        cluster = _resolve_cluster(cfg, n_endpoints, family)
+        transport = rpclib.make_transport("cluster", cluster=cluster)
+        # cluster rows report metrics broken down per endpoint pair
+        per_endpoint, endpoint_name = True, transport.endpoint_name
     else:
         raise ValueError(f"unknown transport {cfg.transport!r}")
     chunks = max(1, cfg.stream_chunks)
     per_chunk = int(spec.total_bytes * max(1.0, cfg.fetch_ratio))
-    metrics = rpclib.MetricsInterceptor()
+    metrics = rpclib.MetricsInterceptor(per_endpoint=per_endpoint,
+                                        endpoint_name=endpoint_name)
     fabric = rpclib.RpcFabric(
         transport,
         window_bytes=max(4 * 1024 * 1024, (chunks + 1) * per_chunk),
         window_msgs=max(32, chunks + 1),
         client_interceptors=[metrics])
     return fabric, bufs, metrics
+
+
+def _cluster_projection(st: BenchStats, cfg: BenchConfig, fabric,
+                        spec: PayloadSpec, n_chunks: int = 1) -> None:
+    """Attach the per-link closed-form throughput of the bound cluster
+    (the analytic number a ``--transport cluster`` run must match) as
+    the ``cluster`` model projection."""
+    if cfg.transport != "cluster":
+        return
+    from repro.rpc import cluster as cluster_lib
+    cl = fabric.transport.cluster
+    if any(ep.window is not None for ep in cl.endpoints):
+        # endpoint-advertised windows split streams across flights, so
+        # the one-flight closed form no longer applies — publish no
+        # number rather than one the run is not expected to match
+        return
+    serialized = cfg.mode == "serialized"
+    sizes = list(spec.sizes)
+    if st.name == "fully_connected":
+        t = cluster_lib.cluster_fc_round_time(cl, sizes,
+                                              serialized=serialized)
+    elif st.name == "ring":
+        t = cluster_lib.cluster_ring_round_time(
+            cl, sizes, n_chunks=n_chunks, serialized=serialized)
+    else:
+        t = cluster_lib.cluster_incast_round_time(
+            cl, sizes, n_chunks=n_chunks, serialized=serialized,
+            fetch_ratio=cfg.fetch_ratio)
+    st.model_projection["cluster"] = st.derived["rpcs_per_round"] / t
 
 
 def _fabric_bench(cfg: BenchConfig, exchange, fabric,
@@ -240,6 +291,7 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
                 {"rpcs_per_s": rpcs / float(np.mean(times)),
                  "rpcs_per_round": float(rpcs)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _cluster_projection(st, cfg, fabric, spec)
     return st
 
 
@@ -269,6 +321,7 @@ def ring(cfg: BenchConfig) -> BenchStats:
                  "rpcs_per_round": float(rpcs),
                  "chunks_per_stream": float(n_chunks)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _cluster_projection(st, cfg, fabric, spec, n_chunks=n_chunks)
     return st
 
 
@@ -305,6 +358,7 @@ def incast(cfg: BenchConfig) -> BenchStats:
                  "chunks_per_stream": float(n_chunks),
                  "fetch_ratio": float(cfg.fetch_ratio)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _cluster_projection(st, cfg, fabric, spec, n_chunks=n_chunks)
     return st
 
 

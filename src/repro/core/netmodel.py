@@ -21,8 +21,9 @@ core cost the paper isolates.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 from repro.core.payload import PayloadSpec
 
@@ -188,6 +189,23 @@ class NetworkModel:
         fetch = max(k * self.egress_time(fspec), per_worker_fetch)
         return push + fetch
 
+    def with_link(self, *, bandwidth_Bps: float = None,
+                  latency_s: float = None) -> "NetworkModel":
+        """This model with per-link bandwidth/latency overrides — the
+        resolved model of one directed cluster link. Only alpha/beta
+        change; the host-side rates (cpu_copy, serialization, rpc
+        overhead) stay the endpoint's own, which is what lets the
+        per-link closed form below split contention into a link term
+        and a cross-link host term without double counting."""
+        if bandwidth_Bps is None and latency_s is None:
+            return self
+        return dataclasses.replace(
+            self, name=f"{self.name}+link",
+            beta_Bps=(bandwidth_Bps if bandwidth_Bps is not None
+                      else self.beta_Bps),
+            alpha_s=(latency_s if latency_s is not None
+                     else self.alpha_s))
+
     def incast_throughput(self, spec: PayloadSpec, n_workers: int, *,
                           n_chunks: int = 1,
                           serialized: bool = False,
@@ -198,6 +216,106 @@ class NetworkModel:
                                              n_chunks=n_chunks,
                                              serialized=serialized,
                                              fetch_ratio=fetch_ratio)
+
+
+# ---------------------------------------------------------------------------
+# per-link closed form (the cluster-transport analytic counterpart)
+# ---------------------------------------------------------------------------
+#
+# A multi-endpoint cluster prices one *flight* per directed link: the
+# messages riding link (src -> dst) serialize on that link's resolved
+# model (the dst endpoint's base network with per-link bandwidth/latency
+# overrides). Contention splits into two quadratic host-copy terms that
+# together recover exactly the single-NIC receiver term of
+# ``SimulatedTransport`` when every link into an endpoint shares the
+# endpoint's base parameters:
+#
+#   per-link    k_l (k_l - 1) * avg_l / copy      (messages sharing one
+#                                                  link's stack queue)
+#   cross-link  [K (K-1) - sum_l k_l (k_l - 1)]   (copies from different
+#               * avg / copy                       links contending on
+#                                                  the one host CPU)
+#
+# with K the total cross-endpoint messages into the endpoint. Same-
+# endpoint (src == dst) messages are loopback: one host memcpy at the
+# cpu_copy rate — no alpha, no rpc overhead, no egress, which is what
+# keeps local calls loopback-fast in a cluster-routed flight.
+# ``repro.rpc.cluster.ClusterTransport`` must match this closed form
+# exactly (held by tests/test_cluster_transport.py).
+
+@dataclass(frozen=True)
+class LinkLoad:
+    """The messages one flight puts on one directed (src, dst) link.
+
+    ``model`` is the link's *resolved* NetworkModel (dst endpoint base +
+    per-link overrides); host-side rates in it are the dst endpoint's
+    own. ``serialized`` applies to every message of the load — split a
+    link's messages into two loads when modes mix."""
+    src: int
+    dst: int
+    model: NetworkModel
+    specs: Tuple[PayloadSpec, ...]
+    serialized: bool = False
+
+    @property
+    def n_msgs(self) -> int:
+        return len(self.specs)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(s.total_bytes for s in self.specs))
+
+
+def link_time(load: LinkLoad) -> float:
+    """Receiver-side serialization of one link's messages (payload +
+    64B ack each) on the link's resolved model."""
+    return sum(load.model.payload_time(s, serialized=load.serialized)
+               + load.model.msg_time(64) for s in load.specs)
+
+
+def link_contention(load: LinkLoad) -> float:
+    """The per-link quadratic host-copy term: k messages riding one
+    link in one flight queue on that link's receiving stack."""
+    k = load.n_msgs
+    if k < 2:
+        return 0.0
+    return k * (k - 1) * (load.total_bytes / k) / load.model.cpu_copy_Bps
+
+
+def cluster_flight_time(loads: Sequence[LinkLoad]) -> float:
+    """Closed-form elapsed time of one cluster flight: per endpoint,
+    ingress (link serialization + per-link contention + cross-link host
+    contention + local memcpys) plus its own egress; the flight takes
+    the max over endpoints."""
+    ingress: Dict[int, float] = {}
+    egress: Dict[int, float] = {}
+    cross: Dict[int, list] = {}
+    for ld in loads:
+        if ld.src == ld.dst:
+            # loopback-fast: host memcpy only
+            ingress[ld.dst] = (ingress.get(ld.dst, 0.0)
+                               + ld.total_bytes / ld.model.cpu_copy_Bps)
+            continue
+        ingress[ld.dst] = (ingress.get(ld.dst, 0.0)
+                           + link_time(ld) + link_contention(ld))
+        egress[ld.src] = (egress.get(ld.src, 0.0)
+                          + ld.total_bytes / ld.model.beta_Bps)
+        cross.setdefault(ld.dst, []).append(ld)
+    for dst, lds in cross.items():
+        k_tot = sum(ld.n_msgs for ld in lds)
+        if k_tot < 2:
+            continue
+        pairs = (k_tot * (k_tot - 1)
+                 - sum(ld.n_msgs * (ld.n_msgs - 1) for ld in lds))
+        if pairs <= 0:
+            continue
+        bytes_tot = sum(ld.total_bytes for ld in lds)
+        # host-side copy rate: identical across the endpoint's links
+        # (with_link never overrides it), so any load's model serves
+        ingress[dst] += (pairs * (bytes_tot / k_tot)
+                         / lds[0].model.cpu_copy_Bps)
+    return max((ingress.get(e, 0.0) + egress.get(e, 0.0)
+                for e in set(ingress) | set(egress)), default=0.0)
 
 
 # fitted constants (benchmarks/calibrate.py; cluster A max err 2.7%,

@@ -29,9 +29,13 @@ instead of the S/M/L generator (core.payload.from_arch) and benchmarks
 THAT payload. --transport picks the rpc-fabric datapath for the fabric
 families: collective (measured ppermute), loopback (measured
 shared-buffer memcpy), simulated (netmodel projection; endpoint counts
-far beyond the host device count). --fetch-ratio sizes the incast
-fetch payload relative to the push (gradient-push vs variable-pull
-asymmetry). --sweep takes a comma-separated list of axes (scheme,
+far beyond the host device count), cluster (per-link netmodel routing
+over a multi-endpoint ClusterSpec — pass --cluster-spec with inline
+JSON or a file path, or get a homogeneous cluster on --network;
+cluster rows carry per-endpoint interceptor metrics). --fetch-ratio
+sizes the incast fetch payload relative to the push (gradient-push vs
+variable-pull asymmetry). --sweep takes a comma-separated list of axes
+(scheme,
 mode, transport, benchmark, network, workers, stream_chunks — the last
 two generate scaling curves) and runs the full cross-product of their
 values in one invocation. Fabric-family rows carry per-method
@@ -46,7 +50,7 @@ from typing import List, Optional
 FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
 BENCHMARK_CHOICES = ("p2p_latency", "p2p_bandwidth", "ps_throughput",
                      "fully_connected", "ring", "incast")
-TRANSPORT_CHOICES = ("collective", "loopback", "simulated")
+TRANSPORT_CHOICES = ("collective", "loopback", "simulated", "cluster")
 
 #: values an axis takes when swept (benchmark sweeps over the fabric
 #: families: the three paper benchmarks ignore --transport so crossing
@@ -75,10 +79,18 @@ def _metric(st) -> str:
 def _effective_network(cfg) -> Optional[str]:
     """The network model that actually priced the run: simulated cells
     fall back to eth40g when --network is unset (bench._make_fabric),
-    and the report must say so rather than show a null."""
-    if cfg.benchmark in FABRIC_BENCHMARKS and cfg.transport == "simulated":
-        return cfg.network or "eth40g"
+    and the report must say so rather than show a null. A cluster cell
+    with an explicit spec prices per endpoint/link — labeled
+    'cluster'."""
+    if cfg.benchmark in FABRIC_BENCHMARKS:
+        if cfg.transport == "cluster":
+            return ("cluster" if cfg.cluster_spec is not None
+                    else cfg.network or "eth40g")
+        if cfg.transport == "simulated":
+            return cfg.network or "eth40g"
     return cfg.network
+
+
 
 
 def _build_config(args, payload_spec, **overrides):
@@ -93,7 +105,7 @@ def _build_config(args, payload_spec, **overrides):
         warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
         network=args.network, transport=args.transport,
         stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
-        payload_spec=payload_spec)
+        cluster_spec=args.cluster_spec, payload_spec=payload_spec)
     base.update(overrides)
     return BenchConfig(**base)
 
@@ -108,10 +120,10 @@ def _print_single(st, cfg, args) -> None:
     print(f"payload        : {st.spec.n_buffers} iovecs, "
           f"{st.spec.total_bytes/1e6:.3f} MB")
     projected = (cfg.benchmark in FABRIC_BENCHMARKS
-                 and cfg.transport == "simulated")
+                 and cfg.transport in ("simulated", "cluster"))
     label = "net projected " if projected else "host measured "
     if projected:
-        print(f"sim network    : {cfg.network or 'eth40g'}")
+        print(f"sim network    : {_effective_network(cfg)}")
     print(f"{label} : mean {st.mean_s*1e6:.1f} us  "
           f"p50 {st.p50_s*1e6:.1f}  p95 {st.p95_s*1e6:.1f}  "
           f"({st.n_iters} iters)")
@@ -215,6 +227,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--num-workers", type=int, default=1)
     ap.add_argument("--transport", default="collective",
                     choices=list(TRANSPORT_CHOICES))
+    ap.add_argument("--cluster-spec", default=None, metavar="JSON|PATH",
+                    help="cluster transport topology: inline ClusterSpec "
+                         "JSON or a path to a JSON file (default: a "
+                         "homogeneous cluster on --network)")
     ap.add_argument("--stream-chunks", type=int, default=4,
                     help="chunks per stream (ring/incast families)")
     ap.add_argument("--fetch-ratio", type=float, default=1.0,
@@ -295,6 +311,18 @@ def main(argv: Optional[List[str]] = None) -> None:
             ap.error(f"--sweep stream_chunks needs a streaming "
                      f"benchmark ({', '.join(streaming_ok)}); "
                      f"got --benchmark {args.benchmark}")
+
+    if args.cluster_spec is not None:
+        # parse + consistency in one place, before any work or output
+        if args.transport != "cluster" \
+                and not (axes and "transport" in axes):
+            ap.error("--cluster-spec needs --transport cluster (or a "
+                     "transport sweep axis)")
+        from repro.rpc.cluster import load_cluster_spec
+        try:
+            args.cluster_spec = load_cluster_spec(args.cluster_spec)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            ap.error(f"--cluster-spec: {e}")
 
     from repro.core import bench
 

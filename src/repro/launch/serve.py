@@ -10,6 +10,17 @@ token — so serving traffic exercises the same RPC runtime the
 communication benchmarks measure, streaming included. ``--unary`` uses
 the unary ``generate`` method (whole block in one reply); --no-rpc
 calls the engine directly.
+
+``--transport cluster --cluster-spec <json>`` serves over a
+multi-endpoint cluster transport instead: the engine's ``Serve``
+service binds on every ``ps`` endpoint of the spec, every ``worker``
+endpoint submits a generation request per round, and one flush drives
+all of them concurrently — sharded across the PS endpoints under
+``--policy round_robin|least_loaded`` — with per-link modeled timing
+and per-endpoint interceptor metrics:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+      --transport cluster --cluster-spec cluster.json --unary
 """
 from __future__ import annotations
 
@@ -22,7 +33,53 @@ import numpy as np
 from repro.configs import get_config, get_reduced_config
 from repro.models import init_params
 from repro.parallel.sharding import make_ctx
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (DISPATCH_POLICIES, ServeConfig,
+                                ServeEngine)
+
+
+def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
+                          vocab_size: int) -> None:
+    """One request per worker endpoint per round, all flushed (and so
+    served) concurrently; PS sharding per --policy."""
+    from repro import rpc as rpclib
+    from repro.serve.engine import decode_token_chunk
+
+    fabric, stubs = engine.serve_cluster(cluster, policy=args.policy)
+    metrics = rpclib.MetricsInterceptor(
+        per_endpoint=True, endpoint_name=fabric.transport.endpoint_name)
+    fabric.client_interceptors.append(metrics)
+    rng = np.random.default_rng(0)
+    print(f"cluster        : {len(stubs)} worker endpoint(s) -> "
+          f"{len(next(iter(stubs.values())).servers)} ps endpoint(s), "
+          f"policy={args.policy}")
+    for i in range(args.requests):
+        prompts = {w: rng.integers(0, vocab_size,
+                                   (args.batch, args.prompt_len),
+                                   dtype=np.int32) for w in stubs}
+        t0 = time.perf_counter()
+        if args.unary:
+            calls = {w: stub.generate(prompts[w])
+                     for w, stub in stubs.items()}
+        else:
+            calls = {w: stub.generate_stream(prompts[w])
+                     for w, stub in stubs.items()}
+        fabric.flush()            # every worker's request, one loop
+        dt = time.perf_counter() - t0
+        for w, call in calls.items():
+            if args.unary:
+                out = call.result()
+            else:
+                out = np.stack([decode_token_chunk(c)
+                                for c in call.result()], axis=1)
+            print(f"request {i} [{w}]: batch={args.batch} "
+                  f"new={out.shape[1]} sample={out[0][:8].tolist()}")
+        total = len(calls) * args.batch * args.new_tokens
+        print(f"round {i}: {dt*1e3:.1f} ms wall "
+              f"({total/dt:.1f} tok/s aggregate, modeled clock "
+              f"{fabric.now()*1e3:.3f} ms)")
+    per_ep = {k: v["calls"] for k, v in metrics.snapshot().items()
+              if "@" in k and not k.startswith("server:")}
+    print(f"per-endpoint   : {per_ep}")
 
 
 def main() -> None:
@@ -39,7 +96,34 @@ def main() -> None:
     ap.add_argument("--unary", action="store_true",
                     help="use the unary generate method instead of the "
                          "server-streaming generate_stream")
+    ap.add_argument("--transport", default="loopback",
+                    choices=("loopback", "cluster"),
+                    help="rpc transport: loopback (single host) or "
+                         "cluster (multi-endpoint, --cluster-spec)")
+    ap.add_argument("--cluster-spec", default=None, metavar="JSON|PATH",
+                    help="cluster topology: inline ClusterSpec JSON or "
+                         "a JSON file path (cluster transport only)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=DISPATCH_POLICIES,
+                    help="PS shard dispatch policy (cluster transport)")
     args = ap.parse_args()
+
+    if args.transport == "cluster" and args.cluster_spec is None:
+        ap.error("--transport cluster needs --cluster-spec")
+    if args.cluster_spec is not None and args.transport != "cluster":
+        ap.error("--cluster-spec needs --transport cluster")
+    if args.transport == "cluster" and args.no_rpc:
+        ap.error("--no-rpc bypasses the fabric; it cannot combine with "
+                 "--transport cluster")
+
+    cluster = None
+    if args.transport == "cluster":
+        # validate the topology BEFORE the (slow) model init
+        from repro.rpc.cluster import load_cluster_spec
+        try:
+            cluster = load_cluster_spec(args.cluster_spec)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            ap.error(f"--cluster-spec: {e}")
 
     acfg = (get_reduced_config(args.arch) if args.reduced
             else get_config(args.arch))
@@ -49,6 +133,11 @@ def main() -> None:
     engine = ServeEngine(ctx, acfg, params, ServeConfig(
         max_seq=args.prompt_len + args.new_tokens + 8,
         max_new_tokens=args.new_tokens, temperature=args.temperature))
+
+    if cluster is not None:
+        _serve_cluster_rounds(engine, cluster, args,
+                              acfg.model.vocab_size)
+        return
 
     channel = None
     if not args.no_rpc:

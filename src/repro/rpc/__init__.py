@@ -7,9 +7,13 @@ Layers, bottom-up:
   flow        credit-based flow control (per-channel, per-direction
               windows; ChunkGate FIFO for stream chunks)
   completion  completion-queue event loop primitive
-  transport   pluggable Transports: loopback (shared-buffer memcpy),
-              simulated (netmodel-priced ingress+egress, hundreds of
-              endpoints)
+  transport   pluggable Transports (built via make_transport): loopback
+              (shared-buffer memcpy), simulated (netmodel-priced
+              ingress+egress, hundreds of endpoints)
+  cluster     ClusterSpec (named endpoints/jobs/links) + the
+              multi-endpoint ClusterTransport: per-link routing and
+              pricing, endpoint-addressed channels, per-endpoint
+              windows — the PS-style multi-host topology layer
   collective  transport lowering flights onto core.channels ppermute
               schedules (measured on real devices)
   fabric      Channel/Server API, unary + client/server/bidi streaming
@@ -29,36 +33,49 @@ from repro.rpc.fabric import (BIDI, CLIENT_STREAM, DEADLINE_EXCEEDED,
                               Server, ServerStream, StreamHandle,
                               fully_connected_exchange, incast_exchange,
                               ring_exchange)
-from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats
+from repro.rpc.cluster import (ClusterSpec, ClusterTransport,
+                               EndpointSpec, LinkSpec, as_cluster_spec,
+                               cluster_fc_round_time,
+                               cluster_incast_round_time,
+                               cluster_ring_round_time, homogeneous,
+                               ps_worker_cluster)
+from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats, WindowConfig
 from repro.rpc.interceptors import (CallContext, ClientInterceptor,
                                     DeadlineInterceptor,
                                     MetricsInterceptor, RetryInterceptor,
                                     ServerContext, ServerInterceptor,
                                     TransientError)
-from repro.rpc.service import (EXCHANGE_SERVICE, INCAST_SERVICE,
-                               RING_SERVICE, Codec, MethodSpec,
-                               ServiceDef, Stub, StubMethod, UnaryCall)
+from repro.rpc.service import (CONFORMANCE_SERVICE, EXCHANGE_SERVICE,
+                               INCAST_SERVICE, RING_SERVICE, Codec,
+                               MethodSpec, ServiceDef, Stub, StubMethod,
+                               UnaryCall, conformance_handlers)
 from repro.rpc.framing import (FLAG_ERROR, FLAG_ONE_WAY, FLAG_REPLY,
                                FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, Frame, decode, encode,
                                make_frame, method_id, stream_chunk)
 from repro.rpc.transport import (Delivery, LoopbackTransport, Message,
                                  SimulatedTransport, Transport,
-                                 schedule_rounds, spec_of)
+                                 make_transport, schedule_rounds,
+                                 spec_of)
 
 __all__ = [
     "BIDI", "BidiStream", "Call", "CallContext", "Channel", "ChunkGate",
-    "CLIENT_STREAM", "ClientInterceptor", "Codec", "CompletionQueue",
+    "CLIENT_STREAM", "CONFORMANCE_SERVICE", "ClientInterceptor",
+    "ClusterSpec", "ClusterTransport", "Codec", "CompletionQueue",
     "CreditWindow", "DEADLINE_EXCEEDED", "DeadlineInterceptor",
-    "Delivery", "EXCHANGE_SERVICE", "Event", "FlightReport", "FlowStats",
-    "Frame", "INCAST_SERVICE", "LoopbackTransport", "Message",
-    "MethodSpec", "MetricsInterceptor", "RING_SERVICE", "RetryInterceptor",
-    "RpcError", "RpcFabric", "SERVER_STREAM", "Server", "ServerContext",
-    "ServerInterceptor", "ServerStream", "ServiceDef",
-    "SimulatedTransport", "StreamHandle", "Stub", "StubMethod",
-    "Transport", "TransientError", "UNARY", "UnaryCall", "decode",
-    "encode", "fully_connected_exchange", "incast_exchange", "make_frame",
-    "method_id", "ring_exchange", "schedule_rounds", "spec_of",
+    "Delivery", "EXCHANGE_SERVICE", "EndpointSpec", "Event",
+    "FlightReport", "FlowStats", "Frame", "INCAST_SERVICE", "LinkSpec",
+    "LoopbackTransport", "Message", "MethodSpec", "MetricsInterceptor",
+    "RING_SERVICE", "RetryInterceptor", "RpcError", "RpcFabric",
+    "SERVER_STREAM", "Server", "ServerContext", "ServerInterceptor",
+    "ServerStream", "ServiceDef", "SimulatedTransport", "StreamHandle",
+    "Stub", "StubMethod", "Transport", "TransientError", "UNARY",
+    "UnaryCall", "WindowConfig", "as_cluster_spec",
+    "cluster_fc_round_time", "cluster_incast_round_time",
+    "cluster_ring_round_time", "conformance_handlers", "decode",
+    "encode", "fully_connected_exchange", "homogeneous",
+    "incast_exchange", "make_frame", "make_transport", "method_id",
+    "ps_worker_cluster", "ring_exchange", "schedule_rounds", "spec_of",
     "stream_chunk",
     "FLAG_ERROR", "FLAG_ONE_WAY", "FLAG_REPLY", "FLAG_SERIALIZED",
     "FLAG_STREAM", "FLAG_STREAM_END",

@@ -59,7 +59,7 @@ import numpy as np
 
 from repro.rpc import framing
 from repro.rpc.completion import CompletionQueue, Event
-from repro.rpc.flow import ChunkGate, CreditWindow
+from repro.rpc.flow import ChunkGate, CreditWindow, WindowConfig
 from repro.rpc.interceptors import (TRANSIENT_PREFIX, CallContext,
                                     ClientInterceptor, ServerContext,
                                     ServerInterceptor, TransientError)
@@ -537,24 +537,44 @@ class RpcFabric:
         self._next_id += 1
         return cid
 
-    def channel(self, src: int, dst: int, *,
-                serialized: bool = False) -> Channel:
+    def resolve_endpoint(self, endpoint) -> int:
+        """Endpoint address -> index. Integers pass through; names
+        resolve through the transport (cluster transports name their
+        endpoints — ``fabric.channel("worker0", "ps1")``)."""
+        if isinstance(endpoint, str):
+            resolve = getattr(self.transport, "resolve", None)
+            if resolve is None:
+                raise ValueError(
+                    f"endpoint {endpoint!r}: named endpoint addressing "
+                    f"needs a transport with named endpoints (cluster)")
+            return resolve(endpoint)
+        return int(endpoint)
+
+    def channel(self, src, dst, *, serialized: bool = False) -> Channel:
+        src, dst = self.resolve_endpoint(src), self.resolve_endpoint(dst)
         key = (src, dst, serialized)
         if key not in self._channels:
+            # window sizing: fabric default unless the transport's
+            # endpoints advertise their own (gRPC's receiver-set
+            # windows — cluster endpoints size the channels that
+            # touch them)
+            fwd = rev = WindowConfig(self.window_bytes, self.window_msgs)
+            hook = getattr(self.transport, "channel_windows", None)
+            if hook is not None:
+                f, r = hook(src, dst)
+                fwd, rev = f or fwd, r or rev
             self._channels[key] = Channel(
                 self, src, dst, serialized=serialized,
-                window=CreditWindow(self.window_bytes, self.window_msgs),
-                rwindow=CreditWindow(self.window_bytes,
-                                     self.window_msgs))
+                window=fwd.make(), rwindow=rev.make())
         return self._channels[key]
 
-    def stub(self, service, src: int, dst: int, *,
-             serialized: bool = False):
+    def stub(self, service, src, dst, *, serialized: bool = False):
         """The generated client for ``service`` over the (src -> dst)
         channel; cached per (service, channel). Keyed by service
         *identity* — the cached Stub keeps its ServiceDef alive, so two
         live definitions sharing a name never alias."""
         from repro.rpc.service import Stub
+        src, dst = self.resolve_endpoint(src), self.resolve_endpoint(dst)
         key = (id(service), src, dst, serialized)
         st = self._stubs.get(key)
         if st is None:
@@ -563,7 +583,8 @@ class RpcFabric:
             self._stubs[key] = st
         return st
 
-    def add_server(self, endpoint: int) -> Server:
+    def add_server(self, endpoint) -> Server:
+        endpoint = self.resolve_endpoint(endpoint)
         assert endpoint not in self.servers, endpoint
         # a getter, not the list: reassigning fabric.server_interceptors
         # later still reaches existing servers

@@ -31,6 +31,18 @@ class FlowStats:
     bytes_in_flight_peak: int = 0
 
 
+@dataclass(frozen=True)
+class WindowConfig:
+    """Declarative size of one direction's CreditWindow — the shared
+    vocabulary between the fabric's defaults and a cluster endpoint's
+    advertised window (``rpc.cluster.EndpointSpec.window``)."""
+    bytes: int = 4 * 1024 * 1024
+    msgs: int = 32
+
+    def make(self) -> "CreditWindow":
+        return CreditWindow(self.bytes, self.msgs)
+
+
 class CreditWindow:
     def __init__(self, window_bytes: int = 4 * 1024 * 1024,
                  window_msgs: int = 32):

@@ -124,15 +124,33 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
     stub call. Client side: one record per call attempt's terminal
     event, latency on the fabric clock. Server side (install in
     ``fabric.server_interceptors``): handler invocation counts under a
-    ``server:`` key prefix."""
+    ``server:`` key prefix.
 
-    def __init__(self):
+    With ``per_endpoint=True`` every client-side record is additionally
+    kept under ``method@src->dst`` (and server dispatches under
+    ``server:method@endpoint``), so interleaved calls from several
+    client endpoints get separate counts and percentiles — the
+    per-endpoint breakdown a cluster run reports. ``endpoint_name``
+    labels the endpoints (a cluster transport's ``endpoint_name``
+    renders names instead of indices)."""
+
+    def __init__(self, *, per_endpoint: bool = False,
+                 endpoint_name: Optional[Callable[[int], str]] = None):
+        self.per_endpoint = per_endpoint
+        self._ep_name = endpoint_name or str
         self._recs: Dict[str, Dict[str, Any]] = {}
 
     def _rec(self, method: str) -> Dict[str, Any]:
         return self._recs.setdefault(method, {
             "calls": 0, "ok": 0, "errors": 0, "deadline_exceeded": 0,
             "retries": 0, "chunks": 0, "latencies_s": []})
+
+    def _client_keys(self, ctx: CallContext) -> List[str]:
+        keys = [ctx.method]
+        if self.per_endpoint and ctx.channel is not None:
+            keys.append(f"{ctx.method}@{self._ep_name(ctx.channel.src)}"
+                        f"->{self._ep_name(ctx.channel.dst)}")
+        return keys
 
     def reset(self) -> None:
         """Discard everything recorded so far (benchmarks call this
@@ -142,36 +160,47 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
 
     # client side --------------------------------------------------------
     def on_start(self, ctx: CallContext) -> None:
-        self._rec(ctx.method)["calls"] += 1
+        for k in self._client_keys(ctx):
+            self._rec(k)["calls"] += 1
 
     def on_event(self, ctx: CallContext, event: Event) -> None:
-        if event.kind == "stream_chunk":
-            self._rec(ctx.method)["chunks"] += 1
-        elif event.kind == "retry":
-            self._rec(ctx.method)["retries"] += 1
-            self._rec(ctx.method)["calls"] += 1     # the new attempt
+        for k in self._client_keys(ctx):
+            if event.kind == "stream_chunk":
+                self._rec(k)["chunks"] += 1
+            elif event.kind == "retry":
+                self._rec(k)["retries"] += 1
+                self._rec(k)["calls"] += 1     # the new attempt
 
     def on_complete(self, ctx: CallContext, event: Event
                     ) -> Optional[str]:
-        rec = self._rec(ctx.method)
-        if event.kind == "deadline_exceeded":
-            rec["deadline_exceeded"] += 1
-        if event.ok:
-            rec["ok"] += 1
-        else:
-            rec["errors"] += 1
-        if ctx.end_s is not None:
-            rec["latencies_s"].append(ctx.end_s - ctx.start_s)
+        for k in self._client_keys(ctx):
+            rec = self._rec(k)
+            if event.kind == "deadline_exceeded":
+                rec["deadline_exceeded"] += 1
+            if event.ok:
+                rec["ok"] += 1
+            else:
+                rec["errors"] += 1
+            if ctx.end_s is not None:
+                rec["latencies_s"].append(ctx.end_s - ctx.start_s)
         return None
 
     # server side --------------------------------------------------------
+    def _server_keys(self, ctx: ServerContext) -> List[str]:
+        keys = ["server:" + ctx.method]
+        if self.per_endpoint:
+            keys.append(f"server:{ctx.method}"
+                        f"@{self._ep_name(ctx.endpoint)}")
+        return keys
+
     def on_receive(self, ctx: ServerContext) -> None:
-        self._rec("server:" + ctx.method)["calls"] += 1
+        for k in self._server_keys(ctx):
+            self._rec(k)["calls"] += 1
 
     def on_done(self, ctx: ServerContext, ok: bool,
                 error: Optional[str] = None) -> None:
-        rec = self._rec("server:" + ctx.method)
-        rec["ok" if ok else "errors"] += 1
+        for k in self._server_keys(ctx):
+            self._rec(k)["ok" if ok else "errors"] += 1
 
     # reporting ----------------------------------------------------------
     def snapshot(self) -> Dict[str, Dict[str, Any]]:

@@ -255,10 +255,49 @@ RING_SERVICE = ServiceDef("Ring", (
 INCAST_SERVICE = ServiceDef("Incast", (
     MethodSpec("push_fetch", BIDI),))
 
+#: transport-conformance service: one method per cardinality kind, so a
+#: dispatching transport can be exercised uniformly across endpoints
+#: (the fabric conformance test tier drives it against every transport)
+CONFORMANCE_SERVICE = ServiceDef("Conformance", (
+    MethodSpec("echo", UNARY),              # request back verbatim
+    MethodSpec("gather", CLIENT_STREAM),    # total byte count of stream
+    MethodSpec("split", SERVER_STREAM),     # request rechunked
+    MethodSpec("relay", BIDI),              # each chunk echoed
+))
+
+
+def conformance_handlers(*, chunk_bytes: int = 128):
+    """Reference handlers for :data:`CONFORMANCE_SERVICE`: ``echo``
+    returns the request buffers, ``gather`` replies with the byte count
+    of the concatenated stream (little-endian uint32), ``split``
+    streams the concatenated request back in ``chunk_bytes`` pieces,
+    ``relay`` echoes every chunk as it arrives."""
+
+    def echo(req):
+        return [np.array(b, copy=True) for b in req]
+
+    def gather(req):
+        total = int(sum(b.size for b in req))
+        return [np.asarray([total], dtype="<u4").view(np.uint8)]
+
+    def split(req):
+        data = (np.concatenate([b.reshape(-1) for b in req])
+                if req else np.zeros(0, np.uint8))
+        if data.size == 0:
+            return []
+        return [[np.array(data[i:i + chunk_bytes], copy=True)]
+                for i in range(0, data.size, chunk_bytes)]
+
+    def relay(chunk, end):
+        return [[np.array(b, copy=True) for b in chunk]] if chunk else []
+
+    return {"echo": echo, "gather": gather, "split": split,
+            "relay": relay}
+
 
 __all__ = [
-    "BIDI", "CLIENT_STREAM", "Codec", "EXCHANGE_SERVICE",
-    "INCAST_SERVICE", "KINDS", "MethodSpec", "RING_SERVICE", "RpcError",
-    "SERVER_STREAM", "ServiceDef", "Stub", "StubMethod", "UNARY",
-    "UnaryCall",
+    "BIDI", "CLIENT_STREAM", "CONFORMANCE_SERVICE", "Codec",
+    "EXCHANGE_SERVICE", "INCAST_SERVICE", "KINDS", "MethodSpec",
+    "RING_SERVICE", "RpcError", "SERVER_STREAM", "ServiceDef", "Stub",
+    "StubMethod", "UNARY", "UnaryCall", "conformance_handlers",
 ]

@@ -93,6 +93,55 @@ class Transport(abc.ABC):
         pass
 
 
+def make_transport(kind: str, n_endpoints: int = None, *,
+                   network=None, cluster=None, mesh=None, spec=None,
+                   **kw) -> Transport:
+    """The one transport constructor call sites outside ``repro.rpc``
+    use (the CI deprecation gate rejects direct class construction
+    elsewhere). Kinds:
+
+      loopback    — make_transport("loopback", n)
+      simulated   — make_transport("simulated", n, network=model|name)
+      cluster     — make_transport("cluster",
+                                   cluster=ClusterSpec|dict|json)
+      collective  — make_transport("collective", n, mesh=mesh,
+                                   spec=payload_spec, ...)
+    """
+    if kind in ("loopback", "simulated") and n_endpoints is None:
+        raise ValueError(f"{kind} transport needs n_endpoints")
+    if kind == "loopback":
+        return LoopbackTransport(n_endpoints, **kw)
+    if kind == "simulated":
+        if isinstance(network, str):
+            from repro.core.netmodel import NETWORKS
+            if network not in NETWORKS:
+                raise ValueError(f"unknown network {network!r}; choose "
+                                 f"from {sorted(NETWORKS)}")
+            network = NETWORKS[network]
+        if not isinstance(network, NetworkModel):
+            raise ValueError(
+                "simulated transport needs network= (a NetworkModel or "
+                "a name in core.netmodel.NETWORKS); got "
+                f"{network!r}")
+        return SimulatedTransport(n_endpoints, network, **kw)
+    if kind == "cluster":
+        from repro.rpc.cluster import ClusterTransport, as_cluster_spec
+        if cluster is None:
+            raise ValueError("cluster transport needs cluster= (a "
+                             "ClusterSpec, dict, or JSON string)")
+        return ClusterTransport(as_cluster_spec(cluster), **kw)
+    if kind == "collective":
+        if mesh is None or spec is None:
+            raise ValueError("collective transport needs mesh= and "
+                             "spec= (a device mesh + PayloadSpec)")
+        from repro.rpc.collective import CollectiveTransport
+        return CollectiveTransport(mesh, spec,
+                                   n_endpoints=n_endpoints or 0, **kw)
+    raise ValueError(f"unknown transport kind {kind!r}; choose from "
+                     f"('loopback', 'simulated', 'cluster', "
+                     f"'collective')")
+
+
 class LoopbackTransport(Transport):
     """Shared-buffer transport: every endpoint lives in this process and
     owns an inbox list; delivery encodes each frame to wire bytes and

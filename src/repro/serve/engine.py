@@ -16,6 +16,13 @@ communication benchmarks measure. The service has two methods:
 ``serve_stub(channel)`` builds the generated client stub;
 ``rpc_generate`` / ``rpc_generate_stream`` are convenience wrappers
 over it (``rpc_generate`` is the deprecated shim for the pre-stub API).
+
+Multi-host (PS-style) serving: ``serve_cluster`` binds the service on
+every ``ps`` endpoint of a ``rpc.ClusterSpec`` and hands each
+``worker`` endpoint a :class:`ShardedServeStub` — a dispatch client
+that shards generation requests across the PS endpoints under a
+``round_robin`` or ``least_loaded`` policy, so several client
+endpoints generate concurrently over per-link-priced cluster routes.
 """
 from __future__ import annotations
 
@@ -128,10 +135,40 @@ class ServeEngine:
         Returns (fabric, client channel)."""
         from repro import rpc as rpclib
         fabric = rpclib.RpcFabric(
-            rpclib.LoopbackTransport(max(endpoint, client) + 1))
+            rpclib.make_transport("loopback",
+                                  max(endpoint, client) + 1))
         self.attach(fabric.add_server(endpoint))
         return fabric, fabric.channel(client, endpoint,
                                       serialized=serialized)
+
+    def serve_cluster(self, cluster, *, serialized: bool = True,
+                      policy: str = "round_robin", ps_job: str = "ps",
+                      worker_job: str = "worker"):
+        """Multi-endpoint serving over a cluster transport: this
+        engine's ``Serve`` service bound on every ``ps_job`` endpoint
+        of ``cluster`` (a ``rpc.ClusterSpec`` / dict / JSON), one
+        :class:`ShardedServeStub` per ``worker_job`` endpoint. Returns
+        ``(fabric, {worker_name: ShardedServeStub})`` — submit from
+        several workers, then ``fabric.flush()`` drives all of them
+        concurrently through per-link-priced routes."""
+        from repro import rpc as rpclib
+        from repro.rpc.cluster import as_cluster_spec
+        cluster = as_cluster_spec(cluster)
+        ps = cluster.job_endpoints(ps_job)
+        workers = cluster.job_endpoints(worker_job)
+        if not ps or not workers:
+            raise ValueError(
+                f"serve_cluster needs >= 1 {ps_job!r} and >= 1 "
+                f"{worker_job!r} endpoint; cluster jobs: "
+                f"{ {j: len(e) for j, e in cluster.jobs.items()} }")
+        fabric = rpclib.RpcFabric(
+            rpclib.make_transport("cluster", cluster=cluster))
+        for name in ps:
+            self.attach(fabric.add_server(name))
+        stubs = {w: ShardedServeStub(fabric, w, ps, policy=policy,
+                                     serialized=serialized)
+                 for w in workers}
+        return fabric, stubs
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +240,74 @@ def serve_stub(channel):
     (served from the fabric's stub cache)."""
     return channel.fabric.stub(SERVE_SERVICE, channel.src, channel.dst,
                                serialized=channel.serialized)
+
+
+#: dispatch policies ShardedServeStub understands
+DISPATCH_POLICIES = ("round_robin", "least_loaded")
+
+
+class ShardedServeStub:
+    """PS-style sharded dispatch client: one client endpoint fanning
+    generation requests across several server endpoints of one fabric.
+
+    ``round_robin`` cycles the servers; ``least_loaded`` picks the
+    server with the fewest outstanding (submitted, not yet completed)
+    calls from this client, ties broken by server order. Outstanding
+    counts are tracked per handle, so interleaved ``generate`` /
+    ``generate_stream`` submissions from several stubs before one
+    ``fabric.flush()`` shard the way a real PS front-end would."""
+
+    def __init__(self, fabric, client, servers, *,
+                 policy: str = "round_robin", serialized: bool = True):
+        if policy not in DISPATCH_POLICIES:
+            raise ValueError(f"unknown dispatch policy {policy!r}; "
+                             f"choose from {DISPATCH_POLICIES}")
+        assert servers, "sharded dispatch needs >= 1 server endpoint"
+        self.fabric = fabric
+        self.client = client
+        self.servers = list(servers)
+        self.policy = policy
+        self._stubs = [serve_stub(fabric.channel(client, s,
+                                                 serialized=serialized))
+                       for s in self.servers]
+        self._rr = 0
+        self._inflight: List[list] = [[] for _ in self.servers]
+
+    def outstanding(self, shard: int) -> int:
+        """Submitted-but-incomplete calls this client has on one
+        server (completed handles are pruned lazily)."""
+        self._inflight[shard] = [h for h in self._inflight[shard]
+                                 if not h.done]
+        return len(self._inflight[shard])
+
+    def _pick(self) -> int:
+        if self.policy == "round_robin":
+            shard = self._rr % len(self._stubs)
+            self._rr += 1
+            return shard
+        return min(range(len(self._stubs)),
+                   key=lambda i: (self.outstanding(i), i))
+
+    def _dispatch(self, method: str, prompts: np.ndarray,
+                  max_new_tokens: int, **kw):
+        shard = self._pick()
+        handle = getattr(self._stubs[shard], method)(
+            (prompts, max_new_tokens), **kw)
+        self._inflight[shard].append(handle)
+        return handle
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 0,
+                 **kw):
+        """Unary generate on the picked shard -> ``UnaryCall`` (its
+        ``result()`` is the decoded (B, new) token block)."""
+        return self._dispatch("generate", prompts, max_new_tokens, **kw)
+
+    def generate_stream(self, prompts: np.ndarray,
+                        max_new_tokens: int = 0, **kw):
+        """Streaming generate on the picked shard -> ``ServerStream``
+        (one (B,) token chunk per decode step)."""
+        return self._dispatch("generate_stream", prompts,
+                              max_new_tokens, **kw)
 
 
 def rpc_generate(channel, prompts: np.ndarray,

@@ -1,0 +1,115 @@
+"""Property tests for the cluster transport: random ClusterSpecs
+(1-8 endpoints, random per-link parameters) must round-trip through
+serialization exactly, and a flight priced by stepping the transport
+must land on the per-link netmodel closed form — identical round time
+either way. Wired into the CI hypothesis profile alongside the framing
+properties."""
+import numpy as np
+import pytest
+
+from _hypothesis_support import given, settings, st
+from repro import rpc
+from repro.core.netmodel import NETWORKS, LinkLoad, cluster_flight_time
+from repro.core.payload import PayloadSpec, classify
+
+NET_NAMES = sorted(NETWORKS)
+
+
+@st.composite
+def cluster_specs(draw):
+    """1-8 endpoints with random networks/jobs/windows, random link
+    overrides on a subset of the directed pairs."""
+    n = draw(st.integers(min_value=1, max_value=8))
+    endpoints = []
+    for i in range(n):
+        window = draw(st.one_of(
+            st.none(),
+            st.builds(rpc.WindowConfig,
+                      st.integers(min_value=1024, max_value=1 << 26),
+                      st.integers(min_value=1, max_value=256))))
+        endpoints.append(rpc.EndpointSpec(
+            name=f"ep{i}",
+            job=draw(st.sampled_from(["ps", "worker", "eval"])),
+            network=draw(st.sampled_from(NET_NAMES)),
+            window=window))
+    pairs = [(a, b) for a in range(n) for b in range(n) if a != b]
+    chosen = draw(st.lists(st.sampled_from(pairs), unique=True,
+                           max_size=min(len(pairs), 6))
+                  if pairs else st.just([]))
+    links = tuple(
+        rpc.LinkSpec(
+            src=f"ep{a}", dst=f"ep{b}",
+            bandwidth_Bps=draw(st.one_of(
+                st.none(),
+                st.floats(min_value=1e7, max_value=1e11))),
+            latency_s=draw(st.one_of(
+                st.none(),
+                st.floats(min_value=1e-7, max_value=1e-2))))
+        for a, b in chosen)
+    return rpc.ClusterSpec(endpoints=tuple(endpoints), links=links)
+
+
+@given(spec=cluster_specs())
+@settings(max_examples=50, deadline=None)
+def test_cluster_spec_serialization_roundtrip(spec):
+    assert rpc.ClusterSpec.from_json(spec.to_json()) == spec
+    assert rpc.as_cluster_spec(spec.to_dict()) == spec
+
+
+@given(spec=cluster_specs(),
+       nbytes=st.integers(min_value=0, max_value=4 << 20),
+       n_msgs=st.integers(min_value=1, max_value=4))
+@settings(max_examples=50, deadline=None)
+def test_flight_time_closed_form_matches_transport(spec, nbytes,
+                                                   n_msgs):
+    """One flight — every directed pair carries n_msgs spec-only frames
+    plus a local message per endpoint — priced by stepping the
+    transport must equal the closed form on the same link loads."""
+    transport = rpc.ClusterTransport(spec)
+    n = spec.n_endpoints
+    payload = PayloadSpec(sizes=(nbytes,), scheme="t",
+                          categories=(classify(nbytes),))
+    messages, loads = [], []
+    for src in range(n):
+        for dst in range(n):
+            if src == dst:
+                continue
+            frame = rpc.make_frame(1 + len(messages), "m", None,
+                                   sizes=[nbytes])
+            messages.extend(rpc.Message(src, dst, frame)
+                            for _ in range(n_msgs))
+            loads.append(LinkLoad(src, dst, spec.link_model(src, dst),
+                                  (payload,) * n_msgs))
+    for e in range(n):                     # local messages stay cheap
+        frame = rpc.make_frame(10_000 + e, "m", None, sizes=[nbytes])
+        messages.append(rpc.Message(e, e, frame))
+        loads.append(LinkLoad(e, e, spec.base_model(e), (payload,)))
+    delivery = transport.deliver(messages)
+    want = cluster_flight_time(loads)
+    assert delivery.elapsed_s == pytest.approx(want, rel=1e-9, abs=0.0) \
+        or (delivery.elapsed_s == 0.0 and want == 0.0)
+    # stepping accumulates the modeled clock flight by flight
+    before = transport.clock_s
+    transport.deliver(messages)
+    assert transport.clock_s == pytest.approx(before + want, rel=1e-9) \
+        or (before == 0.0 and want == 0.0)
+
+
+@given(nbytes=st.integers(min_value=1, max_value=1 << 20),
+       chunks=st.integers(min_value=1, max_value=4),
+       n=st.integers(min_value=2, max_value=8),
+       net=st.sampled_from(["eth40g", "eth10g", "ipoib_fdr",
+                            "rdma_edr"]))
+@settings(max_examples=25, deadline=None)
+def test_homogeneous_cluster_ring_equals_netmodel(nbytes, chunks, n,
+                                                  net):
+    """Any uniform cluster must collapse to the single-model closed
+    forms — the per-link refinement cannot drift the degenerate
+    case."""
+    spec = PayloadSpec(sizes=(nbytes,), scheme="t",
+                       categories=(classify(nbytes),))
+    cluster = rpc.homogeneous(n, net)
+    got = rpc.cluster_ring_round_time(cluster, [nbytes],
+                                      n_chunks=chunks)
+    want = NETWORKS[net].ring_round_time(spec, n, n_chunks=chunks)
+    assert got == pytest.approx(want, rel=1e-9)

@@ -1,0 +1,678 @@
+"""Fabric conformance tier for the multi-endpoint cluster transport:
+ClusterSpec validation/serialization, endpoint-named addressing, every
+MethodSpec kind exercised across endpoints, deadline expiry on a
+cross-endpoint stalled stream, retry-on-transient across endpoints,
+exact simulated-vs-netmodel cross-checks (verified by mutation:
+zeroing the per-link contention term must break them), per-endpoint
+interceptor metrics under interleaved multi-client load, PS-style
+sharded serve dispatch, and the bench/CLI integration."""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core.netmodel import NETWORKS, LinkLoad, cluster_flight_time
+from repro.core.payload import PayloadSpec
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+SIZES = [65536] * 4
+SPEC = PayloadSpec(sizes=tuple(SIZES), scheme="t",
+                   categories=("medium",) * 4)
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+def _hetero_cluster():
+    """PS on RDMA, workers on kernel-TCP, two overridden links."""
+    return rpc.ClusterSpec(
+        endpoints=(rpc.EndpointSpec("ps0", job="ps", network="rdma_edr"),
+                   rpc.EndpointSpec("w0", network="eth10g"),
+                   rpc.EndpointSpec("w1", network="eth40g")),
+        links=(rpc.LinkSpec("w0", "ps0", bandwidth_Bps=1e9,
+                            latency_s=2e-4),
+               rpc.LinkSpec("ps0", "w1", bandwidth_Bps=5e8)))
+
+
+def _slow_link_cluster():
+    """5 endpoints on one network with one very slow directed link."""
+    return rpc.ClusterSpec(
+        endpoints=tuple(rpc.EndpointSpec(f"n{i}", network="ipoib_fdr")
+                        for i in range(5)),
+        links=(rpc.LinkSpec("n1", "n2", bandwidth_Bps=1e8,
+                            latency_s=1e-3),))
+
+
+#: the >= 3 cluster specs of the exact-match cross-checks
+CLUSTERS = {
+    "homogeneous": rpc.homogeneous(4, "eth40g"),
+    "hetero_ps": _hetero_cluster(),
+    "slow_link": _slow_link_cluster(),
+}
+
+
+def _cluster_fabric(cluster, **kw):
+    kw.setdefault("window_bytes", 64 << 20)
+    kw.setdefault("window_msgs", 256)
+    return rpc.RpcFabric(rpc.make_transport("cluster", cluster=cluster),
+                         **kw)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec: validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_cluster_spec_validation():
+    ep = rpc.EndpointSpec
+    with pytest.raises(ValueError, match="at least one endpoint"):
+        rpc.ClusterSpec(endpoints=())
+    with pytest.raises(ValueError, match="duplicate endpoint"):
+        rpc.ClusterSpec(endpoints=(ep("a"), ep("a")))
+    with pytest.raises(ValueError, match="unknown network"):
+        rpc.ClusterSpec(endpoints=(ep("a", network="warp"),))
+    with pytest.raises(ValueError, match="unknown endpoint 'b'"):
+        rpc.ClusterSpec(endpoints=(ep("a"),),
+                        links=(rpc.LinkSpec("a", "b"),))
+    with pytest.raises(ValueError, match="duplicate link"):
+        rpc.ClusterSpec(endpoints=(ep("a"), ep("b")),
+                        links=(rpc.LinkSpec("a", "b"),
+                               rpc.LinkSpec("a", "b")))
+    with pytest.raises(ValueError, match="self-link"):
+        # local calls are memcpys — a self-link override is dead config
+        rpc.ClusterSpec(endpoints=(ep("a"),),
+                        links=(rpc.LinkSpec("a", "a",
+                                            latency_s=1.0),))
+    with pytest.raises(ValueError, match="unknown endpoint 'zz'"):
+        CLUSTERS["hetero_ps"].index("zz")
+
+
+@pytest.mark.parametrize("name", sorted(CLUSTERS))
+def test_cluster_spec_json_roundtrip(name):
+    spec = CLUSTERS[name]
+    again = rpc.ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    # and through plain dicts / as_cluster_spec coercion
+    assert rpc.as_cluster_spec(spec.to_dict()) == spec
+    assert rpc.as_cluster_spec(spec.to_json()) == spec
+    assert rpc.as_cluster_spec(spec) is spec
+
+
+def test_cluster_spec_jobs_and_windows_roundtrip():
+    spec = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps",
+                         window=rpc.WindowConfig(1 << 16, 8)),
+        rpc.EndpointSpec("w0"), rpc.EndpointSpec("w1")))
+    assert spec.job_endpoints("ps") == ("ps0",)
+    assert spec.job_endpoints("worker") == ("w0", "w1")
+    assert spec.jobs == {"ps": ("ps0",), "worker": ("w0", "w1")}
+    assert rpc.ClusterSpec.from_json(spec.to_json()) == spec
+
+
+def test_ps_worker_cluster_puts_server_first():
+    spec = rpc.ps_worker_cluster(2, 3)
+    assert spec.endpoints[0].name == "ps0"
+    assert spec.endpoints[0].job == "ps"
+    assert spec.n_endpoints == 5
+    assert spec.job_endpoints("worker") == ("worker0", "worker1",
+                                            "worker2")
+
+
+# ---------------------------------------------------------------------------
+# endpoint-addressed channels + per-endpoint windows
+# ---------------------------------------------------------------------------
+
+def test_named_endpoint_addressing():
+    fab = _cluster_fabric(CLUSTERS["hetero_ps"])
+    srv = fab.add_server("ps0")
+    assert 0 in fab.servers     # resolved to the spec index
+    srv.add_service(rpc.CONFORMANCE_SERVICE, rpc.conformance_handlers())
+    stub = fab.stub(rpc.CONFORMANCE_SERVICE, "w0", "ps0")
+    assert stub is fab.stub(rpc.CONFORMANCE_SERVICE, 1, 0)  # same cache
+    out = stub.echo([np.arange(16, dtype=np.uint8)]).result()
+    assert np.array_equal(out[0], np.arange(16, dtype=np.uint8))
+    with pytest.raises(ValueError, match="unknown endpoint"):
+        fab.channel("nope", "ps0")
+
+
+def test_named_addressing_needs_named_transport():
+    fab = rpc.RpcFabric(rpc.make_transport("loopback", 2))
+    with pytest.raises(ValueError, match="named endpoint addressing"):
+        fab.channel("a", "b")
+
+
+def test_per_endpoint_windows_size_channels():
+    spec = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("a", window=rpc.WindowConfig(1024, 4)),
+        rpc.EndpointSpec("b")))
+    fab = rpc.RpcFabric(rpc.make_transport("cluster", cluster=spec))
+    ch = fab.channel("b", "a")
+    # forward gated by the receiver's advertised window, reverse by
+    # the client's (which advertises none -> fabric default)
+    assert (ch.window.window_bytes, ch.window.window_msgs) == (1024, 4)
+    assert ch.rwindow.window_bytes == fab.window_bytes
+    back = fab.channel("a", "b")
+    assert back.window.window_bytes == fab.window_bytes
+    assert (back.rwindow.window_bytes, back.rwindow.window_msgs) \
+        == (1024, 4)
+
+
+# ---------------------------------------------------------------------------
+# conformance: every MethodSpec kind, across endpoints
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+def test_all_four_kinds_across_endpoints(cluster_name):
+    """unary / client-stream / server-stream / bidi each exercised
+    from every non-server endpoint, real payload bytes end to end."""
+    cluster = CLUSTERS[cluster_name]
+    fab = _cluster_fabric(cluster)
+    server = cluster.endpoints[0].name
+    fab.add_server(server).add_service(rpc.CONFORMANCE_SERVICE,
+                                       rpc.conformance_handlers())
+    for client in (ep.name for ep in cluster.endpoints[1:]):
+        stub = fab.stub(rpc.CONFORMANCE_SERVICE, client, server)
+        payload = _bufs([300, 40], seed=cluster.index(client))
+
+        out = stub.echo(payload).result()                  # unary
+        assert [b.tolist() for b in out] \
+            == [b.tolist() for b in payload]
+
+        total = stub.gather([payload, payload]).result()   # client-stream
+        assert int(np.ascontiguousarray(total[0]).view("<u4")[0]) == 680
+
+        chunks = stub.split(payload).result()              # server-stream
+        got = np.concatenate([np.asarray(c[0]) for c in chunks])
+        want = np.concatenate([b.reshape(-1) for b in payload])
+        assert np.array_equal(got, want)
+        assert len(chunks) == -(-340 // 128)
+
+        h = stub.relay([[payload[0]], [payload[1]]])       # bidi
+        echoed = h.result()
+        assert len(echoed) == 2
+        assert np.array_equal(np.asarray(echoed[0][0]), payload[0])
+        assert np.array_equal(np.asarray(echoed[1][0]), payload[1])
+    assert fab.transport.clock_s > 0.0     # everything was priced
+
+
+def test_same_endpoint_calls_are_loopback_fast():
+    """A local (src == dst) unary call never pays link alpha / rpc
+    overhead — only the host memcpy (zero on the RDMA-class model)."""
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("a", network="rdma_edr"),
+        rpc.EndpointSpec("b", network="rdma_edr")))
+    fab = _cluster_fabric(cluster)
+    for name in ("a", "b"):
+        fab.add_server(name).add_service(rpc.CONFORMANCE_SERVICE,
+                                         rpc.conformance_handlers())
+    local = fab.stub(rpc.CONFORMANCE_SERVICE, "a", "a")
+    local.echo([np.zeros(1 << 20, np.uint8)]).result()
+    assert fab.transport.clock_s == 0.0    # rdma copy rate is inf
+    remote = fab.stub(rpc.CONFORMANCE_SERVICE, "a", "b")
+    remote.echo([np.zeros(1 << 20, np.uint8)]).result()
+    assert fab.transport.clock_s > 0.0     # the cross link is priced
+
+
+# ---------------------------------------------------------------------------
+# deadline expiry + retry, across endpoints
+# ---------------------------------------------------------------------------
+
+def test_deadline_on_cross_endpoint_stalled_stream():
+    """A server stream stalled behind a zero-credit reverse window on a
+    cross-endpoint cluster channel cancels at its deadline on the
+    modeled clock (deterministically), instead of deadlocking."""
+    fab = _cluster_fabric(CLUSTERS["hetero_ps"], window_bytes=1024,
+                          window_msgs=4)
+    fab.add_server("ps0").add_service(rpc.CONFORMANCE_SERVICE,
+                                      rpc.conformance_handlers())
+    ch = fab.channel("w1", "ps0")
+    assert ch.rwindow.try_acquire(ch.rwindow.window_bytes)  # drain
+    h = fab.stub(rpc.CONFORMANCE_SERVICE, "w1", "ps0").split(
+        [np.zeros(800, np.uint8)], deadline_s=5.0)
+    fab.flush()
+    assert h.done
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        h.chunk_bufs()
+    assert fab.transport.clock_s >= 5.0    # advanced, not slept
+    assert len(ch.rx_gate) == 0            # gated chunks dropped
+
+
+def test_retry_on_transient_across_endpoints():
+    """Transient faults at the PS are retried per client endpoint; both
+    clients' calls succeed on the second attempt."""
+    failures = {"w0": True, "w1": True}    # first call per client fails
+
+    def flaky(req):
+        key = "w0" if req[0][0] == 0 else "w1"
+        if failures[key]:
+            failures[key] = False
+            raise rpc.TransientError(f"{key} hiccup")
+        return [np.array(req[0], copy=True)]
+
+    svc = rpc.ServiceDef("Flaky", (rpc.MethodSpec("get", rpc.UNARY),))
+    retry = rpc.RetryInterceptor(max_attempts=3)
+    fab = _cluster_fabric(CLUSTERS["hetero_ps"],
+                          client_interceptors=[retry])
+    fab.add_server("ps0").add_service(svc, {"get": flaky})
+    calls = [
+        fab.stub(svc, "w0", "ps0").get([np.full(8, 0, np.uint8)]),
+        fab.stub(svc, "w1", "ps0").get([np.full(8, 1, np.uint8)]),
+    ]
+    fab.flush()
+    assert retry.retries == 2
+    assert [int(c.result()[0][0]) for c in calls] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# exact-match cross-checks vs the per-link netmodel closed forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+def test_cluster_fc_matches_closed_form(cluster_name):
+    cluster = CLUSTERS[cluster_name]
+    fab = _cluster_fabric(cluster)
+    rep = rpc.fully_connected_exchange(fab, SIZES)
+    assert rep.modeled
+    assert rep.elapsed_s == pytest.approx(
+        rpc.cluster_fc_round_time(cluster, SIZES), rel=1e-9)
+
+
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+@pytest.mark.parametrize("chunks", [1, 3])
+def test_cluster_ring_matches_closed_form(cluster_name, chunks):
+    cluster = CLUSTERS[cluster_name]
+    fab = _cluster_fabric(cluster)
+    rep = rpc.ring_exchange(fab, SIZES, n_chunks=chunks)
+    assert rep.elapsed_s == pytest.approx(
+        rpc.cluster_ring_round_time(cluster, SIZES, n_chunks=chunks),
+        rel=1e-9)
+
+
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+@pytest.mark.parametrize("chunks,ratio", [(1, 1.0), (2, 0.25)])
+def test_cluster_incast_matches_closed_form(cluster_name, chunks,
+                                            ratio):
+    cluster = CLUSTERS[cluster_name]
+    fab = _cluster_fabric(cluster)
+    rep = rpc.incast_exchange(fab, SIZES, n_chunks=chunks,
+                              fetch_ratio=ratio)
+    assert rep.elapsed_s == pytest.approx(
+        rpc.cluster_incast_round_time(cluster, SIZES, n_chunks=chunks,
+                                      fetch_ratio=ratio), rel=1e-9)
+
+
+@pytest.mark.parametrize("family,n", [("ring", 4), ("incast", 3)])
+def test_homogeneous_cluster_reproduces_simulated_transport(family, n):
+    """The degenerate (uniform, no-override) cluster must price every
+    family exactly like the single-NetworkModel SimulatedTransport —
+    the per-link decomposition is a refinement, not a different
+    model."""
+    net = NETWORKS["eth40g"]
+    cluster = rpc.homogeneous(n + (1 if family == "incast" else 0),
+                              "eth40g")
+    fab = _cluster_fabric(cluster)
+    if family == "ring":
+        rep = rpc.ring_exchange(fab, SIZES, n_chunks=3)
+        want = net.ring_round_time(SPEC, n, n_chunks=3)
+    else:
+        rep = rpc.incast_exchange(fab, SIZES, n_chunks=2)
+        want = net.incast_round_time(SPEC, n, n_chunks=2)
+    assert rep.elapsed_s == pytest.approx(want, rel=1e-9)
+
+
+def test_mutation_removing_per_link_contention_fails_cross_check(
+        monkeypatch):
+    """The conformance cross-checks must actually depend on the
+    per-link contention term: zeroing it in the transport breaks the
+    ring and incast matches on kernel-TCP clusters."""
+    monkeypatch.setattr(rpc.ClusterTransport, "_link_contention",
+                        staticmethod(lambda model, k, nbytes: 0.0))
+    for cluster, run, want in [
+        (CLUSTERS["homogeneous"],
+         lambda f: rpc.ring_exchange(f, SIZES, n_chunks=3),
+         rpc.cluster_ring_round_time(CLUSTERS["homogeneous"], SIZES,
+                                     n_chunks=3)),
+        (CLUSTERS["slow_link"],
+         lambda f: rpc.incast_exchange(f, SIZES, n_chunks=2),
+         rpc.cluster_incast_round_time(CLUSTERS["slow_link"], SIZES,
+                                       n_chunks=2)),
+    ]:
+        rep = run(_cluster_fabric(cluster))
+        assert rep.elapsed_s != pytest.approx(want, rel=1e-9), \
+            "cross-check insensitive to the per-link contention term"
+
+
+def test_closed_form_flight_decomposition():
+    """cluster_flight_time couples links at endpoints: the max over
+    endpoints of summed link ingress (+ cross-link contention) and
+    egress — spot-checked against a hand computation."""
+    net = NETWORKS["eth10g"]
+    spec = PayloadSpec(sizes=(1 << 20,), scheme="t",
+                       categories=("large",))
+    # two links into endpoint 0, one message each, plus a local load
+    loads = [
+        LinkLoad(1, 0, net, (spec,)),
+        LinkLoad(2, 0, net, (spec,)),
+        LinkLoad(0, 0, net, (spec,)),
+    ]
+    per_msg = net.payload_time(spec, serialized=False) + net.msg_time(64)
+    cross = 2 * 1 * spec.total_bytes / net.cpu_copy_Bps   # 2 links, k=1
+    local = spec.total_bytes / net.cpu_copy_Bps
+    egress = spec.total_bytes / net.beta_Bps
+    want = max(2 * per_msg + cross + local, egress)
+    assert cluster_flight_time(loads) == pytest.approx(want, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# per-endpoint interceptor metrics under interleaved multi-client load
+# ---------------------------------------------------------------------------
+
+def test_metrics_per_endpoint_with_interleaved_clients():
+    """Percentiles and counts are kept per-method AND per-endpoint:
+    three client endpoints interleave unary and streaming calls to one
+    PS, and each (src -> dst) pair gets its own record whose counts
+    sum to the per-method totals."""
+    cluster = rpc.ps_worker_cluster(1, 3, ps_network="eth40g")
+    transport = rpc.make_transport("cluster", cluster=cluster)
+    metrics = rpc.MetricsInterceptor(
+        per_endpoint=True, endpoint_name=transport.endpoint_name)
+    fab = rpc.RpcFabric(transport, window_bytes=64 << 20,
+                        window_msgs=256, client_interceptors=[metrics],
+                        server_interceptors=[metrics])
+    fab.add_server("ps0").add_service(rpc.CONFORMANCE_SERVICE,
+                                      rpc.conformance_handlers())
+    workers = ("worker0", "worker1", "worker2")
+    n_calls = {"worker0": 1, "worker1": 2, "worker2": 3}
+    # interleave: round-robin the workers, one echo + one split each
+    for rnd in range(max(n_calls.values())):
+        for w in workers:
+            if rnd < n_calls[w]:
+                stub = fab.stub(rpc.CONFORMANCE_SERVICE, w, "ps0")
+                stub.echo([np.zeros(256, np.uint8)])
+                stub.split([np.zeros(256, np.uint8)])
+    fab.flush()
+    snap = metrics.snapshot()
+    for method in ("Conformance/echo", "Conformance/split"):
+        assert snap[method]["calls"] == 6
+        per_ep = {w: snap[f"{method}@{w}->ps0"] for w in workers}
+        for w in workers:
+            rec = per_ep[w]
+            assert rec["calls"] == n_calls[w]
+            assert rec["ok"] == n_calls[w]
+            assert len(rec["latency_us"]) == 4      # percentiles present
+        assert sum(r["calls"] for r in per_ep.values()) \
+            == snap[method]["calls"]
+    # stream chunks attributed per endpoint too (256B -> 2 chunks)
+    assert snap["Conformance/split@worker2->ps0"]["chunks"] == 6
+    # server-side dispatch counts carry the endpoint label
+    assert snap["server:Conformance/echo@ps0"]["calls"] == 6
+    # latencies differ per endpoint pair when links differ — all on the
+    # modeled clock, so records are deterministic
+    assert snap["Conformance/echo"]["ok"] == 6
+
+
+def test_metrics_per_endpoint_off_by_default():
+    fab = rpc.RpcFabric(rpc.make_transport("loopback", 2))
+    metrics = rpc.MetricsInterceptor()
+    fab.client_interceptors.append(metrics)
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(
+        [np.zeros(8, np.uint8)]).result()
+    assert all("@" not in k for k in metrics.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# PS-style sharded serve dispatch (fake Serve handlers: policy logic
+# only — the real-engine path is covered by the serve smoke below)
+# ---------------------------------------------------------------------------
+
+def _fake_serve_fabric(n_ps=2, n_workers=2, policy="round_robin"):
+    from repro.serve.engine import (SERVE_SERVICE, ShardedServeStub,
+                                    decode_generate_request,
+                                    encode_generate_reply)
+
+    served = {f"ps{i}": 0 for i in range(n_ps)}
+
+    def make_handlers(name):
+        def generate(bufs):
+            served[name] += 1
+            prompts, mnt = decode_generate_request(bufs)
+            return encode_generate_reply(
+                np.full((prompts.shape[0], max(mnt, 1)),
+                        int(name[-1]), np.int32))
+
+        def generate_stream(bufs):
+            served[name] += 1
+            prompts, mnt = decode_generate_request(bufs)
+            from repro.serve.engine import _i32_buf
+            return [[_i32_buf(np.full(prompts.shape[0], int(name[-1]),
+                                      np.int32))]
+                    for _ in range(max(mnt, 1))]
+
+        return {"generate": generate, "generate_stream": generate_stream}
+
+    cluster = rpc.ps_worker_cluster(n_ps, n_workers)
+    fab = _cluster_fabric(cluster)
+    for i in range(n_ps):
+        fab.add_server(f"ps{i}").add_service(SERVE_SERVICE,
+                                             make_handlers(f"ps{i}"))
+    stubs = {f"worker{w}": ShardedServeStub(
+        fab, f"worker{w}", cluster.job_endpoints("ps"), policy=policy)
+        for w in range(n_workers)}
+    return fab, stubs, served
+
+
+def test_sharded_dispatch_round_robin_across_clients():
+    fab, stubs, served = _fake_serve_fabric(n_ps=2, n_workers=2)
+    prompts = np.zeros((2, 4), np.int32)
+    calls = []
+    for _ in range(2):                      # 2 rounds x 2 workers
+        for stub in stubs.values():
+            calls.append(stub.generate(prompts, 3))
+    fab.flush()
+    outs = [c.result() for c in calls]
+    assert all(o.shape == (2, 3) for o in outs)
+    # each worker alternated its own round-robin: ps0 then ps1
+    assert [int(o[0, 0]) for o in outs] == [0, 0, 1, 1]
+    assert served == {"ps0": 2, "ps1": 2}
+
+
+def test_sharded_dispatch_least_loaded_avoids_busy_shard():
+    fab, stubs, served = _fake_serve_fabric(n_ps=2, n_workers=1,
+                                            policy="least_loaded")
+    stub = stubs["worker0"]
+    prompts = np.zeros((1, 4), np.int32)
+    first = stub.generate(prompts, 1)       # ties -> ps0
+    second = stub.generate(prompts, 1)      # ps0 busy -> ps1
+    third = stub.generate(prompts, 1)       # both busy (1 each) -> ps0
+    fab.flush()
+    assert [int(c.result()[0, 0]) for c in (first, second, third)] \
+        == [0, 1, 0]
+    after = stub.generate(prompts, 1)       # all drained -> ps0 again
+    fab.flush()
+    assert int(after.result()[0, 0]) == 0
+    assert served == {"ps0": 3, "ps1": 1}
+
+
+def test_sharded_dispatch_rejects_unknown_policy():
+    fab, stubs, _ = _fake_serve_fabric()
+    from repro.serve.engine import ShardedServeStub
+    with pytest.raises(ValueError, match="unknown dispatch policy"):
+        ShardedServeStub(fab, "worker0", ["ps0"], policy="random")
+
+
+def test_serve_cluster_real_engine_concurrent_workers():
+    """The acceptance path: a real (reduced) engine bound on the PS
+    endpoints of a cluster serves concurrent generation requests from
+    two client endpoints, matching direct generation bit-for-bit."""
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.parallel import NO_MESH
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_reduced_config("qwen3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(NO_MESH, cfg, params,
+                      ServeConfig(max_seq=64, max_new_tokens=4))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.model.vocab_size, (2, 8), dtype=np.int32)
+    direct = eng.generate(prompts)
+
+    cluster = rpc.ps_worker_cluster(2, 2, ps_network="rdma_edr")
+    fabric, stubs = eng.serve_cluster(cluster)
+    assert sorted(stubs) == ["worker0", "worker1"]
+    calls = {w: stub.generate(prompts) for w, stub in stubs.items()}
+    fabric.flush()                          # both served in one loop
+    for call in calls.values():
+        assert np.array_equal(call.result(), direct)
+    # round robin: worker0 -> ps0, worker1 -> ps0 (each stub's own
+    # cycle starts at the first shard)
+    assert all(s.outstanding(0) == 0 for s in stubs.values())
+
+
+def test_serve_cluster_needs_both_jobs():
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.parallel import NO_MESH
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_reduced_config("qwen3-8b", n_layers=1)
+    eng = ServeEngine(NO_MESH, cfg,
+                      init_params(jax.random.PRNGKey(0), cfg),
+                      ServeConfig(max_seq=32))
+    with pytest.raises(ValueError, match="serve_cluster needs"):
+        eng.serve_cluster(rpc.homogeneous(3))
+
+
+# ---------------------------------------------------------------------------
+# bench + CLI integration
+# ---------------------------------------------------------------------------
+
+def test_bench_incast_cluster_reports_per_endpoint_metrics():
+    from repro.core import bench
+    cfg = BenchConfig(benchmark="incast", transport="cluster",
+                      num_workers=2, stream_chunks=2, warmup_s=0.0,
+                      duration_s=0.0, iovec_count=4)
+    st = bench.run(cfg)
+    assert "Incast/push_fetch@ep1->ep0" in st.rpc_metrics
+    assert "Incast/push_fetch@ep2->ep0" in st.rpc_metrics
+    # and the per-link closed form projection matches the measured
+    # (modeled) round exactly
+    spec = st.spec
+    want = rpc.cluster_incast_round_time(
+        rpc.homogeneous(3, "eth40g"), list(spec.sizes), n_chunks=2)
+    assert st.mean_s == pytest.approx(want, rel=1e-9)
+    assert st.model_projection["cluster"] == pytest.approx(
+        st.derived["rpcs_per_round"] / want, rel=1e-9)
+
+
+def test_bench_cluster_projection_skipped_with_advertised_windows():
+    """Endpoint windows split streams across flights, so the one-flight
+    closed form no longer describes the run — the projection must be
+    withheld, not published wrong."""
+    from repro.core import bench
+    spec = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("s", window=rpc.WindowConfig(4096, 1)),
+        rpc.EndpointSpec("w0"), rpc.EndpointSpec("w1")))
+    cfg = BenchConfig(benchmark="incast", transport="cluster",
+                      num_workers=2, stream_chunks=4, warmup_s=0.0,
+                      duration_s=0.0, iovec_count=4,
+                      cluster_spec=spec)
+    st = bench.run(cfg)
+    assert "cluster" not in st.model_projection
+    assert st.mean_s > 0.0          # the run itself still completes
+
+
+def test_bench_cluster_spec_endpoint_count_mismatch_errors():
+    from repro.core import bench
+    cfg = BenchConfig(benchmark="ring", transport="cluster",
+                      num_workers=4, cluster_spec=rpc.homogeneous(3),
+                      warmup_s=0.0, duration_s=0.0)
+    with pytest.raises(RuntimeError, match="exactly 4 endpoints"):
+        bench.run(cfg)
+
+
+def test_bench_comm_cluster_cli_json(tmp_path):
+    from repro.launch import bench_comm
+    spec_path = tmp_path / "cluster.json"
+    spec_path.write_text(rpc.ClusterSpec(
+        endpoints=(rpc.EndpointSpec("ps0", job="ps",
+                                    network="rdma_edr"),
+                   rpc.EndpointSpec("w0", network="eth10g"),
+                   rpc.EndpointSpec("w1", network="eth10g")),
+        links=(rpc.LinkSpec("w0", "ps0", bandwidth_Bps=2e9),)
+    ).to_json())
+    out = tmp_path / "rows.json"
+    bench_comm.main(["--benchmark", "incast", "--num-workers", "2",
+                     "--transport", "cluster", "--cluster-spec",
+                     str(spec_path), "--stream-chunks", "2",
+                     "--warmup", "0", "--duration", "0",
+                     "--json", str(out)])
+    rows = json.loads(out.read_text())
+    assert rows[0]["transport"] == "cluster"
+    assert rows[0]["network"] == "cluster"
+    keys = rows[0]["rpc_metrics"].keys()
+    assert "Incast/push_fetch@w0->ps0" in keys
+    assert "Incast/push_fetch@w1->ps0" in keys
+
+
+def test_bench_comm_cluster_spec_requires_cluster_transport(capsys):
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--benchmark", "incast", "--transport",
+                         "simulated", "--cluster-spec", '{"endpoints":'
+                         ' [{"name": "a"}]}'])
+    assert "--cluster-spec needs --transport cluster" \
+        in capsys.readouterr().err
+
+
+def test_transport_factory_kinds():
+    t = rpc.make_transport("loopback", 2)
+    assert isinstance(t, rpc.LoopbackTransport)
+    t = rpc.make_transport("simulated", 3, network="eth40g")
+    assert isinstance(t, rpc.SimulatedTransport)
+    assert t.network is NETWORKS["eth40g"]
+    t = rpc.make_transport("cluster", cluster=rpc.homogeneous(2))
+    assert isinstance(t, rpc.ClusterTransport)
+    with pytest.raises(ValueError, match="unknown network"):
+        rpc.make_transport("simulated", 2, network="warp")
+    with pytest.raises(ValueError, match="unknown transport kind"):
+        rpc.make_transport("pigeon", 2)
+
+
+# ---------------------------------------------------------------------------
+# examples/comm_benchmark_sweep.py rides the sweep CLI now
+# ---------------------------------------------------------------------------
+
+def test_example_sweep_smoke(tmp_path, capsys):
+    """The example must import cleanly and run its tiny (--quick)
+    config end to end through bench_comm --sweep."""
+    path = ROOT / "examples" / "comm_benchmark_sweep.py"
+    spec = importlib.util.spec_from_file_location(
+        "comm_benchmark_sweep", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    try:
+        spec.loader.exec_module(mod)
+        out = tmp_path / "rows.json"
+        mod.main(["--quick", "--json", str(out)])
+        rows = json.loads(out.read_text())
+    finally:
+        sys.modules.pop(spec.name, None)
+    # benchmark x workers x stream_chunks cross-product, ring + incast
+    assert len(rows) == 2 * 4 * 4
+    assert {r["benchmark"] for r in rows} == {"ring", "incast"}
+    assert {r["workers"] for r in rows} == {2, 4, 8, 16}
+    assert {r["stream_chunks"] for r in rows} == {1, 2, 4, 8}
+    assert all("error" not in r for r in rows)
+    text = capsys.readouterr().out
+    assert "stream_chunks" in text          # the one-table report

@@ -665,10 +665,14 @@ def test_rpc_generate_shims_delegate_to_stub(monkeypatch):
 
 def test_no_direct_registration_outside_rpc():
     """The deprecation gate the CI step enforces, as a test: every
-    module outside src/repro/rpc/ goes through ServiceDef + Stub."""
+    module outside src/repro/rpc/ goes through ServiceDef + Stub, and
+    transports are built through ``rpc.make_transport`` — never by
+    constructing a Transport class directly."""
     root = pathlib.Path(__file__).resolve().parents[1] / "src"
-    pat = re.compile(r"register_unary|register_server_stream"
-                     r"|register_bidi|call_unary|\.register\(")
+    pat = re.compile(
+        r"register_unary|register_server_stream|register_bidi"
+        r"|call_unary|\.register\("
+        r"|(?:Loopback|Simulated|Cluster|Collective)Transport\s*\(")
     offenders = []
     for p in sorted(root.rglob("*.py")):
         rel = p.relative_to(root)
