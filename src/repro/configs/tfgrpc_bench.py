@@ -62,6 +62,12 @@ class BenchConfig:
     # the push payload (1.0 = symmetric; 0.25 models a small variable
     # pull against a large gradient push)
     fetch_ratio: float = 1.0
+    # failure-semantics axes (fabric families only): a default per-call
+    # deadline (relative seconds, propagated to servers in the frame
+    # header) and a per-endpoint admission limit — both surface their
+    # shed/rejected/retry counts in the rpc_metrics report
+    deadline_s: Optional[float] = None
+    admission_limit: Optional[int] = None
     # explicit payload override (e.g. --arch): a core.payload.PayloadSpec;
     # when set, the S/M/L generator fields above are ignored
     payload_spec: Optional[object] = None

@@ -210,11 +210,30 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
     per_chunk = int(spec.total_bytes * max(1.0, cfg.fetch_ratio))
     metrics = rpclib.MetricsInterceptor(per_endpoint=per_endpoint,
                                         endpoint_name=endpoint_name)
+    # failure-semantics axes: --deadline-s installs a default deadline
+    # (propagated to servers, which shed expired work — a terminal
+    # deadline outcome, never retried, surfacing as shed /
+    # deadline_exceeded counts); --admission-limit installs server-side
+    # admission control fed by the same metrics, plus a
+    # RetryInterceptor so its transient rejections re-try on later
+    # (drained) flights. Either axis puts the metrics in the server
+    # chain so shed/rejected counts land in rpc_metrics.
+    client_ics = [metrics]
+    server_ics = []
+    if cfg.deadline_s is not None:
+        client_ics.append(rpclib.DeadlineInterceptor(cfg.deadline_s))
+        server_ics = [metrics]
+    if cfg.admission_limit is not None:
+        server_ics = [metrics,
+                      rpclib.AdmissionInterceptor(cfg.admission_limit,
+                                                  metrics=metrics)]
+        client_ics.append(rpclib.RetryInterceptor(max_attempts=4))
     fabric = rpclib.RpcFabric(
         transport,
         window_bytes=max(4 * 1024 * 1024, (chunks + 1) * per_chunk),
         window_msgs=max(32, chunks + 1),
-        client_interceptors=[metrics])
+        client_interceptors=client_ics,
+        server_interceptors=server_ics)
     return fabric, bufs, metrics
 
 

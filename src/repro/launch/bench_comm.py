@@ -105,6 +105,7 @@ def _build_config(args, payload_spec, **overrides):
         warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
         network=args.network, transport=args.transport,
         stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
+        deadline_s=args.deadline_s, admission_limit=args.admission_limit,
         cluster_spec=args.cluster_spec, payload_spec=payload_spec)
     base.update(overrides)
     return BenchConfig(**base)
@@ -236,6 +237,16 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--fetch-ratio", type=float, default=1.0,
                     help="incast: fetch payload as a fraction/multiple "
                          "of the push payload (1.0 = symmetric)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="fabric families: default per-call deadline "
+                         "(relative s), propagated to servers in the "
+                         "frame header — servers shed expired work; "
+                         "shed/deadline counts land in rpc_metrics")
+    ap.add_argument("--admission-limit", type=int, default=None,
+                    help="fabric families: per-endpoint outstanding-"
+                         "call cap enforced by server-side admission "
+                         "control (rejected calls retry; rejected "
+                         "counts land in rpc_metrics)")
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
     ap.add_argument("--scheme", default="uniform",
@@ -276,6 +287,17 @@ def main(argv: Optional[List[str]] = None) -> None:
 
     if args.fetch_ratio <= 0:
         ap.error(f"--fetch-ratio must be > 0, got {args.fetch_ratio}")
+    if args.deadline_s is not None and args.deadline_s <= 0:
+        ap.error(f"--deadline-s must be > 0, got {args.deadline_s}")
+    if args.admission_limit is not None and args.admission_limit < 1:
+        ap.error(f"--admission-limit must be >= 1, got "
+                 f"{args.admission_limit}")
+    if (args.deadline_s is not None or args.admission_limit is not None) \
+            and args.benchmark not in FABRIC_BENCHMARKS \
+            and args.sweep is None:
+        ap.error("--deadline-s/--admission-limit need a fabric "
+                 f"benchmark ({', '.join(FABRIC_BENCHMARKS)}); got "
+                 f"--benchmark {args.benchmark}")
 
     axes = None
     if args.sweep is not None:

@@ -44,10 +44,17 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
     from repro import rpc as rpclib
     from repro.serve.engine import decode_token_chunk
 
-    fabric, stubs = engine.serve_cluster(cluster, policy=args.policy)
-    metrics = rpclib.MetricsInterceptor(
-        per_endpoint=True, endpoint_name=fabric.transport.endpoint_name)
-    fabric.client_interceptors.append(metrics)
+    # metrics server-side too (shed/rejected counts feed admission
+    # when the spec advertises limits), and retry so a dispatch a
+    # shard's admission control rejects recovers on a later, drained
+    # flight (single-PS specs have no shard to fail over to)
+    metrics = rpclib.MetricsInterceptor(per_endpoint=True,
+                                        endpoint_name=cluster.name_of)
+    fabric, stubs = engine.serve_cluster(
+        cluster, policy=args.policy,
+        client_interceptors=[metrics,
+                             rpclib.RetryInterceptor(max_attempts=4)],
+        server_interceptors=[metrics])
     rng = np.random.default_rng(0)
     print(f"cluster        : {len(stubs)} worker endpoint(s) -> "
           f"{len(next(iter(stubs.values())).servers)} ps endpoint(s), "

@@ -2,14 +2,16 @@
 
 Layers, bottom-up:
 
-  framing     wire format (unary + stream-chunk frames); serialized mode
-              coalesces iovecs through the payload_pack Pallas kernel
+  framing     wire format (unary + stream-chunk frames, incl. the
+              budget_us deadline-propagation header word); serialized
+              mode coalesces iovecs through the payload_pack kernel
   flow        credit-based flow control (per-channel, per-direction
               windows; ChunkGate FIFO for stream chunks)
   completion  completion-queue event loop primitive
   transport   pluggable Transports (built via make_transport): loopback
               (shared-buffer memcpy), simulated (netmodel-priced
-              ingress+egress, hundreds of endpoints)
+              ingress+egress, hundreds of endpoints), fault (seeded
+              fault-injection wrapper around any of them)
   cluster     ClusterSpec (named endpoints/jobs/links) + the
               multi-endpoint ClusterTransport: per-link routing and
               pricing, endpoint-addressed channels, per-endpoint
@@ -17,10 +19,14 @@ Layers, bottom-up:
   collective  transport lowering flights onto core.channels ppermute
               schedules (measured on real devices)
   fabric      Channel/Server API, unary + client/server/bidi streaming
-              calls, flush loop (with deadline enforcement);
+              calls, flush loop (deadline enforcement + propagation:
+              budgets stamped at flight departure, servers shed
+              expired work before handlers run);
               fully_connected/ring/incast exchanges
-  interceptors client/server interceptor chains: metrics,
-              deadline defaults, retry-on-transient
+  interceptors client/server interceptor chains: metrics (incl.
+              queue-depth/shed/rejection tracking), deadline defaults,
+              budget-aware retry (unary + zero-chunk server-stream),
+              admission control (ResourceExhausted rejections)
   service     declarative ServiceDef/MethodSpec + generated Stubs —
               the gRPC-style API surface over the fabric
 
@@ -28,9 +34,10 @@ See docs/RPC.md for the architecture and transport matrix.
 """
 from repro.rpc.completion import CompletionQueue, Event
 from repro.rpc.fabric import (BIDI, CLIENT_STREAM, DEADLINE_EXCEEDED,
-                              SERVER_STREAM, UNARY, BidiStream, Call,
-                              Channel, FlightReport, RpcError, RpcFabric,
-                              Server, ServerStream, StreamHandle,
+                              HANDLER_FAULTS, LINK_FAULT, SERVER_STREAM,
+                              UNARY, BidiStream, Call, Channel,
+                              FlightReport, RpcError, RpcFabric, Server,
+                              ServerStream, StreamHandle,
                               fully_connected_exchange, incast_exchange,
                               ring_exchange)
 from repro.rpc.cluster import (ClusterSpec, ClusterTransport,
@@ -40,33 +47,38 @@ from repro.rpc.cluster import (ClusterSpec, ClusterTransport,
                                cluster_ring_round_time, homogeneous,
                                ps_worker_cluster)
 from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats, WindowConfig
-from repro.rpc.interceptors import (CallContext, ClientInterceptor,
+from repro.rpc.interceptors import (AdmissionInterceptor, CallContext,
+                                    ClientInterceptor,
                                     DeadlineInterceptor,
-                                    MetricsInterceptor, RetryInterceptor,
-                                    ServerContext, ServerInterceptor,
-                                    TransientError)
+                                    MetricsInterceptor, ResourceExhausted,
+                                    RetryInterceptor, ServerContext,
+                                    ServerInterceptor, TransientError,
+                                    is_resource_exhausted, is_transient)
 from repro.rpc.service import (CONFORMANCE_SERVICE, EXCHANGE_SERVICE,
                                INCAST_SERVICE, RING_SERVICE, Codec,
                                MethodSpec, ServiceDef, Stub, StubMethod,
                                UnaryCall, conformance_handlers)
-from repro.rpc.framing import (FLAG_ERROR, FLAG_ONE_WAY, FLAG_REPLY,
-                               FLAG_SERIALIZED, FLAG_STREAM,
+from repro.rpc.framing import (FLAG_ERROR, FLAG_FAULT, FLAG_ONE_WAY,
+                               FLAG_REPLY, FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, Frame, decode, encode,
                                make_frame, method_id, stream_chunk)
-from repro.rpc.transport import (Delivery, LoopbackTransport, Message,
+from repro.rpc.transport import (Delivery, FaultInjectionTransport,
+                                 LoopbackTransport, Message,
                                  SimulatedTransport, Transport,
                                  make_transport, schedule_rounds,
                                  spec_of)
 
 __all__ = [
-    "BIDI", "BidiStream", "Call", "CallContext", "Channel", "ChunkGate",
-    "CLIENT_STREAM", "CONFORMANCE_SERVICE", "ClientInterceptor",
-    "ClusterSpec", "ClusterTransport", "Codec", "CompletionQueue",
-    "CreditWindow", "DEADLINE_EXCEEDED", "DeadlineInterceptor",
-    "Delivery", "EXCHANGE_SERVICE", "EndpointSpec", "Event",
-    "FlightReport", "FlowStats", "Frame", "INCAST_SERVICE", "LinkSpec",
-    "LoopbackTransport", "Message", "MethodSpec", "MetricsInterceptor",
-    "RING_SERVICE", "RetryInterceptor", "RpcError", "RpcFabric",
+    "AdmissionInterceptor", "BIDI", "BidiStream", "Call", "CallContext",
+    "Channel", "ChunkGate", "CLIENT_STREAM", "CONFORMANCE_SERVICE",
+    "ClientInterceptor", "ClusterSpec", "ClusterTransport", "Codec",
+    "CompletionQueue", "CreditWindow", "DEADLINE_EXCEEDED",
+    "DeadlineInterceptor", "Delivery", "EXCHANGE_SERVICE",
+    "EndpointSpec", "Event", "FaultInjectionTransport", "FlightReport",
+    "FlowStats", "Frame", "HANDLER_FAULTS", "INCAST_SERVICE",
+    "LINK_FAULT", "LinkSpec", "LoopbackTransport", "Message",
+    "MethodSpec", "MetricsInterceptor", "RING_SERVICE",
+    "ResourceExhausted", "RetryInterceptor", "RpcError", "RpcFabric",
     "SERVER_STREAM", "Server", "ServerContext", "ServerInterceptor",
     "ServerStream", "ServiceDef", "SimulatedTransport", "StreamHandle",
     "Stub", "StubMethod", "Transport", "TransientError", "UNARY",
@@ -74,11 +86,11 @@ __all__ = [
     "cluster_fc_round_time", "cluster_incast_round_time",
     "cluster_ring_round_time", "conformance_handlers", "decode",
     "encode", "fully_connected_exchange", "homogeneous",
-    "incast_exchange", "make_frame", "make_transport", "method_id",
-    "ps_worker_cluster", "ring_exchange", "schedule_rounds", "spec_of",
-    "stream_chunk",
-    "FLAG_ERROR", "FLAG_ONE_WAY", "FLAG_REPLY", "FLAG_SERIALIZED",
-    "FLAG_STREAM", "FLAG_STREAM_END",
+    "incast_exchange", "is_resource_exhausted", "is_transient",
+    "make_frame", "make_transport", "method_id", "ps_worker_cluster",
+    "ring_exchange", "schedule_rounds", "spec_of", "stream_chunk",
+    "FLAG_ERROR", "FLAG_FAULT", "FLAG_ONE_WAY", "FLAG_REPLY",
+    "FLAG_SERIALIZED", "FLAG_STREAM", "FLAG_STREAM_END",
 ]
 
 

@@ -48,11 +48,16 @@ from repro.rpc.transport import (Delivery, Message, Transport,
 
 @dataclass(frozen=True)
 class EndpointSpec:
-    """One named endpoint: its job, base network, advertised window."""
+    """One named endpoint: its job, base network, advertised window,
+    and (optional) advertised admission limit — the outstanding-call
+    cap an ``AdmissionInterceptor`` enforces for this endpoint (calls
+    beyond it are rejected with a transient ``resource exhausted``
+    error clients retry or fail over)."""
     name: str
     job: str = "worker"
     network: str = "eth40g"           # key into core.netmodel.NETWORKS
     window: Optional[WindowConfig] = None
+    admission_limit: Optional[int] = None
 
     def model(self) -> NetworkModel:
         return NETWORKS[self.network]
@@ -86,6 +91,10 @@ class ClusterSpec:
                 raise ValueError(
                     f"endpoint {ep.name!r}: unknown network "
                     f"{ep.network!r}; choose from {sorted(NETWORKS)}")
+            if ep.admission_limit is not None and ep.admission_limit < 1:
+                raise ValueError(
+                    f"endpoint {ep.name!r}: admission_limit must be "
+                    f">= 1, got {ep.admission_limit}")
         pairs = set()
         for ln in self.links:
             for end in (ln.src, ln.dst):
@@ -133,6 +142,15 @@ class ClusterSpec:
             out[ep.job] = out.get(ep.job, ()) + (ep.name,)
         return out
 
+    def admission_limits(self) -> Dict[int, int]:
+        """endpoint index -> advertised admission limit, for every
+        endpoint that declares one — the ``limits`` mapping an
+        ``AdmissionInterceptor`` takes (``serve_cluster`` wires this
+        automatically)."""
+        return {i: ep.admission_limit
+                for i, ep in enumerate(self.endpoints)
+                if ep.admission_limit is not None}
+
     # link resolution --------------------------------------------------
     def base_model(self, endpoint: int) -> NetworkModel:
         return self.endpoints[endpoint].model()
@@ -155,7 +173,9 @@ class ClusterSpec:
                 {"name": ep.name, "job": ep.job, "network": ep.network,
                  **({"window": {"bytes": ep.window.bytes,
                                 "msgs": ep.window.msgs}}
-                    if ep.window is not None else {})}
+                    if ep.window is not None else {}),
+                 **({"admission_limit": ep.admission_limit}
+                    if ep.admission_limit is not None else {})}
                 for ep in self.endpoints],
             "links": [
                 {"src": ln.src, "dst": ln.dst,
@@ -175,7 +195,10 @@ class ClusterSpec:
                 name=e["name"], job=e.get("job", "worker"),
                 network=e.get("network", "eth40g"),
                 window=(WindowConfig(int(w["bytes"]), int(w["msgs"]))
-                        if w is not None else None)))
+                        if w is not None else None),
+                admission_limit=(int(e["admission_limit"])
+                                 if e.get("admission_limit") is not None
+                                 else None)))
         links = tuple(LinkSpec(
             src=ln["src"], dst=ln["dst"],
             bandwidth_Bps=(float(ln["bandwidth_Bps"])

@@ -33,15 +33,23 @@ Interceptors (:mod:`repro.rpc.interceptors`) thread through this loop:
 every call gets a :class:`interceptors.CallContext`; the client chain
 sees submit (``on_start``), every completion-queue event
 (``on_event``), and the terminal event (``on_complete``, which may
-answer ``"retry"`` to resubmit a failed unary call); the server chain
-brackets handler dispatch. Calls carry an optional **deadline**
-(relative seconds at submit, absolute on the context): the flush loop
-cancels expired calls — failing the future/handle with a
-``deadline_exceeded`` event and dropping their window-stalled chunks —
-and when everything is stalled on credits it advances the clock to the
-earliest stalled deadline (the transport's modeled clock, or a real
-sleep) instead of force-admitting, so back-pressure with a deadline
-resolves by cancellation, exactly gRPC's contract.
+answer ``"retry"`` to resubmit a failed unary call — or a server-stream
+call that has delivered zero chunks); the server chain brackets handler
+dispatch (``on_admit``/``on_receive``/``on_done``/``on_shed``). Calls
+carry an optional **deadline** (relative seconds at submit, absolute on
+the context): the flush loop cancels expired calls — failing the
+future/handle with a ``deadline_exceeded`` event and dropping their
+window-stalled chunks — and when everything is stalled on credits it
+advances the clock to the earliest stalled deadline (the transport's
+modeled clock, or a real sleep) instead of force-admitting, so
+back-pressure with a deadline resolves by cancellation, exactly gRPC's
+contract. The deadline also **propagates**: the remaining budget is
+stamped into each request frame's header word at flight departure
+(gRPC's ``grpc-timeout``), and the receiving server sheds
+already-expired work before invoking any handler. Messages a
+``FaultInjectionTransport`` loses to a link fault come back flagged
+``FLAG_FAULT``: their credits are refunded and the call fails with a
+retryable transient error.
 
 Transports with ``dispatches=False`` (the collective transport) are pure
 exchange datapaths: delivery itself completes the call and the reply
@@ -60,8 +68,9 @@ import numpy as np
 from repro.rpc import framing
 from repro.rpc.completion import CompletionQueue, Event
 from repro.rpc.flow import ChunkGate, CreditWindow, WindowConfig
-from repro.rpc.interceptors import (TRANSIENT_PREFIX, CallContext,
-                                    ClientInterceptor, ServerContext,
+from repro.rpc.interceptors import (RESOURCE_EXHAUSTED, TRANSIENT_PREFIX,
+                                    CallContext, ClientInterceptor,
+                                    ResourceExhausted, ServerContext,
                                     ServerInterceptor, TransientError)
 from repro.rpc.transport import Message, Transport
 
@@ -71,6 +80,18 @@ class RpcError(Exception):
 
 
 DEADLINE_EXCEEDED = "deadline exceeded"
+
+#: the client-visible text of an injected link fault (transport-level
+#: fault injection surfaces as a retryable transient error)
+LINK_FAULT = f"{TRANSIENT_PREFIX} link fault injected by transport"
+
+#: The server fault boundary: anything a handler raises becomes an RPC
+#: error reply instead of crashing the flush loop. This is the ONE
+#: deliberate broad catch in the fabric — the CI deprecation gate (and
+#: tests/test_service_api.py) reject inline blanket Exception handlers
+#: inside src/repro/rpc/, so every broad catch must go through this
+#: named, documented boundary.
+HANDLER_FAULTS = (Exception,)
 
 
 def _spec_only(frame: Optional[framing.Frame]) -> Optional[framing.Frame]:
@@ -164,7 +185,14 @@ class Server:
         self._services: Set[str] = set()
         self._streams: Dict[int, List[List[np.ndarray]]] = {}
         self._bidi_seq: Dict[int, int] = {}
+        # streams shed/rejected at their opening chunk: later chunks of
+        # the same call are dropped instead of re-creating state (they
+        # may ride the same flight as the rejected opener)
+        self._dead_streams: Set[int] = set()
         self.calls_served = 0
+        #: calls dropped before their handler ran because the deadline
+        #: budget propagated in the frame header was already spent
+        self.calls_shed = 0
 
     @property
     def interceptors(self) -> List[ServerInterceptor]:
@@ -231,22 +259,31 @@ class Server:
         will never arrive to clean it up)."""
         self._streams.pop(call_id, None)
         self._bidi_seq.pop(call_id, None)
+        self._dead_streams.discard(call_id)
+
+    def _sctx(self, frame: framing.Frame, name: str, kind: str,
+              deadline_s: Optional[float], queue_depth: int
+              ) -> ServerContext:
+        return ServerContext(self.endpoint, frame.call_id, name, kind,
+                             self._clock(), deadline_s=deadline_s,
+                             queue_depth=queue_depth, clock=self._clock)
 
     def _invoke(self, frame: framing.Frame, name: str, kind: str,
-                handler: Callable, args: tuple):
+                handler: Callable, args: tuple, *,
+                deadline_s: Optional[float] = None,
+                queue_depth: int = 0):
         """Run one handler invocation through the server interceptor
         chain: on_receive outer->inner, on_done inner->outer (with the
         fault when the handler raised)."""
         chain = self.interceptors
         if not chain:
             return handler(*args)
-        sctx = ServerContext(self.endpoint, frame.call_id, name, kind,
-                             self._clock())
+        sctx = self._sctx(frame, name, kind, deadline_s, queue_depth)
         for si in chain:
             si.on_receive(sctx)
         try:
             out = handler(*args)
-        except Exception as e:
+        except HANDLER_FAULTS as e:
             for si in reversed(chain):
                 si.on_done(sctx, False, str(e))
             raise
@@ -258,18 +295,83 @@ class Server:
                ) -> List[framing.Frame]:
         self.abort_call(frame.call_id)
         msg = f"{name}: {e}"
+        if isinstance(e, ResourceExhausted) and RESOURCE_EXHAUSTED not in msg:
+            msg = f"{RESOURCE_EXHAUSTED}: {msg}"
         if isinstance(e, TransientError):
             msg = f"{TRANSIENT_PREFIX} {msg}"
         return [_error_reply(frame, msg)]
 
-    def dispatch(self, frame: framing.Frame) -> List[framing.Frame]:
+    def _shed(self, frame: framing.Frame, name: str, kind: str,
+              deadline_s: float, queue_depth: int
+              ) -> List[framing.Frame]:
+        """Deadline propagation, server half: the budget the frame
+        carried in its header is already spent — drop the work before
+        the handler runs (gRPC servers cancel already-expired calls on
+        arrival) and tell the client it was a deadline outcome."""
+        self.calls_shed += 1
+        self.abort_call(frame.call_id)
+        if frame.is_stream and not frame.stream_end:
+            self._dead_streams.add(frame.call_id)
+        chain = self.interceptors
+        if chain:
+            sctx = self._sctx(frame, name, kind, deadline_s, queue_depth)
+            for si in chain:
+                si.on_shed(sctx)
+        if frame.one_way:
+            return []
+        return [_error_reply(
+            frame, f"{name}: {DEADLINE_EXCEEDED} (shed at endpoint "
+                   f"{self.endpoint})")]
+
+    def _admit(self, frame: framing.Frame, name: str, kind: str,
+               deadline_s: Optional[float], queue_depth: int
+               ) -> Optional[List[framing.Frame]]:
+        """Run the chain's admission hooks for a call-opening frame;
+        the first rejection becomes a transient ``resource exhausted``
+        error reply (None = admitted)."""
+        chain = self.interceptors
+        if not chain:
+            return None
+        sctx = self._sctx(frame, name, kind, deadline_s, queue_depth)
+        for si in chain:
+            reason = si.on_admit(sctx)
+            if reason:
+                self.abort_call(frame.call_id)
+                if frame.is_stream and not frame.stream_end:
+                    self._dead_streams.add(frame.call_id)
+                if frame.one_way:
+                    return []
+                return [_error_reply(
+                    frame, f"{TRANSIENT_PREFIX} {name}: {reason}")]
+        return None
+
+    def dispatch(self, frame: framing.Frame, *,
+                 deadline_s: Optional[float] = None,
+                 queue_depth: int = 0) -> List[framing.Frame]:
         """Handle one delivered frame; return the outgoing frames: plain
         replies (no FLAG_STREAM) and/or server->client stream chunks.
-        Empty for one-way calls and non-final client-stream chunks."""
+        Empty for one-way calls and non-final client-stream chunks.
+        ``deadline_s`` is the absolute fabric-clock deadline recovered
+        from the frame's propagated budget; already-expired frames are
+        shed before the handler. ``queue_depth`` is the fabric's load
+        signal for this endpoint (admission control's input)."""
         entry = self._methods.get(frame.method)
         if entry is None:
             return [_error_reply(frame, "unimplemented")]
         name, handler, kind = entry
+        if frame.is_stream and frame.call_id in self._dead_streams:
+            # later chunk of a stream shed/rejected at its opener:
+            # consume it silently (the client already has the error)
+            if frame.stream_end:
+                self._dead_streams.discard(frame.call_id)
+            return []
+        if deadline_s is not None and self._clock() >= deadline_s:
+            return self._shed(frame, name, kind, deadline_s, queue_depth)
+        if not frame.is_stream or frame.seq == 0:
+            rejected = self._admit(frame, name, kind, deadline_s,
+                                   queue_depth)
+            if rejected is not None:
+                return rejected
         is_stream = frame.is_stream
         if is_stream != (kind in (CLIENT_STREAM, BIDI)):
             got = "streaming" if is_stream else "unary"
@@ -282,8 +384,10 @@ class Server:
             end = frame.stream_end
             try:
                 outs = self._invoke(frame, name, kind, handler,
-                                    (frame.bufs or [], end)) or []
-            except Exception as e:  # noqa: BLE001 — fault -> RPC error
+                                    (frame.bufs or [], end),
+                                    deadline_s=deadline_s,
+                                    queue_depth=queue_depth) or []
+            except HANDLER_FAULTS as e:   # handler fault -> RPC error
                 return self._fault(frame, name, e)
             seq0 = self._bidi_seq.get(frame.call_id, 0)
             frames = _chunk_frames(frame, list(outs), seq0=seq0,
@@ -309,8 +413,10 @@ class Server:
             # return lazy generators whose errors surface mid-iteration
             handler = (lambda req, _h=handler: list(_h(req) or []))
         try:
-            reply = self._invoke(frame, name, kind, handler, (request,))
-        except Exception as e:  # noqa: BLE001 — handler fault -> RPC error
+            reply = self._invoke(frame, name, kind, handler, (request,),
+                                 deadline_s=deadline_s,
+                                 queue_depth=queue_depth)
+        except HANDLER_FAULTS as e:       # handler fault -> RPC error
             return self._fault(frame, name, e)
         self.calls_served += 1
 
@@ -448,13 +554,17 @@ class Channel:
                       sizes: Optional[Sequence[int]] = None,
                       deadline_s: Optional[float] = None
                       ) -> ServerStream:
-        """Server-streaming call: one request frame, chunked response."""
+        """Server-streaming call: one request frame, chunked response.
+        The request frame is retained on the call context, so a
+        RetryInterceptor can transparently re-issue it while zero
+        response chunks have been delivered."""
         cid = self.fabric.next_call_id()
-        handle = ServerStream(self, cid, method)
-        self.fabric.register_handle(handle, kind=SERVER_STREAM,
-                                    deadline_s=deadline_s)
         frame = framing.make_frame(cid, method, bufs, sizes=sizes,
                                    serialized=self.serialized)
+        handle = ServerStream(self, cid, method)
+        self.fabric.register_handle(handle, kind=SERVER_STREAM,
+                                    deadline_s=deadline_s,
+                                    request=frame)
         self.fabric.submit_raw(self, frame)
         return handle
 
@@ -628,10 +738,18 @@ class RpcFabric:
 
     def register_handle(self, handle: StreamHandle, *,
                         kind: str = SERVER_STREAM,
-                        deadline_s: Optional[float] = None) -> None:
+                        deadline_s: Optional[float] = None,
+                        request: Optional[framing.Frame] = None) -> None:
         self._handles[handle.call_id] = handle
         self._start_ctx(handle.call_id, handle.method, kind,
-                        handle.channel, deadline_s=deadline_s)
+                        handle.channel, deadline_s=deadline_s,
+                        request=request)
+
+    def context(self, call_id: int) -> Optional[CallContext]:
+        """The live CallContext of an in-flight call (None once it
+        completes). Dispatch layers above the fabric (ShardedServeStub)
+        use it to attach routing metadata their interceptors read."""
+        return self._ctx.get(call_id)
 
     # interceptor plumbing ---------------------------------------------
     def _start_ctx(self, call_id: int, method: str, kind: str,
@@ -676,19 +794,36 @@ class RpcFabric:
         return False
 
     def _resubmit(self, ctx: CallContext) -> None:
-        """Re-issue a failed unary call under a fresh call_id; the
-        caller's Call future stays open across attempts."""
+        """Re-issue a failed unary or server-stream call under a fresh
+        call_id; the caller's Call future / stream handle stays open
+        across attempts. An interceptor-requested backoff
+        (``ctx.meta["retry_backoff_s"]``) is paid on the fabric clock
+        first — the call's original deadline keeps running through it,
+        so a retry can still be cancelled by the budget it inherited."""
         old_id = ctx.call_id
         call = self._calls.pop(old_id, None)
+        handle = self._handles.pop(old_id, None)
         self._ctx.pop(old_id, None)
+        backoff = float(ctx.meta.pop("retry_backoff_s", 0.0) or 0.0)
+        if backoff > 0.0:
+            if self.transport.modeled \
+                    and hasattr(self.transport, "clock_s"):
+                self.transport.clock_s += backoff
+            else:
+                time.sleep(backoff)
         new_id = self.next_call_id()
         frame = replace(ctx.request, call_id=new_id)
         ctx.call_id, ctx.attempts = new_id, ctx.attempts + 1
         ctx.request = frame
+        ctx.dst = ctx.channel.dst     # failover may have rerouted
         self._ctx[new_id] = ctx
         if call is not None:
-            call.call_id = new_id
+            call.call_id, call.dst = new_id, ctx.channel.dst
             self._calls[new_id] = call
+        if handle is not None:
+            handle.call_id = new_id
+            handle.channel = ctx.channel
+            self._handles[new_id] = handle
         self._emit(Event(new_id, "retry"))
         self.submit_raw(ctx.channel, frame)
 
@@ -715,7 +850,6 @@ class RpcFabric:
     def _finish_handle(self, handle: StreamHandle,
                        error: Optional[str] = None,
                        kind: Optional[str] = None) -> None:
-        handle.done, handle.error = True, error
         ev = Event(handle.call_id,
                    kind or ("error" if error else "stream_end"),
                    ok=error is None)
@@ -723,7 +857,11 @@ class RpcFabric:
         if ctx is not None:
             ctx.end_s = self.now()
             ctx.meta["error"] = error
-            self._client_complete(ctx, ev)   # streams never retry
+            # a server-stream that failed before any chunk arrived may
+            # be transparently re-issued by a RetryInterceptor
+            if self._client_complete(ctx, ev):
+                return                  # retried; the handle stays open
+        handle.done, handle.error = True, error
         self._emit(ev)
         self._handles.pop(handle.call_id, None)
         self._ctx.pop(handle.call_id, None)
@@ -757,6 +895,9 @@ class RpcFabric:
             handle.chunks.append(m.frame.bufs
                                  if m.frame.bufs is not None
                                  else list(m.frame.sizes))
+            ctx = self._ctx.get(m.frame.call_id)
+            if ctx is not None:
+                ctx.chunks += 1     # delivered: a retry would duplicate
             self._emit(Event(m.frame.call_id, "stream_chunk",
                              payload=_spec_only(m.frame)))
         if m.frame.stream_end:
@@ -766,6 +907,21 @@ class RpcFabric:
     def _have_deadlines(self) -> bool:
         return any(c.deadline_s is not None for c in self._ctx.values())
 
+    def _stamp_budget(self, msg: Message, now: float) -> Message:
+        """Deadline propagation (gRPC's ``grpc-timeout``): stamp the
+        remaining budget into a request frame's header word at flight
+        departure, so the receiving server can shed work whose budget
+        the wire consumed before the handler ever runs."""
+        f = msg.frame
+        if f.is_reply:
+            return msg
+        ctx = self._ctx.get(f.call_id)
+        if ctx is None or ctx.deadline_s is None:
+            return msg
+        budget = max(1, min(framing.MAX_BUDGET_US,
+                            int((ctx.deadline_s - now) * 1e6)))
+        return replace(msg, frame=replace(f, budget_us=budget))
+
     def _cancel_expired(self) -> int:
         now = self.now()
         expired = [c for c in self._ctx.values()
@@ -774,15 +930,13 @@ class RpcFabric:
             self._cancel(ctx, DEADLINE_EXCEEDED)
         return len(expired)
 
-    def _cancel(self, ctx: CallContext, reason: str) -> None:
-        """Cancel one call: purge its frames — backlogged, gated, AND
-        already admitted to the next flight (refunding the admitted
-        frames' window credits) — drop the server's partial-stream
-        state, and fail the future/handle with a ``deadline_exceeded``
-        event. Dropping pending frames matters: a chunk delivered
-        after the cancel would silently re-create the server-side
-        stream state that no END will ever clean up."""
-        cid = ctx.call_id
+    def _purge_call(self, cid: int) -> None:
+        """Drop every in-flight frame of one call — backlogged, gated,
+        AND already admitted to the next flight (refunding the admitted
+        frames' window credits) — and the servers' partial-stream
+        state. Dropping pending frames matters: a chunk delivered
+        after a cancel would silently re-create the server-side stream
+        state that no END will ever clean up."""
         kept: List[Tuple[Channel, Message]] = []
         for ch_, msg in self._backlog:
             if msg.frame.call_id == cid:
@@ -803,14 +957,49 @@ class RpcFabric:
             ch_.rx_gate.drop(lambda m: m.frame.call_id == cid)
         for srv in self.servers.values():
             srv.abort_call(cid)     # partial streams never get their END
+
+    def _cancel(self, ctx: CallContext, reason: str,
+                kind: str = "deadline_exceeded") -> None:
+        """Cancel one call: purge its frames and server state, then
+        fail the future/handle with a ``kind`` event (deadline expiry,
+        or ``"error"`` for an injected link fault — in which case the
+        completion may be consumed as a retry and the call lives on
+        under a fresh call_id)."""
+        cid = ctx.call_id
+        self._purge_call(cid)
         call = self._calls.get(cid)
         if call is not None and not call.done:
-            self._complete(call, None, "deadline_exceeded", error=reason)
+            self._complete(call, None, kind, error=reason)
         handle = self._handles.get(cid)
         if handle is not None and not handle.done:
-            self._finish_handle(handle, error=reason,
-                                kind="deadline_exceeded")
+            self._finish_handle(handle, error=reason, kind=kind)
         self._ctx.pop(cid, None)
+
+    def _refund_message(self, m: Message) -> None:
+        """Return the credits one undeliverable main-flight message
+        held: reverse-window credits for a server->client stream
+        chunk, forward-window credits for a client->server frame. The
+        ONE refund path for faulted messages and their same-flight
+        stragglers — the credit invariant the fault tier asserts."""
+        if m.frame.is_reply:
+            ch = self._channels.get((m.dst, m.src, m.frame.serialized))
+            if ch is not None:
+                ch.rx_gate.grant(m.frame.total_bytes)
+        else:
+            self._grant(m)
+
+    def _on_link_fault(self, m: Message) -> List[int]:
+        """A FaultInjectionTransport flagged this main-flight message
+        lost to a transient link fault: refund the credits it held,
+        purge the call's other in-flight frames, and fail it with a
+        retryable error. Returns the dead call_id so same-flight
+        stragglers of the call can be consumed without dispatching."""
+        cid = m.frame.call_id
+        self._refund_message(m)
+        ctx = self._ctx.get(cid)
+        if ctx is not None:
+            self._cancel(ctx, LINK_FAULT, kind="error")
+        return [cid]
 
     def _deadline_wait(self) -> bool:
         """Everything is stalled on credits and nothing is in flight.
@@ -860,13 +1049,28 @@ class RpcFabric:
                     assert admitted, "flow-control deadlock"
             flight = self._pending
             self._pending = []
-            delivery = self.transport.deliver([m for _, m in flight])
+            t_send = self.now()     # flight departure: budgets stamped
+            delivery = self.transport.deliver(
+                [self._stamp_budget(m, t_send) for _, m in flight])
             rep.flights += 1
             rep.rounds += delivery.rounds
             rep.messages += len(delivery.messages)
             rep.elapsed_s += delivery.elapsed_s
             replies: List[Message] = []
+            dead: Set[int] = set()      # calls killed by a link fault
+            # per-dst call_ids landed this flight: the queue-depth unit
+            # is CALLS (a stream's chunks are one call's arrivals)
+            arrivals: Dict[int, Set[int]] = {}
             for m in delivery.messages:
+                if m.frame.flags & framing.FLAG_FAULT:
+                    dead.update(self._on_link_fault(m))
+                    continue
+                if m.frame.call_id in dead:
+                    # a straggler of a call a link fault already killed
+                    # this flight: consume it, refund its credits, and
+                    # never let it re-create server-side stream state
+                    self._refund_message(m)
+                    continue
                 if m.frame.is_reply:
                     # server->client stream chunk riding a main flight
                     self._on_client_chunk(m)
@@ -894,7 +1098,21 @@ class RpcFabric:
                     if handle is not None and not handle.done:
                         self._finish_handle(handle, error=err)
                     continue
-                outs = srv.dispatch(m.frame)
+                # the server's view of the propagated deadline: the
+                # budget the frame left with, minus what the wire ate
+                deadline = (t_send + m.frame.budget_us / 1e6
+                            if m.frame.budget_us else None)
+                cid = m.frame.call_id
+                landed = arrivals.setdefault(m.dst, set())
+                landed.add(cid)
+                # queue depth = calls landed on this endpoint so far
+                # this flight (including this one) + partial streams
+                # still open from EARLIER flights
+                depth = len(landed) \
+                    + sum(1 for k in srv._streams if k not in landed) \
+                    + sum(1 for k in srv._bidi_seq if k not in landed)
+                outs = srv.dispatch(m.frame, deadline_s=deadline,
+                                    queue_depth=depth)
                 self._emit(Event(m.frame.call_id, "received",
                                  payload=_spec_only(m.frame)))
                 plain = [o for o in outs if not o.is_stream]
@@ -929,28 +1147,49 @@ class RpcFabric:
                 rep.replies += len(rdel.messages)
                 rep.elapsed_s += rdel.elapsed_s
                 for m in rdel.messages:
-                    # grant the REQUEST's credits (reply size differs)
+                    # grant the REQUEST's credits (reply size differs);
+                    # even for a LOST reply — the server consumed the
+                    # request regardless
                     reqs = self._awaiting_grant.get(m.frame.call_id)
                     if reqs:
                         self._grant(reqs.pop(0))
                         if not reqs:
                             del self._awaiting_grant[m.frame.call_id]
+                    if m.frame.flags & framing.FLAG_FAULT:
+                        # the reply was lost to an injected link fault:
+                        # the call fails transiently (a retry re-runs
+                        # the handler — at-least-once, like gRPC)
+                        ctx = self._ctx.get(m.frame.call_id)
+                        if ctx is not None:
+                            self._cancel(ctx, LINK_FAULT, kind="error")
+                        continue
                     is_err = bool(m.frame.flags & framing.FLAG_ERROR)
                     err = None
                     if is_err:
                         err = bytes(m.frame.bufs[0]).decode(
                             errors="replace") if m.frame.bufs else "error"
+                        # a rejected/shed stream call's remaining chunks
+                        # are already doomed: purge them so they cannot
+                        # re-create server-side state no END cleans up
+                        self._purge_call(m.frame.call_id)
+                    # server-shed work is a deadline outcome, not a
+                    # generic error — metrics must count it as such
+                    err_kind = ("deadline_exceeded"
+                                if err and DEADLINE_EXCEEDED in err
+                                else "error")
                     handle = self._handles.get(m.frame.call_id)
                     if handle is not None and not handle.done:
                         # stream request answered with a plain (error)
                         # reply — fail the handle
-                        self._finish_handle(handle,
-                                            error=err or "protocol error")
+                        self._finish_handle(
+                            handle, error=err or "protocol error",
+                            kind=err_kind if is_err else None)
                     call = self._calls.get(m.frame.call_id)
                     if call is None or call.done:
                         continue
                     if is_err:
-                        self._complete(call, m.frame, "error", error=err)
+                        self._complete(call, m.frame, err_kind,
+                                       error=err)
                     else:
                         self._complete(call, m.frame, "replied")
             self._admit_backlog()

@@ -16,7 +16,14 @@ paper's payload modes:
 Header layout (uint32 words, little-endian), zero-padded to a multiple
 of the 128-byte TPU lane so it can itself be a pack-kernel buffer:
 
-  [MAGIC, call_id, method_id, flags, seq, n_buffers, size_0 .. size_{n-1}]
+  [MAGIC, call_id, method_id, flags, seq, budget_us, n_buffers,
+   size_0 .. size_{n-1}]
+
+``budget_us`` is the call's remaining deadline budget in microseconds
+at the moment the frame left the sender — the wire form of gRPC's
+``grpc-timeout`` header (0 = no deadline). The fabric stamps it at
+flight departure and the receiving server sheds frames whose budget the
+wire already consumed, before invoking any handler.
 
 ``seq`` orders the chunks of one stream (0 for unary frames). Stream
 *chunks* (``stream_chunk``) carry FLAG_STREAM and a running seq; the
@@ -53,6 +60,14 @@ FLAG_STREAM_END = 4
 FLAG_REPLY = 8
 FLAG_ERROR = 16
 FLAG_ONE_WAY = 32
+#: set by a FaultInjectionTransport on a message it "lost" to a
+#: transient link fault: the fabric refunds the frame's credits and
+#: fails the call with a retryable error instead of dispatching it
+FLAG_FAULT = 64
+
+#: budget_us is a uint32 header word; longer deadlines saturate (them
+#: expiring mid-flight is indistinguishable from no deadline anyway)
+MAX_BUDGET_US = 0xFFFFFFFF
 
 _WORD = 4
 
@@ -74,8 +89,10 @@ class Frame:
     sizes: Tuple[int, ...]           # true (unpadded) iovec byte counts
     bufs: Optional[List[np.ndarray]] = None   # uint8, len == len(sizes)
     seq: int = 0                     # chunk index within a stream
+    budget_us: int = 0               # remaining deadline budget (0=none)
 
     def __post_init__(self):
+        assert 0 <= self.budget_us <= MAX_BUDGET_US, self.budget_us
         if self.bufs is not None:
             assert len(self.bufs) == len(self.sizes)
             for b, s in zip(self.bufs, self.sizes):
@@ -145,7 +162,8 @@ def make_frame(call_id: int, method: str, bufs: Optional[List[np.ndarray]],
                *, sizes: Optional[Sequence[int]] = None,
                serialized: bool = False, one_way: bool = False,
                stream: bool = False, stream_end: bool = False,
-               reply: bool = False, seq: int = 0) -> Frame:
+               reply: bool = False, seq: int = 0,
+               budget_us: int = 0) -> Frame:
     if sizes is None:
         assert bufs is not None, "spec-only frames need explicit sizes"
         sizes = [int(b.size) for b in bufs]
@@ -159,7 +177,7 @@ def make_frame(call_id: int, method: str, bufs: Optional[List[np.ndarray]],
              | (FLAG_REPLY if reply else 0))
     return Frame(call_id, method_id(method), flags, tuple(int(s)
                                                           for s in sizes),
-                 bufs, seq=seq)
+                 bufs, seq=seq, budget_us=budget_us)
 
 
 def stream_chunk(call_id: int, method: str,
@@ -181,13 +199,14 @@ def stream_chunk(call_id: int, method: str,
 # header
 # ---------------------------------------------------------------------------
 
-_FIXED_WORDS = 6          # MAGIC, call_id, method, flags, seq, n_buffers
+# MAGIC, call_id, method, flags, seq, budget_us, n_buffers
+_FIXED_WORDS = 7
 
 
 def header_bytes(frame: Frame) -> np.ndarray:
     """Little-endian uint32 header, zero-padded to a LANE multiple."""
     words = [MAGIC, frame.call_id, frame.method, frame.flags, frame.seq,
-             frame.n_buffers, *frame.sizes]
+             frame.budget_us, frame.n_buffers, *frame.sizes]
     raw = np.asarray(words, dtype="<u4").view(np.uint8)
     out = np.zeros(_pad128(raw.size), dtype=np.uint8)
     out[:raw.size] = raw
@@ -198,13 +217,14 @@ def parse_header(data: np.ndarray) -> Tuple[Frame, int]:
     """Parse a header prefix -> (spec-only Frame, header length in bytes)."""
     head = np.ascontiguousarray(data[:LANE]).view("<u4")
     assert int(head[0]) == MAGIC, f"bad frame magic {int(head[0]):#x}"
-    call_id, method, flags, seq, n = (int(head[1]), int(head[2]),
-                                      int(head[3]), int(head[4]),
-                                      int(head[5]))
+    call_id, method, flags, seq, budget_us, n = (
+        int(head[1]), int(head[2]), int(head[3]), int(head[4]),
+        int(head[5]), int(head[6]))
     hdr_len = _pad128((_FIXED_WORDS + n) * _WORD)
     words = np.ascontiguousarray(data[:hdr_len]).view("<u4")
     sizes = tuple(int(s) for s in words[_FIXED_WORDS:_FIXED_WORDS + n])
-    return Frame(call_id, method, flags, sizes, None, seq=seq), hdr_len
+    return Frame(call_id, method, flags, sizes, None, seq=seq,
+                 budget_us=budget_us), hdr_len
 
 
 # ---------------------------------------------------------------------------

@@ -14,25 +14,44 @@ failure — interceptors outer to it never see the failed attempt, only
 the final outcome.
 
 A *server* interceptor brackets handler dispatch on every endpoint the
-fabric creates after it is installed: ``on_receive`` before the handler
-runs (outer->inner), ``on_done`` after (inner->outer), with the fault
-carried when the handler raised.
+fabric creates after it is installed: ``on_admit`` when a call opens
+(outer->inner; the first hook to answer with an error string rejects
+the call with a transient ``resource exhausted`` reply before the
+handler ever runs), ``on_receive`` before the handler runs
+(outer->inner), ``on_done`` after (inner->outer, with the fault carried
+when the handler raised), and ``on_shed`` when the server drops a call
+whose propagated deadline budget the wire already consumed.
 
-Three stock interceptors cover the bookkeeping the paper's §2.2 calls
+The stock interceptors cover the bookkeeping the paper's §2.2 calls
 out as part of the RPC interface layer itself:
 
-  MetricsInterceptor   per-method call counts + latency percentiles
-                       (and stream chunk counts), measured on the
-                       fabric clock — wall time for measured
-                       transports, the transport's modeled clock for
-                       simulated ones.
-  DeadlineInterceptor  applies a default deadline to calls that set
-                       none and counts ``deadline_exceeded`` events;
-                       the fabric enforces deadlines (cancelling
-                       stalled calls and dropping their gated chunks).
-  RetryInterceptor     resubmits unary calls that failed with a
-                       transient error (``TransientError`` on the
-                       server, or "no server at endpoint").
+  MetricsInterceptor    per-method call counts + latency percentiles
+                        (and stream chunk counts), measured on the
+                        fabric clock — wall time for measured
+                        transports, the transport's modeled clock for
+                        simulated ones. Server-side it additionally
+                        tracks the per-endpoint queue depth the fabric
+                        computed for each flight — the load signal
+                        admission control feeds on — plus shed and
+                        admission-rejection counts.
+  DeadlineInterceptor   applies a default deadline to calls that set
+                        none and counts ``deadline_exceeded`` events;
+                        the fabric enforces deadlines (cancelling
+                        stalled calls and dropping their gated chunks)
+                        and propagates the remaining budget to servers
+                        in the frame header.
+  RetryInterceptor      resubmits calls that failed with a transient
+                        error (``TransientError`` on the server, "no
+                        server at endpoint", an injected link fault, or
+                        an admission rejection): unary calls, and —
+                        transparently — server-stream calls iff zero
+                        response chunks were delivered. Retries are
+                        budget-aware: the original deadline keeps
+                        running and a retry that cannot fit in the
+                        remaining budget is never attempted.
+  AdmissionInterceptor  server-side admission control: rejects a call
+                        with ``ResourceExhausted`` when its endpoint is
+                        over the configured outstanding-call limit.
 """
 from __future__ import annotations
 
@@ -51,7 +70,15 @@ class TransientError(Exception):
     the call."""
 
 
+class ResourceExhausted(TransientError):
+    """The server refused the call because the endpoint is over its
+    admission limit (gRPC's RESOURCE_EXHAUSTED). Transient by
+    construction: retrying — ideally on another shard, which is what
+    ``ShardedServeStub``'s failover does — is the correct response."""
+
+
 TRANSIENT_PREFIX = "TRANSIENT:"
+RESOURCE_EXHAUSTED = "resource exhausted"
 
 
 @dataclass
@@ -66,7 +93,8 @@ class CallContext:
     deadline_s: Optional[float] = None   # absolute fabric-clock time
     end_s: Optional[float] = None
     attempts: int = 1
-    # retained for retries (unary only; the bufs are caller-owned)
+    chunks: int = 0                # response stream chunks delivered
+    # retained for retries (unary + server-stream; bufs caller-owned)
     request: Optional[framing.Frame] = None
     meta: Dict[str, Any] = field(default_factory=dict)
 
@@ -79,7 +107,25 @@ class ServerContext:
     method: str
     kind: str
     start_s: float
+    #: absolute fabric-clock deadline recovered from the frame's
+    #: propagated budget (None when the call carried no deadline)
+    deadline_s: Optional[float] = None
+    #: the fabric's load signal for this dispatch: request frames that
+    #: landed on this endpoint so far in the current flight (including
+    #: this one) plus the server's open partial streams
+    queue_depth: int = 0
+    clock: Optional[Callable[[], float]] = None
     meta: Dict[str, Any] = field(default_factory=dict)
+
+    def time_remaining(self) -> Optional[float]:
+        """Remaining propagated deadline budget in seconds on the
+        fabric clock (None without a deadline, 0.0 once expired) — the
+        gRPC ``context.time_remaining()`` analogue handlers and server
+        interceptors shed doomed work against."""
+        if self.deadline_s is None:
+            return None
+        now = self.clock() if self.clock is not None else self.start_s
+        return max(0.0, self.deadline_s - now)
 
 
 class ClientInterceptor:
@@ -97,6 +143,13 @@ class ClientInterceptor:
 
 
 class ServerInterceptor:
+    def on_admit(self, ctx: ServerContext) -> Optional[str]:
+        """Admission hook, run outer->inner when a call OPENS at the
+        server (unary frames and the first chunk of a stream), before
+        the handler. Return an error string to reject the call with a
+        transient ``resource exhausted`` reply; None admits."""
+        return None
+
     def on_receive(self, ctx: ServerContext) -> None:
         pass
 
@@ -104,15 +157,28 @@ class ServerInterceptor:
                 error: Optional[str] = None) -> None:
         pass
 
+    def on_shed(self, ctx: ServerContext) -> None:
+        """The server dropped this call before the handler ran: its
+        propagated deadline budget was already spent on the wire."""
+
 
 def is_transient(error: Optional[str]) -> bool:
     """Transient = a server fault raised as TransientError (the reply
-    text is prefixed ``TRANSIENT:`` by the fabric's fault path) or a
-    not-yet-registered endpoint. Matched at the start only, so a
-    permanent error that merely *quotes* a transient one is not
-    retried."""
+    text is prefixed ``TRANSIENT:`` by the fabric's fault path), a
+    not-yet-registered endpoint, or an injected link fault. Matched at
+    the start only, so a permanent error that merely *quotes* a
+    transient one is not retried."""
     return bool(error) and (error.startswith(TRANSIENT_PREFIX)
                             or error.startswith("no server at endpoint"))
+
+
+def is_resource_exhausted(error: Optional[str]) -> bool:
+    """An admission-control rejection (or a handler-raised
+    ``ResourceExhausted``): transient, but retrying the SAME endpoint
+    is pointless until load drains — the signal ``ShardedServeStub``
+    fails over to another PS shard on."""
+    return bool(error) and error.startswith(TRANSIENT_PREFIX) \
+        and RESOURCE_EXHAUSTED in error
 
 
 # ---------------------------------------------------------------------------
@@ -139,11 +205,16 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         self.per_endpoint = per_endpoint
         self._ep_name = endpoint_name or str
         self._recs: Dict[str, Dict[str, Any]] = {}
+        # per-endpoint queue depth, refreshed by on_admit each dispatch
+        # — the load signal an AdmissionInterceptor installed INNER to
+        # this one feeds on
+        self._depth: Dict[int, int] = {}
 
     def _rec(self, method: str) -> Dict[str, Any]:
         return self._recs.setdefault(method, {
             "calls": 0, "ok": 0, "errors": 0, "deadline_exceeded": 0,
-            "retries": 0, "chunks": 0, "latencies_s": []})
+            "retries": 0, "chunks": 0, "shed": 0, "rejected": 0,
+            "latencies_s": []})
 
     def _client_keys(self, ctx: CallContext) -> List[str]:
         keys = [ctx.method]
@@ -157,6 +228,7 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         after warmup so compile/warmup calls don't pollute the
         published percentiles)."""
         self._recs.clear()
+        self._depth.clear()
 
     # client side --------------------------------------------------------
     def on_start(self, ctx: CallContext) -> None:
@@ -192,6 +264,28 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
             keys.append(f"server:{ctx.method}"
                         f"@{self._ep_name(ctx.endpoint)}")
         return keys
+
+    def on_admit(self, ctx: ServerContext) -> Optional[str]:
+        self._depth[ctx.endpoint] = ctx.queue_depth
+        for k in self._server_keys(ctx):
+            rec = self._rec(k)
+            rec["queue_peak"] = max(rec.get("queue_peak", 0),
+                                    ctx.queue_depth)
+        return None
+
+    def server_queue_depth(self, endpoint: int) -> int:
+        """The endpoint's load at its most recent dispatch (request
+        frames landed this flight + open partial streams) — what an
+        AdmissionInterceptor installed inner to this one reads."""
+        return self._depth.get(endpoint, 0)
+
+    def record_rejection(self, ctx: ServerContext) -> None:
+        for k in self._server_keys(ctx):
+            self._rec(k)["rejected"] += 1
+
+    def on_shed(self, ctx: ServerContext) -> None:
+        for k in self._server_keys(ctx):
+            self._rec(k)["shed"] += 1
 
     def on_receive(self, ctx: ServerContext) -> None:
         for k in self._server_keys(ctx):
@@ -244,30 +338,102 @@ class DeadlineInterceptor(ClientInterceptor):
 
 
 class RetryInterceptor(ClientInterceptor):
-    """Retries unary calls that failed transiently, up to
-    ``max_attempts`` total attempts. The retry consumes the failure:
-    interceptors outer to this one see only the final outcome."""
+    """Retries calls that failed transiently, up to ``max_attempts``
+    total attempts: unary calls, and — transparently — server-stream
+    calls iff ZERO response chunks have been delivered (re-issuing the
+    request frame then cannot duplicate anything the caller observed).
+    The retry consumes the failure: interceptors outer to this one see
+    only the final outcome.
+
+    Retries respect the call's ORIGINAL deadline — the budget keeps
+    running across attempts, never resets — and back off
+    ``backoff_s * backoff_multiplier**(attempt-1)`` seconds on the
+    fabric clock between attempts. A retry whose backoff alone would
+    outlive the remaining budget is not attempted at all
+    (``gave_up_budget`` counts those)."""
 
     def __init__(self, max_attempts: int = 3,
-                 retry_on: Callable[[Optional[str]], bool] = is_transient):
+                 retry_on: Callable[[Optional[str]], bool] = is_transient,
+                 *, backoff_s: float = 0.0,
+                 backoff_multiplier: float = 2.0):
         assert max_attempts >= 1
+        assert backoff_s >= 0.0 and backoff_multiplier >= 1.0
         self.max_attempts = max_attempts
         self.retry_on = retry_on
+        self.backoff_s = backoff_s
+        self.backoff_multiplier = backoff_multiplier
         self.retries = 0
+        self.gave_up_budget = 0
 
     def on_complete(self, ctx: CallContext, event: Event
                     ) -> Optional[str]:
-        if (event.kind == "error" and ctx.request is not None
-                and ctx.attempts < self.max_attempts
-                and self.retry_on(ctx.meta.get("error"))):
-            self.retries += 1
-            return "retry"
-        return None
+        if event.kind != "error" or ctx.request is None:
+            return None
+        if ctx.kind == "server_stream" and ctx.chunks > 0:
+            return None        # mid-stream: a re-issue would duplicate
+        if ctx.attempts >= self.max_attempts \
+                or not self.retry_on(ctx.meta.get("error")):
+            return None
+        delay = self.backoff_s \
+            * self.backoff_multiplier ** (ctx.attempts - 1)
+        if ctx.deadline_s is not None:
+            now = ctx.end_s if ctx.end_s is not None else ctx.start_s
+            if now + delay >= ctx.deadline_s:
+                self.gave_up_budget += 1
+                return None    # doomed: cannot finish inside the budget
+        if delay > 0.0:
+            ctx.meta["retry_backoff_s"] = delay
+        self.retries += 1
+        return "retry"
+
+
+class AdmissionInterceptor(ServerInterceptor):
+    """Server-side admission control: reject a call when its endpoint
+    is over its outstanding-call limit, with a transient
+    ``resource exhausted`` error — clients retry it (later flights see
+    a drained queue) or, through ``ShardedServeStub``'s failover, move
+    it to another PS shard.
+
+    The load signal is fed by a server-side :class:`MetricsInterceptor`
+    installed OUTER to this one (its ``on_admit`` records the queue
+    depth the fabric computed before this hook runs); without one the
+    interceptor reads the context's own ``queue_depth`` directly.
+    ``limit`` is the default per-endpoint cap; ``limits`` overrides it
+    per endpoint index (e.g. a ClusterSpec endpoint's advertised
+    ``admission_limit``). ``None`` means unlimited."""
+
+    def __init__(self, limit: Optional[int] = None, *,
+                 metrics: Optional[MetricsInterceptor] = None,
+                 limits: Optional[Dict[int, int]] = None):
+        assert limit is None or limit >= 1, limit
+        assert all(v >= 1 for v in (limits or {}).values()), limits
+        self.limit = limit
+        self.metrics = metrics
+        self.limits = dict(limits or {})
+        self.rejected = 0
+
+    def limit_for(self, endpoint: int) -> Optional[int]:
+        return self.limits.get(endpoint, self.limit)
+
+    def on_admit(self, ctx: ServerContext) -> Optional[str]:
+        limit = self.limit_for(ctx.endpoint)
+        if limit is None:
+            return None
+        depth = (self.metrics.server_queue_depth(ctx.endpoint)
+                 if self.metrics is not None else ctx.queue_depth)
+        if depth <= limit:
+            return None
+        self.rejected += 1
+        if self.metrics is not None:
+            self.metrics.record_rejection(ctx)
+        return (f"{RESOURCE_EXHAUSTED}: endpoint {ctx.endpoint} over "
+                f"admission limit ({depth} > {limit})")
 
 
 __all__ = [
-    "CallContext", "ClientInterceptor", "DeadlineInterceptor",
-    "MetricsInterceptor", "RetryInterceptor", "ServerContext",
+    "AdmissionInterceptor", "CallContext", "ClientInterceptor",
+    "DeadlineInterceptor", "MetricsInterceptor", "ResourceExhausted",
+    "RetryInterceptor", "RESOURCE_EXHAUSTED", "ServerContext",
     "ServerInterceptor", "TransientError", "TRANSIENT_PREFIX",
-    "is_transient",
+    "is_resource_exhausted", "is_transient",
 ]

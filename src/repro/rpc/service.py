@@ -54,17 +54,27 @@ class Codec:
 
 @dataclass(frozen=True)
 class MethodSpec:
-    """One method of a service: name, cardinality kind, codecs."""
+    """One method of a service: name, cardinality kind, codecs, and an
+    optional default deadline (relative seconds) the stub applies to
+    invocations that pass none — the declarative twin of a
+    ``DeadlineInterceptor`` default, scoped to one method. The budget
+    is propagated to the server in the frame header like any
+    deadline."""
     name: str
     kind: str = UNARY
     request_codec: Optional[Codec] = None
     response_codec: Optional[Codec] = None
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(
                 f"method {self.name!r}: unknown kind {self.kind!r}; "
                 f"choose from {KINDS}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"method {self.name!r}: deadline_s must be > 0, got "
+                f"{self.deadline_s}")
 
 
 @dataclass(frozen=True)
@@ -163,6 +173,12 @@ class StubMethod:
             return self.spec.request_codec.encode(request)
         return list(request)
 
+    def _deadline(self, deadline_s: Optional[float]) -> Optional[float]:
+        """A per-call deadline wins; otherwise the method's declared
+        default (None = no deadline)."""
+        return deadline_s if deadline_s is not None \
+            else self.spec.deadline_s
+
     # per-kind invokers --------------------------------------------------
     def unary(self, request: Any = None, *,
               sizes: Optional[Sequence[int]] = None,
@@ -171,7 +187,7 @@ class StubMethod:
         self._require(UNARY)
         call = self._channel.call(self.full_name, self._encode(request),
                                   sizes=sizes, one_way=one_way,
-                                  deadline_s=deadline_s)
+                                  deadline_s=self._deadline(deadline_s))
         return UnaryCall(call, self._channel, self.spec)
 
     def client_stream(self, chunks: Any = None, *,
@@ -187,7 +203,7 @@ class StubMethod:
                if chunks is not None else [])
         call = self._channel.stream(self.full_name, enc, sizes=sizes,
                                     n_chunks=n_chunks, one_way=one_way,
-                                    deadline_s=deadline_s)
+                                    deadline_s=self._deadline(deadline_s))
         return UnaryCall(call, self._channel, self.spec)
 
     def server_stream(self, request: Any = None, *,
@@ -196,15 +212,15 @@ class StubMethod:
         self._require(SERVER_STREAM)
         return self._channel.server_stream(
             self.full_name, self._encode(request), sizes=sizes,
-            deadline_s=deadline_s)
+            deadline_s=self._deadline(deadline_s))
 
     def bidi(self, chunks: Any = None, *,
              deadline_s: Optional[float] = None) -> BidiStream:
         self._require(BIDI)
         enc = ([self._encode(c) for c in chunks]
                if chunks is not None else None)
-        return self._channel.bidi_stream(self.full_name, enc,
-                                         deadline_s=deadline_s)
+        return self._channel.bidi_stream(
+            self.full_name, enc, deadline_s=self._deadline(deadline_s))
 
 
 class Stub:

@@ -3,16 +3,24 @@
 A transport moves one *flight* of point-to-point messages and reports
 how long the flight took:
 
-  LoopbackTransport   — single-host shared-buffer memcpy; wall-clock
-                        measured. The serving-experiment path.
-  SimulatedTransport  — no data moves; elapsed is priced by a
-                        ``core.netmodel.NetworkModel`` (receiver-side
-                        NIC serialization + CPU-copy contention, plus
-                        sender-side egress), so topologies of hundreds
-                        of endpoints run in milliseconds.
-  CollectiveTransport — (repro.rpc.collective) lowers the flight onto
-                        the ``ppermute`` schedules of
-                        ``core.channels``; measured on real devices.
+  LoopbackTransport        — single-host shared-buffer memcpy;
+                             wall-clock measured. The
+                             serving-experiment path.
+  SimulatedTransport       — no data moves; elapsed is priced by a
+                             ``core.netmodel.NetworkModel``
+                             (receiver-side NIC serialization +
+                             CPU-copy contention, plus sender-side
+                             egress), so topologies of hundreds of
+                             endpoints run in milliseconds.
+  CollectiveTransport      — (repro.rpc.collective) lowers the flight
+                             onto the ``ppermute`` schedules of
+                             ``core.channels``; measured on real
+                             devices.
+  FaultInjectionTransport  — seeded fault-injection wrapper around any
+                             of the above: per-link transient message
+                             faults, extra latency, and stalled
+                             streams — the instrument the fault test
+                             tier drives everything with.
 
 Physical fabrics move at most one message per (src, dst) port pair at a
 time, so a flight is internally decomposed into edge-colored *rounds*
@@ -24,8 +32,9 @@ from __future__ import annotations
 import abc
 import time
 from collections import deque
-from dataclasses import dataclass
-from typing import Deque, Dict, List, Sequence
+from dataclasses import dataclass, replace
+from typing import (Deque, Dict, Iterable, List, Optional, Sequence,
+                    Set, Tuple)
 
 import numpy as np
 
@@ -95,7 +104,7 @@ class Transport(abc.ABC):
 
 def make_transport(kind: str, n_endpoints: int = None, *,
                    network=None, cluster=None, mesh=None, spec=None,
-                   **kw) -> Transport:
+                   inner: "Transport" = None, **kw) -> Transport:
     """The one transport constructor call sites outside ``repro.rpc``
     use (the CI deprecation gate rejects direct class construction
     elsewhere). Kinds:
@@ -106,7 +115,15 @@ def make_transport(kind: str, n_endpoints: int = None, *,
                                    cluster=ClusterSpec|dict|json)
       collective  — make_transport("collective", n, mesh=mesh,
                                    spec=payload_spec, ...)
+      fault       — make_transport("fault", inner=<any of the above>,
+                                   seed=0, fault_rate=..., ...)
     """
+    if kind == "fault":
+        if not isinstance(inner, Transport):
+            raise ValueError(
+                "fault transport needs inner= (a Transport built by "
+                f"make_transport); got {inner!r}")
+        return FaultInjectionTransport(inner, **kw)
     if kind in ("loopback", "simulated") and n_endpoints is None:
         raise ValueError(f"{kind} transport needs n_endpoints")
     if kind == "loopback":
@@ -139,7 +156,145 @@ def make_transport(kind: str, n_endpoints: int = None, *,
                                    n_endpoints=n_endpoints or 0, **kw)
     raise ValueError(f"unknown transport kind {kind!r}; choose from "
                      f"('loopback', 'simulated', 'cluster', "
-                     f"'collective')")
+                     f"'collective', 'fault')")
+
+
+class FaultInjectionTransport(Transport):
+    """Seeded fault-injection wrapper around any transport — the
+    instrument the fault test tier drives the fabric with. Three fault
+    families, each optionally restricted to a set of directed
+    ``(src, dst)`` links and drawn from ONE seeded RNG, so a schedule
+    is reproducible and independent of wall clock:
+
+      fault_rate   per-message probability the message is lost to a
+                   transient link fault: it is NOT delivered to the
+                   inner transport; the fabric sees it flagged
+                   ``FLAG_FAULT``, refunds its credits, and fails the
+                   call with a retryable transient error.
+      stall_rate   per-message probability of a *stalled stream*: the
+                   message is delivered but the flight is charged an
+                   extra ``stall_s`` (the modeled clock advances, or —
+                   on measured transports — the wall clock actually
+                   passes) — with deadline propagation the budget is
+                   consumed on the wire, so the server sheds the call
+                   on arrival and the client's deadline machinery
+                   fires.
+      latency_rate per-message probability of ``latency_s`` extra
+                   flight latency (a degraded link, milder than a
+                   stall).
+
+    ``max_faults`` bounds faults + stalls injected over the transport's
+    lifetime so every schedule eventually drains; the counters
+    (``faults_injected``, ``stalls_injected``, ``extra_latency_s``)
+    let tests assert the schedule actually fired. Unknown attributes
+    (``clock_s``, ``resolve``, ``channel_windows``, ``cluster``, ...)
+    delegate to the wrapped transport, so the wrapper is drop-in for
+    loopback, simulated, and cluster fabrics alike."""
+
+    def __init__(self, inner: Transport, *, seed: int = 0,
+                 fault_rate: float = 0.0, stall_rate: float = 0.0,
+                 latency_rate: float = 0.0, stall_s: float = 0.0,
+                 latency_s: float = 0.0,
+                 links: Optional[Iterable[Tuple[int, int]]] = None,
+                 max_faults: Optional[int] = None):
+        for rate in (fault_rate, stall_rate, latency_rate):
+            assert 0.0 <= rate <= 1.0, rate
+        assert fault_rate + stall_rate + latency_rate <= 1.0, \
+            "fault families draw from one RNG sample; rates must sum <= 1"
+        assert stall_s >= 0.0 and latency_s >= 0.0
+        self.inner = inner
+        self.seed = seed
+        self.fault_rate = fault_rate
+        self.stall_rate = stall_rate
+        self.latency_rate = latency_rate
+        self.stall_s = stall_s
+        self.latency_s = latency_s
+        self.links: Optional[Set[Tuple[int, int]]] = \
+            set((int(s), int(d)) for s, d in links) \
+            if links is not None else None
+        self.max_faults = max_faults
+        self.faults_injected = 0
+        self.stalls_injected = 0
+        self.extra_latency_s = 0.0
+        self._rng = np.random.default_rng(seed)
+
+    # the wrapped transport's identity -----------------------------------
+    @property
+    def n_endpoints(self) -> int:
+        return self.inner.n_endpoints
+
+    @property
+    def modeled(self) -> bool:
+        return self.inner.modeled
+
+    @property
+    def dispatches(self) -> bool:
+        return self.inner.dispatches
+
+    @property
+    def clock_s(self) -> float:
+        return self.inner.clock_s     # AttributeError when inner has none
+
+    @clock_s.setter
+    def clock_s(self, value: float) -> None:
+        self.inner.clock_s = value
+
+    def __getattr__(self, name: str):
+        # optional transport hooks (resolve, endpoint_name,
+        # channel_windows, cluster, network, ...) pass through
+        if name == "inner":       # pre-__init__ probes must not recurse
+            raise AttributeError(name)
+        return getattr(self.inner, name)
+
+    # the schedule -------------------------------------------------------
+    def _eligible(self, m: Message) -> bool:
+        return self.links is None or (m.src, m.dst) in self.links
+
+    def _budget_left(self) -> bool:
+        return self.max_faults is None or \
+            (self.faults_injected + self.stalls_injected) < self.max_faults
+
+    def deliver(self, messages: Sequence[Message]) -> Delivery:
+        faulted: List[Message] = []
+        through: List[Message] = []
+        extra = 0.0
+        for m in messages:
+            draw = (self._rng.random()
+                    if self._eligible(m) and self._budget_left()
+                    else 1.0)
+            if draw < self.fault_rate:
+                self.faults_injected += 1
+                faulted.append(replace(
+                    m, frame=replace(m.frame,
+                                     flags=m.frame.flags
+                                     | framing.FLAG_FAULT)))
+                continue
+            if draw < self.fault_rate + self.stall_rate:
+                self.stalls_injected += 1
+                extra += self.stall_s
+            elif draw < (self.fault_rate + self.stall_rate
+                         + self.latency_rate):
+                extra += self.latency_s
+            through.append(m)
+        d = self.inner.deliver(through)
+        if extra > 0.0:
+            self.extra_latency_s += extra
+            if self.inner.modeled and hasattr(self.inner, "clock_s"):
+                self.inner.clock_s += extra
+            else:
+                # measured transports live on the wall clock: the stall
+                # must actually pass for deadline propagation (server
+                # shedding) and client-side expiry to see it
+                time.sleep(extra)
+        # faulted messages FIRST: the fabric must see a call's fault
+        # before any same-flight stragglers of that call — a stream's
+        # END outrunning its faulted middle chunk would complete the
+        # stream with a silently missing chunk
+        return Delivery(faulted + list(d.messages),
+                        d.elapsed_s + extra, d.rounds, d.modeled)
+
+    def close(self) -> None:
+        self.inner.close()
 
 
 class LoopbackTransport(Transport):

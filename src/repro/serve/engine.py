@@ -37,6 +37,8 @@ from repro.configs.base import ArchConfig
 from repro.launch import steps as steps_lib
 from repro.models import model as M
 from repro.parallel.sharding import ParallelCtx
+from repro.rpc.interceptors import (ClientInterceptor,
+                                    is_resource_exhausted)
 
 
 @dataclass
@@ -143,14 +145,25 @@ class ServeEngine:
 
     def serve_cluster(self, cluster, *, serialized: bool = True,
                       policy: str = "round_robin", ps_job: str = "ps",
-                      worker_job: str = "worker"):
+                      worker_job: str = "worker",
+                      client_interceptors=None,
+                      server_interceptors=None, fault=None):
         """Multi-endpoint serving over a cluster transport: this
         engine's ``Serve`` service bound on every ``ps_job`` endpoint
         of ``cluster`` (a ``rpc.ClusterSpec`` / dict / JSON), one
         :class:`ShardedServeStub` per ``worker_job`` endpoint. Returns
         ``(fabric, {worker_name: ShardedServeStub})`` — submit from
         several workers, then ``fabric.flush()`` drives all of them
-        concurrently through per-link-priced routes."""
+        concurrently through per-link-priced routes.
+
+        Failure hardening: ``client_interceptors`` /
+        ``server_interceptors`` seed the fabric's chains (metrics,
+        deadline, retry); ``fault`` (a dict of
+        ``FaultInjectionTransport`` kwargs) wraps the cluster transport
+        in a seeded fault schedule; and endpoints that advertise an
+        ``admission_limit`` in the spec get an ``AdmissionInterceptor``
+        installed automatically, fed by a server-side
+        ``MetricsInterceptor`` when one is present in the chain."""
         from repro import rpc as rpclib
         from repro.rpc.cluster import as_cluster_spec
         cluster = as_cluster_spec(cluster)
@@ -161,8 +174,22 @@ class ServeEngine:
                 f"serve_cluster needs >= 1 {ps_job!r} and >= 1 "
                 f"{worker_job!r} endpoint; cluster jobs: "
                 f"{ {j: len(e) for j, e in cluster.jobs.items()} }")
+        transport = rpclib.make_transport("cluster", cluster=cluster)
+        if fault:
+            transport = rpclib.make_transport("fault", inner=transport,
+                                              **fault)
         fabric = rpclib.RpcFabric(
-            rpclib.make_transport("cluster", cluster=cluster))
+            transport, client_interceptors=client_interceptors,
+            server_interceptors=server_interceptors)
+        limits = cluster.admission_limits()
+        if limits and not any(isinstance(si, rpclib.AdmissionInterceptor)
+                              for si in fabric.server_interceptors):
+            metrics = next(
+                (si for si in fabric.server_interceptors
+                 if isinstance(si, rpclib.MetricsInterceptor)), None)
+            fabric.server_interceptors.append(
+                rpclib.AdmissionInterceptor(limits=limits,
+                                            metrics=metrics))
         for name in ps:
             self.attach(fabric.add_server(name))
         stubs = {w: ShardedServeStub(fabric, w, ps, policy=policy,
@@ -246,6 +273,45 @@ def serve_stub(channel):
 DISPATCH_POLICIES = ("round_robin", "least_loaded")
 
 
+class ShardFailoverInterceptor(ClientInterceptor):
+    """Client-side failover for :class:`ShardedServeStub`: a dispatch a
+    PS shard rejected with a transient ``resource exhausted`` error
+    (its admission control) is transparently re-issued on the NEXT
+    shard instead of being retried against the overloaded one. One
+    instance is shared per fabric by every ShardedServeStub, installed
+    innermost in the client chain so it consumes the rejection before
+    an outer ``RetryInterceptor`` burns an attempt on the same shard.
+    Each shard is tried at most once per call; when every shard has
+    rejected it, the failure surfaces (an outer retry may still re-try
+    the whole cycle on a later, less loaded flight)."""
+
+    def __init__(self):
+        self.failovers = 0
+
+    def on_complete(self, ctx, event):
+        route = ctx.meta.get("shard_route")
+        if route is None or event.kind != "error" \
+                or ctx.request is None:
+            return None
+        if not is_resource_exhausted(ctx.meta.get("error")):
+            return None
+        if ctx.kind == "server_stream" and ctx.chunks > 0:
+            return None         # chunks observed: re-issue would dupe
+        stub, shard = route
+        tried = ctx.meta.setdefault("shards_tried", set())
+        tried.add(shard)
+        if len(tried) >= len(stub.servers):
+            ctx.meta["shards_tried"] = set()    # a later cycle may pass
+            return None
+        nxt = (shard + 1) % len(stub.servers)
+        while nxt in tried:
+            nxt = (nxt + 1) % len(stub.servers)
+        ctx.meta["shard_route"] = (stub, nxt)
+        ctx.channel = stub.shard_channel(nxt)
+        self.failovers += 1
+        return "retry"
+
+
 class ShardedServeStub:
     """PS-style sharded dispatch client: one client endpoint fanning
     generation requests across several server endpoints of one fabric.
@@ -255,10 +321,16 @@ class ShardedServeStub:
     calls from this client, ties broken by server order. Outstanding
     counts are tracked per handle, so interleaved ``generate`` /
     ``generate_stream`` submissions from several stubs before one
-    ``fabric.flush()`` shard the way a real PS front-end would."""
+    ``fabric.flush()`` shard the way a real PS front-end would.
+
+    With ``failover=True`` (the default) a shared
+    :class:`ShardFailoverInterceptor` is installed on the fabric: a
+    dispatch rejected by a shard's admission control fails over to the
+    next shard transparently during ``flush``."""
 
     def __init__(self, fabric, client, servers, *,
-                 policy: str = "round_robin", serialized: bool = True):
+                 policy: str = "round_robin", serialized: bool = True,
+                 failover: bool = True):
         if policy not in DISPATCH_POLICIES:
             raise ValueError(f"unknown dispatch policy {policy!r}; "
                              f"choose from {DISPATCH_POLICIES}")
@@ -272,6 +344,19 @@ class ShardedServeStub:
                        for s in self.servers]
         self._rr = 0
         self._inflight: List[list] = [[] for _ in self.servers]
+        self._failover = None
+        if failover:
+            self._failover = next(
+                (ic for ic in fabric.client_interceptors
+                 if isinstance(ic, ShardFailoverInterceptor)), None)
+            if self._failover is None:
+                self._failover = ShardFailoverInterceptor()
+                fabric.client_interceptors.append(self._failover)
+
+    def shard_channel(self, shard: int):
+        """The underlying channel of one shard's stub (failover reroutes
+        a call's context onto it)."""
+        return self._stubs[shard].channel
 
     def outstanding(self, shard: int) -> int:
         """Submitted-but-incomplete calls this client has on one
@@ -294,6 +379,10 @@ class ShardedServeStub:
         handle = getattr(self._stubs[shard], method)(
             (prompts, max_new_tokens), **kw)
         self._inflight[shard].append(handle)
+        if self._failover is not None:
+            ctx = self.fabric.context(handle.call_id)
+            if ctx is not None:
+                ctx.meta["shard_route"] = (self, shard)
         return handle
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 0,

@@ -1,0 +1,756 @@
+"""Fault-injection test tier: the fabric's failure semantics under a
+seeded FaultInjectionTransport, on loopback, simulated, and cluster
+transports alike — deadline propagation (budget in the frame header,
+server-side shedding, ServerContext.time_remaining), admission control
+(queue-depth-fed AdmissionInterceptor, ResourceExhausted rejections,
+ShardedServeStub failover), and transparent server-stream retry. Every
+scenario ends with the credit invariant: windows fully refunded, chunk
+gates drained, no leaked server stream state. Mutation checks prove the
+dedicated tests actually depend on each mechanism: disabling budget
+stamping, admission, or stream retry flips a dedicated assertion."""
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.rpc import fabric as fabric_mod
+
+SIZES = [4096, 512]
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+#: the three dispatching transports the tier runs on, by factory
+TRANSPORTS = {
+    "loopback": lambda n: rpc.make_transport("loopback", n),
+    "simulated": lambda n: rpc.make_transport("simulated", n,
+                                              network="eth40g"),
+    "cluster": lambda n: rpc.make_transport(
+        "cluster", cluster=rpc.homogeneous(n, "eth40g")),
+}
+
+
+def _faulty_fabric(transport_name, n, *, fault_kw, **fabric_kw):
+    inner = TRANSPORTS[transport_name](n)
+    transport = rpc.make_transport("fault", inner=inner, **fault_kw)
+    return rpc.RpcFabric(transport, **fabric_kw)
+
+
+def assert_credits_balanced(fab):
+    """The conformance invariant after every scenario: every window
+    back at full size, every gate drained, nothing backlogged, no
+    partial-stream state left on any server."""
+    for ch in fab._channels.values():
+        assert ch.window.bytes_avail == ch.window.window_bytes
+        assert ch.window.msgs_avail == ch.window.window_msgs
+        assert ch.rwindow.bytes_avail == ch.rwindow.window_bytes
+        assert ch.rwindow.msgs_avail == ch.rwindow.window_msgs
+        assert len(ch.rx_gate) == 0
+        assert ch.backlogged == 0
+    assert not fab._backlog and not fab._pending
+    assert not fab._awaiting_grant
+    for srv in fab.servers.values():
+        assert srv._streams == {} and srv._bidi_seq == {}
+        assert srv._dead_streams == set()
+
+
+# ---------------------------------------------------------------------------
+# the FaultInjectionTransport itself
+# ---------------------------------------------------------------------------
+
+def test_fault_transport_delegates_to_inner():
+    inner = rpc.make_transport("cluster",
+                               cluster=rpc.ps_worker_cluster(1, 2))
+    t = rpc.make_transport("fault", inner=inner, seed=0, fault_rate=0.5)
+    assert t.n_endpoints == 3 and t.modeled and t.dispatches
+    assert t.resolve("ps0") == 0                  # name hook delegates
+    assert t.endpoint_name(1) == "worker0"
+    t.clock_s = 2.5                               # setter reaches inner
+    assert inner.clock_s == 2.5
+    loop = rpc.make_transport("fault",
+                              inner=rpc.make_transport("loopback", 2))
+    assert not hasattr(loop, "clock_s")           # loopback has none
+
+
+def test_fault_transport_validation():
+    with pytest.raises(ValueError, match="needs inner="):
+        rpc.make_transport("fault", fault_rate=0.5)
+    inner = rpc.make_transport("loopback", 2)
+    with pytest.raises(AssertionError, match="sum"):
+        rpc.make_transport("fault", inner=inner, fault_rate=0.8,
+                           stall_rate=0.8)
+
+
+def test_fault_schedule_is_seeded_and_link_scoped():
+    """Same seed -> same schedule; faults restricted to the configured
+    directed links never touch other traffic."""
+    def run(seed):
+        inner = rpc.make_transport("simulated", 3, network="eth40g")
+        t = rpc.make_transport("fault", inner=inner, seed=seed,
+                               fault_rate=1.0, max_faults=2,
+                               links=[(1, 0)])
+        retry = rpc.RetryInterceptor(max_attempts=8)
+        fab = rpc.RpcFabric(t, client_interceptors=[retry])
+        fab.add_server(0).add_service(rpc.CONFORMANCE_SERVICE,
+                                      rpc.conformance_handlers())
+        calls = [fab.stub(rpc.CONFORMANCE_SERVICE, w, 0)
+                 .echo(None, sizes=SIZES) for w in (1, 2)]
+        fab.flush()
+        assert all(c.done and c.error is None for c in calls)
+        return t.faults_injected, retry.retries
+
+    a, b = run(7), run(7)
+    assert a == b                     # reproducible schedule
+    faults, retries = a
+    # only endpoint 1's link is in the schedule: its call absorbed both
+    # faults; endpoint 2's call (same dst, different link) saw none
+    assert faults == 2 and retries == 2
+
+
+def test_max_faults_bounds_the_schedule():
+    inner = rpc.make_transport("simulated", 2, network="eth40g")
+    t = rpc.make_transport("fault", inner=inner, seed=0, fault_rate=1.0,
+                           max_faults=3)
+    retry = rpc.RetryInterceptor(max_attempts=10)
+    fab = rpc.RpcFabric(t, client_interceptors=[retry])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    c = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(None, sizes=SIZES)
+    fab.flush()
+    assert c.error is None and t.faults_injected == 3
+    assert retry.retries == 3
+    assert_credits_balanced(fab)
+
+
+# ---------------------------------------------------------------------------
+# conformance under faults: all four method kinds x three transports
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport_name", sorted(TRANSPORTS))
+def test_conformance_under_request_faults(transport_name):
+    """CONFORMANCE_SERVICE under a bounded fault schedule on the
+    client->server links: the retryable kinds (unary, server-stream
+    with zero chunks delivered) recover transparently; the
+    non-retryable stream kinds fail cleanly with a transient error —
+    and either way every credit is refunded."""
+    fab = _faulty_fabric(
+        transport_name, 4,
+        fault_kw=dict(seed=3, fault_rate=0.35, max_faults=6,
+                      links=[(w, 0) for w in (1, 2, 3)]),
+        client_interceptors=[rpc.MetricsInterceptor(),
+                             rpc.RetryInterceptor(max_attempts=8)])
+    transport = fab.transport
+    fab.add_server(0).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    handles = []
+    for w in (1, 2, 3):
+        stub = fab.stub(rpc.CONFORMANCE_SERVICE, w, 0)
+        payload = _bufs([300, 40], seed=w)
+        handles.append(("echo", w, payload, stub.echo(payload)))
+        handles.append(("split", w, payload, stub.split(payload)))
+        handles.append(("gather", w, payload,
+                        stub.gather([payload, payload])))
+        handles.append(("relay", w, payload,
+                        stub.relay([[payload[0]]])))
+    fab.flush()
+    assert transport.faults_injected >= 1     # the schedule fired
+    for kind, w, payload, h in handles:
+        assert h.done
+        if h.error is not None:
+            # only the non-retryable stream kinds may surface faults,
+            # and only as transient errors
+            assert kind in ("gather", "relay"), (kind, h.error)
+            assert rpc.is_transient(h.error), h.error
+        elif kind == "echo":
+            got = h.result()
+            assert [b.tolist() for b in got] \
+                == [b.tolist() for b in payload]
+        elif kind == "split":
+            got = np.concatenate([np.asarray(c[0])
+                                  for c in h.result()])
+            want = np.concatenate([b.reshape(-1) for b in payload])
+            assert np.array_equal(got, want)
+    assert_credits_balanced(fab)
+
+
+@pytest.mark.parametrize("transport_name", sorted(TRANSPORTS))
+def test_faulted_response_chunk_fails_stream_cleanly(transport_name):
+    """A fault on the server->client link with NO retry installed
+    kills the handle with a transient error — and the reverse-window
+    credits still come back, the gate drains, no server state leaks."""
+    fab = _faulty_fabric(
+        transport_name, 2,
+        fault_kw=dict(seed=1, fault_rate=1.0, max_faults=1,
+                      links=[(1, 0)]))   # only the response direction
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    h = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).split(
+        _bufs([600], seed=0))
+    fab.flush()
+    assert h.done and h.error is not None
+    assert rpc.is_transient(h.error)
+    assert fab.transport.faults_injected == 1
+    assert_credits_balanced(fab)
+
+
+def test_first_chunk_fault_is_transparently_retried():
+    """A response-direction fault on the FIRST chunk leaves the caller
+    with zero observed chunks, so a RetryInterceptor may transparently
+    re-issue the whole stream — every chunk still arrives exactly
+    once."""
+    retry = rpc.RetryInterceptor(max_attempts=4)
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=1, fault_rate=1.0, max_faults=1,
+                      links=[(1, 0)]),
+        client_interceptors=[retry])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    payload = _bufs([600], seed=0)
+    h = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).split(payload)
+    fab.flush()
+    assert h.done and h.error is None, h.error
+    assert retry.retries == 1
+    got = np.concatenate([np.asarray(c[0]) for c in h.chunk_bufs()])
+    assert np.array_equal(got, payload[0])    # exactly once, in order
+    assert_credits_balanced(fab)
+
+
+# ---------------------------------------------------------------------------
+# transparent server-stream retry (mutation target: stream retry)
+# ---------------------------------------------------------------------------
+
+def _stream_retry_scenario(max_attempts=4):
+    """One server-stream whose request frame is faulted exactly once:
+    a retrying client must deliver every chunk exactly once."""
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, fault_rate=1.0, max_faults=1,
+                      links=[(0, 1)]),
+        client_interceptors=[rpc.MetricsInterceptor(),
+                             rpc.RetryInterceptor(
+                                 max_attempts=max_attempts)])
+    invocations = {"n": 0}
+
+    def split(req):
+        invocations["n"] += 1
+        return [(128,), (128,), (64,)]
+
+    svc = rpc.ServiceDef("S", (rpc.MethodSpec("split",
+                                              rpc.SERVER_STREAM),))
+    fab.add_server(1).add_service(svc, {"split": split})
+    h = fab.stub(svc, 0, 1).split(None, sizes=[512], deadline_s=60.0)
+    fab.flush()
+    return fab, h, invocations
+
+
+def test_server_stream_retry_delivers_chunks_exactly_once():
+    fab, h, invocations = _stream_retry_scenario()
+    assert h.done and h.error is None, h.error
+    assert len(h.chunks) == 3               # each chunk exactly once
+    assert invocations["n"] == 1            # handler ran once, post-retry
+    assert fab.transport.faults_injected == 1
+    assert_credits_balanced(fab)
+
+
+def test_mutation_disabling_stream_retry_breaks_recovery(monkeypatch):
+    """Disabling server-stream retry (the pre-hardening, unary-only
+    behavior) must break test_server_stream_retry_*: the handle fails
+    instead of recovering."""
+    real = rpc.RetryInterceptor.on_complete
+
+    def unary_only(self, ctx, event):
+        if ctx.kind == rpc.SERVER_STREAM:
+            return None
+        return real(self, ctx, event)
+
+    monkeypatch.setattr(rpc.RetryInterceptor, "on_complete", unary_only)
+    fab, h, invocations = _stream_retry_scenario()
+    assert h.done and h.error is not None   # the dedicated test's
+    assert invocations["n"] == 0            # assertions now fail
+    assert_credits_balanced(fab)            # ...but credits still hold
+
+
+def test_stream_retry_not_attempted_after_first_chunk():
+    """The transparency guard: once a chunk has been DELIVERED to the
+    caller, a transient failure surfaces instead of re-issuing (which
+    would duplicate the observed chunk). A tiny reverse window forces
+    one chunk per flight, so chunk 0 is observed in an earlier flight
+    than the fault: seed 0 at rate 0.5 passes the first response chunk
+    (draw 0.637) and faults the second (0.270)."""
+    retry = rpc.RetryInterceptor(max_attempts=4)
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, fault_rate=0.5, max_faults=1,
+                      links=[(1, 0)]),     # fault a RESPONSE chunk
+        window_bytes=150, window_msgs=1,   # one 128B chunk per flight
+        client_interceptors=[retry])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    h = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).split(
+        _bufs([600], seed=1))              # 5 chunks; #2 gets faulted
+    fab.flush()
+    assert fab.transport.faults_injected == 1
+    assert h.done and h.error is not None
+    assert len(h.chunks) == 1              # the chunk that landed
+    assert retry.retries == 0              # never re-issued mid-stream
+    assert_credits_balanced(fab)
+
+
+# ---------------------------------------------------------------------------
+# deadline propagation (mutation target: budget stamping)
+# ---------------------------------------------------------------------------
+
+def _shed_scenario():
+    """A one-shot wire stall eats the whole budget: with propagation
+    the server sheds before invoking the handler."""
+    metrics = rpc.MetricsInterceptor()
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, stall_rate=1.0, stall_s=2.0,
+                      max_faults=1),
+        client_interceptors=[metrics], server_interceptors=[metrics])
+    served = {"n": 0}
+
+    def echo(req):
+        served["n"] += 1
+        return [(8,)]
+
+    svc = rpc.ServiceDef("E", (rpc.MethodSpec("echo", rpc.UNARY),))
+    srv = fab.add_server(1)
+    srv.add_service(svc, {"echo": echo})
+    call = fab.stub(svc, 0, 1).echo(None, sizes=[64], deadline_s=1.0)
+    fab.flush()
+    return fab, srv, call, served, metrics
+
+
+def test_server_sheds_expired_work_before_handler():
+    fab, srv, call, served, metrics = _shed_scenario()
+    assert call.done
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        call.result()
+    assert served["n"] == 0 and srv.calls_shed == 1
+    snap = metrics.snapshot()
+    assert snap["server:E/echo"]["shed"] == 1
+    # the client counts it as a deadline outcome, not a generic error
+    assert snap["E/echo"]["deadline_exceeded"] == 1
+    assert fab.transport.stalls_injected == 1
+    assert_credits_balanced(fab)
+
+
+def test_mutation_disabling_budget_stamping_breaks_shedding(monkeypatch):
+    """Zeroing deadline propagation (no budget stamped into the header)
+    must break test_server_sheds_*: the handler runs on doomed work."""
+    monkeypatch.setattr(rpc.RpcFabric, "_stamp_budget",
+                        lambda self, msg, now: msg)
+    fab, srv, call, served, metrics = _shed_scenario()
+    assert served["n"] == 1 and srv.calls_shed == 0   # doomed work ran
+    assert_credits_balanced(fab)
+
+
+def test_budget_header_visible_to_server_time_remaining():
+    """ServerContext.time_remaining() exposes the propagated budget
+    minus what the wire consumed, on the fabric clock."""
+    seen = {}
+
+    class Probe(rpc.ServerInterceptor):
+        def on_receive(self, ctx):
+            seen["remaining"] = ctx.time_remaining()
+            seen["deadline"] = ctx.deadline_s
+
+    net_fab = rpc.RpcFabric(
+        rpc.make_transport("simulated", 2, network="eth40g"),
+        server_interceptors=[Probe()])
+    net_fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                      rpc.conformance_handlers())
+    c = net_fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(
+        None, sizes=[1 << 20], deadline_s=10.0)
+    net_fab.flush()
+    assert c.error is None
+    wire = net_fab.transport.clock_s     # what the flight cost
+    assert wire > 0.0
+    assert seen["remaining"] is not None
+    assert seen["remaining"] == pytest.approx(10.0 - wire, abs=1e-3)
+    # a call without a deadline propagates none
+    seen.clear()
+    net_fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(
+        None, sizes=[64]).result()
+    assert seen["remaining"] is None and seen["deadline"] is None
+
+
+def test_shed_mid_stream_drops_remaining_chunks():
+    """A client stream whose budget expires mid-wire is shed at its
+    first chunk; the later chunks (riding the same flight) are consumed
+    without re-creating server state."""
+    metrics = rpc.MetricsInterceptor()
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, stall_rate=1.0, stall_s=5.0,
+                      max_faults=1),
+        client_interceptors=[metrics], server_interceptors=[metrics])
+    gathered = {"n": 0}
+
+    def gather(req):
+        gathered["n"] += 1
+        return [(4,)]
+
+    svc = rpc.ServiceDef("G", (rpc.MethodSpec("gather",
+                                              rpc.CLIENT_STREAM),))
+    srv = fab.add_server(1)
+    srv.add_service(svc, {"gather": gather})
+    c = fab.stub(svc, 0, 1).gather(None, sizes=[256], n_chunks=3,
+                                   deadline_s=1.0)
+    fab.flush()
+    assert c.done and gathered["n"] == 0
+    assert srv.calls_shed == 1           # shed once, at the opener
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        c.result()
+    assert_credits_balanced(fab)
+
+
+@pytest.mark.parametrize("transport_name", sorted(TRANSPORTS))
+def test_faulted_unary_reply_fails_transiently_and_retries(
+        transport_name):
+    """A fault on the RESPONSE of a unary call (the reply sub-flight)
+    must surface as a transient failure — never as a phantom success —
+    and a RetryInterceptor re-runs the call (at-least-once, like
+    gRPC): the handler executes once per attempt."""
+    retry = rpc.RetryInterceptor(max_attempts=4)
+    fab = _faulty_fabric(
+        transport_name, 2,
+        fault_kw=dict(seed=1, fault_rate=1.0, max_faults=1,
+                      links=[(1, 0)]),   # only the reply direction
+        client_interceptors=[retry])
+    served = {"n": 0}
+
+    def echo(req):
+        served["n"] += 1
+        return [np.array(b, copy=True) for b in req]
+
+    svc = rpc.ServiceDef("U", (rpc.MethodSpec("echo", rpc.UNARY),))
+    fab.add_server(1).add_service(svc, {"echo": echo})
+    payload = _bufs([256], seed=2)
+    c = fab.stub(svc, 0, 1).echo(payload)
+    fab.flush()
+    assert c.done and c.error is None, c.error
+    assert np.array_equal(c.reply_bufs()[0], payload[0])
+    assert fab.transport.faults_injected == 1
+    assert retry.retries == 1
+    assert served["n"] == 2              # the request WAS handled twice
+    assert_credits_balanced(fab)
+
+
+def test_faulted_unary_reply_without_retry_fails_not_succeeds():
+    """Without a retry chain the lost reply is a transient error — the
+    regression was a phantom success carrying the 'lost' payload."""
+    fab = _faulty_fabric(
+        "loopback", 2,
+        fault_kw=dict(seed=1, fault_rate=1.0, max_faults=1,
+                      links=[(1, 0)]))
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    c = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(_bufs([64], seed=0))
+    fab.flush()
+    assert c.done and c.error is not None
+    assert rpc.is_transient(c.error)
+    assert_credits_balanced(fab)
+
+
+def test_stall_is_real_wall_time_on_measured_transports():
+    """On loopback a stall actually sleeps, so deadline propagation
+    sheds on the wall clock exactly like on the modeled clock."""
+    fab = _faulty_fabric(
+        "loopback", 2,
+        fault_kw=dict(seed=0, stall_rate=1.0, stall_s=0.05,
+                      max_faults=1))
+    served = {"n": 0}
+
+    def echo(req):
+        served["n"] += 1
+        return req
+
+    svc = rpc.ServiceDef("W", (rpc.MethodSpec("echo", rpc.UNARY),))
+    srv = fab.add_server(1)
+    srv.add_service(svc, {"echo": echo})
+    c = fab.stub(svc, 0, 1).echo(_bufs([64], seed=0), deadline_s=0.02)
+    fab.flush()
+    assert c.done and served["n"] == 0 and srv.calls_shed == 1
+    with pytest.raises(rpc.RpcError, match="deadline exceeded"):
+        c.result()
+    assert_credits_balanced(fab)
+
+
+def test_shed_one_way_call_returns_no_reply():
+    """A shed one-way call produces no error reply (there is nobody
+    waiting for one) — it still counts as shed and its credits
+    return."""
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, stall_rate=1.0, stall_s=3.0,
+                      max_faults=1))
+    served = {"n": 0}
+
+    def fire(req):
+        served["n"] += 1
+        return None
+
+    svc = rpc.ServiceDef("F", (rpc.MethodSpec("fire", rpc.UNARY),))
+    srv = fab.add_server(1)
+    srv.add_service(svc, {"fire": fire})
+    c = fab.stub(svc, 0, 1).fire(None, sizes=[64], one_way=True,
+                                 deadline_s=1.0)
+    fab.flush()
+    assert c.done and served["n"] == 0 and srv.calls_shed == 1
+    assert_credits_balanced(fab)
+
+
+def test_retry_backoff_sleeps_on_measured_transports():
+    """On a non-modeled (loopback) transport the retry backoff is a
+    real wall-clock wait — tiny here, but the path must work."""
+    import time as _t
+    retry = rpc.RetryInterceptor(max_attempts=3, backoff_s=0.01)
+    fab = _faulty_fabric(
+        "loopback", 2,
+        fault_kw=dict(seed=0, fault_rate=1.0, max_faults=1),
+        client_interceptors=[retry])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    t0 = _t.perf_counter()
+    c = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).echo(
+        _bufs([64], seed=0))
+    fab.flush()
+    assert c.error is None and retry.retries == 1
+    assert _t.perf_counter() - t0 >= 0.01
+    assert_credits_balanced(fab)
+
+
+# ---------------------------------------------------------------------------
+# admission control (mutation target: AdmissionInterceptor)
+# ---------------------------------------------------------------------------
+
+def _admission_scenario():
+    """A flight of 4 unary calls into one endpoint capped at 2: two are
+    rejected with ResourceExhausted and recover via retry on the next
+    (drained) flight."""
+    metrics = rpc.MetricsInterceptor()
+    admission = rpc.AdmissionInterceptor(2, metrics=metrics)
+    fab = rpc.RpcFabric(
+        rpc.make_transport("simulated", 5, network="eth40g"),
+        client_interceptors=[metrics,
+                             rpc.RetryInterceptor(max_attempts=4)],
+        server_interceptors=[metrics, admission])
+    fab.add_server(0).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    calls = [fab.stub(rpc.CONFORMANCE_SERVICE, w, 0)
+             .echo(None, sizes=[1024]) for w in (1, 2, 3, 4)]
+    fab.flush()
+    return fab, calls, admission, metrics
+
+
+def test_admission_rejects_over_limit_and_retries_recover():
+    fab, calls, admission, metrics = _admission_scenario()
+    assert all(c.done and c.error is None for c in calls)
+    assert admission.rejected == 2
+    snap = metrics.snapshot()
+    srv_rec = snap["server:Conformance/echo"]
+    assert srv_rec["rejected"] == 2
+    assert srv_rec["queue_peak"] == 4    # the metrics fed the signal
+    assert srv_rec["calls"] == 4         # every call served eventually
+    assert snap["Conformance/echo"]["retries"] == 2
+    assert_credits_balanced(fab)
+
+
+def test_mutation_disabling_admission_control_breaks_rejection(
+        monkeypatch):
+    """Neutering AdmissionInterceptor.on_admit must break
+    test_admission_rejects_*: nothing is rejected, nothing retries."""
+    monkeypatch.setattr(rpc.AdmissionInterceptor, "on_admit",
+                        lambda self, ctx: None)
+    fab, calls, admission, metrics = _admission_scenario()
+    assert all(c.error is None for c in calls)
+    assert admission.rejected == 0                      # gate is gone
+    assert metrics.snapshot()["Conformance/echo"]["retries"] == 0
+    assert_credits_balanced(fab)
+
+
+def test_handler_raised_resource_exhausted_is_transient():
+    """A handler may apply its own admission policy by raising
+    ResourceExhausted — the reply is transient AND recognizably
+    resource-exhaustion (the failover trigger)."""
+    def refuse(req):
+        raise rpc.ResourceExhausted("busy")
+
+    fab = rpc.RpcFabric(rpc.make_transport("loopback", 2))
+    svc = rpc.ServiceDef("R", (rpc.MethodSpec("get", rpc.UNARY),))
+    fab.add_server(1).add_service(svc, {"get": refuse})
+    c = fab.stub(svc, 0, 1).get([np.zeros(4, np.uint8)])
+    fab.flush()
+    assert rpc.is_transient(c.error)
+    assert rpc.is_resource_exhausted(c.error)
+
+
+def test_admission_limits_per_endpoint_from_cluster_spec():
+    """EndpointSpec.admission_limit round-trips through JSON and feeds
+    AdmissionInterceptor.limits via ClusterSpec.admission_limits()."""
+    spec = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=2),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("w0"),))
+    again = rpc.ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert spec.admission_limits() == {0: 2}
+    with pytest.raises(ValueError, match="admission_limit"):
+        rpc.ClusterSpec(endpoints=(
+            rpc.EndpointSpec("a", admission_limit=0),))
+
+
+# ---------------------------------------------------------------------------
+# ShardedServeStub failover on ResourceExhausted
+# ---------------------------------------------------------------------------
+
+def _serve_handlers(name, served):
+    from repro.serve.engine import (_i32_buf, decode_generate_request,
+                                    encode_generate_reply)
+
+    def generate(bufs):
+        served[name] += 1
+        prompts, mnt = decode_generate_request(bufs)
+        return encode_generate_reply(
+            np.full((prompts.shape[0], max(mnt, 1)), int(name[-1]),
+                    np.int32))
+
+    def generate_stream(bufs):
+        served[name] += 1
+        prompts, mnt = decode_generate_request(bufs)
+        return [[_i32_buf(np.full(prompts.shape[0], int(name[-1]),
+                                  np.int32))]
+                for _ in range(max(mnt, 1))]
+
+    return {"generate": generate, "generate_stream": generate_stream}
+
+
+def test_sharded_stub_fails_over_on_admission_rejection():
+    """ps0 caps at 1 outstanding call; the third round-robin dispatch
+    (2nd onto ps0) is rejected and transparently re-issued on ps1 —
+    the PS-style failover the admission signal exists for."""
+    from repro.serve.engine import SERVE_SERVICE, ShardedServeStub
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=1),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("worker0"),))
+    metrics = rpc.MetricsInterceptor()
+    admission = rpc.AdmissionInterceptor(
+        limits=cluster.admission_limits(), metrics=metrics)
+    fab = rpc.RpcFabric(rpc.make_transport("cluster", cluster=cluster),
+                        client_interceptors=[metrics],
+                        server_interceptors=[metrics, admission])
+    served = {"ps0": 0, "ps1": 0}
+    for name in ("ps0", "ps1"):
+        fab.add_server(name).add_service(SERVE_SERVICE,
+                                         _serve_handlers(name, served))
+    stub = ShardedServeStub(fab, "worker0", ("ps0", "ps1"))
+    prompts = np.zeros((1, 4), np.int32)
+    calls = [stub.generate(prompts, 1) for _ in range(3)]
+    fab.flush()
+    outs = [int(c.result()[0, 0]) for c in calls]
+    assert outs == [0, 1, 1]             # the rejected call moved shards
+    assert admission.rejected == 1
+    assert stub._failover is not None and stub._failover.failovers == 1
+    assert served == {"ps0": 1, "ps1": 2}
+    assert_credits_balanced(fab)
+
+
+def test_failover_also_carries_server_streams():
+    """A generate_stream rejected at its opener (zero chunks delivered)
+    fails over like a unary call."""
+    from repro.serve.engine import SERVE_SERVICE, ShardedServeStub
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=1),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("worker0"),))
+    metrics = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(
+        rpc.make_transport("cluster", cluster=cluster),
+        client_interceptors=[metrics],
+        server_interceptors=[metrics, rpc.AdmissionInterceptor(
+            limits=cluster.admission_limits(), metrics=metrics)])
+    served = {"ps0": 0, "ps1": 0}
+    for name in ("ps0", "ps1"):
+        fab.add_server(name).add_service(SERVE_SERVICE,
+                                         _serve_handlers(name, served))
+    stub = ShardedServeStub(fab, "worker0", ("ps0", "ps1"))
+    prompts = np.zeros((2, 4), np.int32)
+    a = stub.generate_stream(prompts, 2)     # rr -> ps0
+    b = stub.generate_stream(prompts, 2)     # rr -> ps1
+    c = stub.generate_stream(prompts, 2)     # rr -> ps0: rejected
+    fab.flush()
+    for h in (a, b, c):
+        assert h.done and h.error is None, h.error
+    assert [int(h.chunks[0][0].view("<i4")[0]) for h in (a, b, c)] \
+        == [0, 1, 1]
+    assert stub._failover.failovers == 1
+    assert_credits_balanced(fab)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: serve_cluster, 1 ps / 3 workers, seeded
+# faults, admission control + stream retry, zero deadline violations
+# ---------------------------------------------------------------------------
+
+def test_serve_cluster_under_faults_completes_all_requests():
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.parallel import NO_MESH
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_reduced_config("qwen3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(NO_MESH, cfg, params,
+                      ServeConfig(max_seq=64, max_new_tokens=4))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.model.vocab_size, (2, 8), dtype=np.int32)
+    direct = eng.generate(prompts)
+
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", network="rdma_edr",
+                         admission_limit=2),
+        rpc.EndpointSpec("worker0", network="rdma_edr"),
+        rpc.EndpointSpec("worker1", network="rdma_edr"),
+        rpc.EndpointSpec("worker2", network="rdma_edr")))
+    metrics = rpc.MetricsInterceptor(per_endpoint=True)
+    deadline = rpc.DeadlineInterceptor(default_deadline_s=30.0)
+    retry = rpc.RetryInterceptor(max_attempts=6)
+    fabric, stubs = eng.serve_cluster(
+        cluster,
+        client_interceptors=[metrics, deadline, retry],
+        server_interceptors=[metrics],
+        fault=dict(seed=11, fault_rate=0.3, max_faults=4,
+                   links=[(w, 0) for w in (1, 2, 3)]))
+    assert sorted(stubs) == ["worker0", "worker1", "worker2"]
+    # 3 workers: a unary generate AND a token stream each — with an
+    # admission cap of 2 at the single PS, at least one dispatch per
+    # flight is rejected and must recover by retry on a later flight
+    calls = {w: stub.generate(prompts) for w, stub in stubs.items()}
+    streams = {w: stub.generate_stream(prompts)
+               for w, stub in stubs.items()}
+    fabric.flush()
+    for w, call in calls.items():
+        assert np.array_equal(call.result(), direct), w
+    from repro.serve.engine import decode_token_chunk
+    for w, h in streams.items():
+        assert h.done and h.error is None, (w, h.error)
+        got = np.stack([decode_token_chunk(c) for c in h.chunk_bufs()],
+                       axis=1)
+        assert np.array_equal(got, direct), w
+    # the schedule fired and the hardening absorbed all of it
+    assert fabric.transport.faults_injected >= 1
+    assert retry.retries >= 1
+    snap = metrics.snapshot()
+    for rec in snap.values():
+        assert rec["deadline_exceeded"] == 0      # zero violations
+    assert snap["server:Serve/generate"]["shed"] == 0
+    assert fabric.servers[0].calls_shed == 0
+    assert_credits_balanced(fabric)

@@ -1,0 +1,125 @@
+"""Property tests for the fabric's failure semantics: the deadline
+budget header round-trips through framing for arbitrary budgets, and —
+under random transient fault schedules — a transparently retried
+server-stream delivers each chunk exactly once, in order, never after
+its deadline, with every credit refunded. Skips cleanly when hypothesis
+is absent and runs with --hypothesis-profile=ci in CI."""
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro import rpc
+from repro.rpc import framing
+
+# ---------------------------------------------------------------------------
+# deadline header round-trip
+# ---------------------------------------------------------------------------
+
+
+@given(budget_us=st.integers(0, framing.MAX_BUDGET_US),
+       sizes=st.lists(st.integers(0, 2048), min_size=0, max_size=8),
+       seq=st.integers(0, 2**31 - 1), serialized=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_budget_header_roundtrip(budget_us, sizes, seq, serialized):
+    """budget_us survives header encode/parse AND the full wire
+    encode/decode, for random budgets on unary and stream frames."""
+    rng = np.random.default_rng(0)
+    bufs = [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+    f = framing.make_frame(9, "prop", bufs, serialized=serialized,
+                           stream=seq > 0, seq=seq, budget_us=budget_us)
+    parsed, _ = framing.parse_header(framing.header_bytes(f))
+    assert parsed.budget_us == budget_us
+    assert (parsed.call_id, parsed.method, parsed.seq, parsed.sizes) \
+        == (f.call_id, f.method, f.seq, f.sizes)
+    wired = framing.decode(framing.encode(f))
+    assert wired.budget_us == budget_us
+
+
+@given(budget_s=st.floats(1e-6, 3600.0, allow_nan=False,
+                          allow_infinity=False))
+@settings(max_examples=40, deadline=None)
+def test_stamped_budget_is_positive_and_bounded(budget_s):
+    """The fabric's stamp of a random remaining budget always lands in
+    the header's representable range (>= 1us, saturating)."""
+    stamped = max(1, min(framing.MAX_BUDGET_US, int(budget_s * 1e6)))
+    f = framing.make_frame(1, "m", [], sizes=[], budget_us=stamped)
+    parsed, _ = framing.parse_header(framing.header_bytes(f))
+    assert 1 <= parsed.budget_us <= framing.MAX_BUDGET_US
+
+
+# ---------------------------------------------------------------------------
+# retried server-streams: exactly-once, never past the deadline
+# ---------------------------------------------------------------------------
+
+
+def _windows_restored(fab):
+    for ch in fab._channels.values():
+        assert ch.window.bytes_avail == ch.window.window_bytes
+        assert ch.rwindow.bytes_avail == ch.rwindow.window_bytes
+        assert len(ch.rx_gate) == 0 and ch.backlogged == 0
+    for srv in fab.servers.values():
+        assert srv._streams == {} and srv._bidi_seq == {}
+
+
+@given(n_faults=st.integers(0, 3), n_chunks=st.integers(1, 4),
+       seed=st.integers(0, 10_000), deadline_s=st.floats(5.0, 50.0))
+@settings(max_examples=25, deadline=None)
+def test_retried_stream_delivers_each_chunk_exactly_once(
+        n_faults, n_chunks, seed, deadline_s):
+    """Random fault schedule on the request link: the first n_faults
+    attempts of a server-stream are lost and transparently re-issued.
+    The surviving attempt delivers every chunk exactly once, in order,
+    strictly before the call's deadline on the modeled clock — and the
+    handler body ran exactly once."""
+    inner = rpc.make_transport("simulated", 2, network="eth40g")
+    transport = rpc.make_transport("fault", inner=inner, seed=seed,
+                                   fault_rate=1.0, max_faults=n_faults,
+                                   links=[(0, 1)])
+    retry = rpc.RetryInterceptor(max_attempts=n_faults + 2)
+    fab = rpc.RpcFabric(transport, client_interceptors=[retry])
+    invocations = {"n": 0}
+
+    def split(req):
+        invocations["n"] += 1
+        return [(64 * (i + 1),) for i in range(n_chunks)]
+
+    svc = rpc.ServiceDef("P", (rpc.MethodSpec("split",
+                                              rpc.SERVER_STREAM),))
+    fab.add_server(1).add_service(svc, {"split": split})
+    h = fab.stub(svc, 0, 1).split(None, sizes=[256],
+                                  deadline_s=deadline_s)
+    fab.flush()
+    assert h.done and h.error is None, h.error
+    assert transport.faults_injected == n_faults
+    assert retry.retries == n_faults
+    assert invocations["n"] == 1
+    # exactly once, in order: the spec-only chunk sizes identify each
+    assert [c[0] for c in h.chunks] == [64 * (i + 1)
+                                        for i in range(n_chunks)]
+    # never after the deadline: the modeled clock at completion is
+    # strictly inside the budget (else the fabric would have cancelled)
+    assert fab.transport.clock_s < deadline_s
+    _windows_restored(fab)
+
+
+@given(n_faults=st.integers(1, 3), seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_exhausted_attempts_surface_transient_error_cleanly(
+        n_faults, seed):
+    """When the schedule outlasts max_attempts the failure surfaces as
+    a transient error — never a hang, never leaked credits."""
+    inner = rpc.make_transport("simulated", 2, network="eth40g")
+    transport = rpc.make_transport("fault", inner=inner, seed=seed,
+                                   fault_rate=1.0, links=[(0, 1)])
+    retry = rpc.RetryInterceptor(max_attempts=n_faults)
+    fab = rpc.RpcFabric(transport, client_interceptors=[retry])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    h = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1).split(None, sizes=[256])
+    fab.flush()
+    assert h.done and h.error is not None
+    assert rpc.is_transient(h.error)
+    assert retry.retries == n_faults - 1     # max_attempts total tries
+    with pytest.raises(rpc.RpcError):
+        h.chunk_bufs()
+    _windows_restored(fab)

@@ -387,6 +387,92 @@ def test_retry_gives_up_after_max_attempts():
         c.reply_bufs()
 
 
+def test_retry_respects_original_deadline_budget():
+    """The fix: a retry never resets the per-call deadline. Backoffs
+    are paid on the fabric clock against the ORIGINAL budget, and a
+    retry whose backoff cannot fit in the remaining budget is not
+    attempted at all — on the modeled clock this is exact: with a 1s
+    budget and 0.4s doubling backoff, attempt 2 fits (0.4s) but
+    attempt 3 would land at 1.2s > 1.0s and is abandoned."""
+    def always(req):
+        raise rpc.TransientError("still down")
+
+    retry = rpc.RetryInterceptor(max_attempts=10, backoff_s=0.4)
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(2, NETWORKS["eth40g"]),
+                        client_interceptors=[retry])
+    fab.add_server(1).register("always", always)
+    c = fab.channel(0, 1).call("always", [np.zeros(8, np.uint8)],
+                               deadline_s=1.0)
+    fab.flush()
+    assert c.done
+    with pytest.raises(rpc.RpcError, match="still down"):
+        c.reply_bufs()
+    assert retry.retries == 1            # only the 0.4s backoff fit
+    assert retry.gave_up_budget == 1     # the 0.8s one was abandoned
+    # the clock never ran past the original deadline chasing retries
+    assert fab.transport.clock_s < 1.0
+
+
+def test_retry_backoff_advances_modeled_clock():
+    """Each retry pays its backoff on the fabric clock (deterministic
+    on modeled transports), doubling per attempt."""
+    seen = {"n": 0}
+
+    def flaky(req):
+        seen["n"] += 1
+        if seen["n"] < 3:
+            raise rpc.TransientError("warming up")
+        return req
+
+    retry = rpc.RetryInterceptor(max_attempts=5, backoff_s=0.1)
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(2, NETWORKS["eth40g"]),
+                        client_interceptors=[retry])
+    fab.add_server(1).register("flaky", flaky)
+    c = fab.channel(0, 1).call("flaky", [np.zeros(8, np.uint8)])
+    fab.flush()
+    assert c.error is None and retry.retries == 2
+    # 0.1 + 0.2 of backoff, plus the (tiny) flight costs
+    assert fab.transport.clock_s >= 0.3
+
+
+def test_method_spec_default_deadline_applied_by_stub():
+    """MethodSpec.deadline_s is the per-method default: applied when an
+    invocation passes none, overridden when one is passed, validated
+    > 0 at declaration."""
+    svc = rpc.ServiceDef("D", (
+        rpc.MethodSpec("slow", rpc.UNARY, deadline_s=4.0),))
+    fab = rpc.RpcFabric(rpc.SimulatedTransport(2, NETWORKS["eth40g"]))
+    fab.add_server(1).add_service(svc, {"slow": lambda req: [(4,)]})
+    stub = fab.stub(svc, 0, 1)
+    c1 = stub.slow(None, sizes=[8])
+    ctx1 = fab.context(c1.call_id)
+    assert ctx1.deadline_s == pytest.approx(fab.now() + 4.0)
+    c2 = stub.slow(None, sizes=[8], deadline_s=9.0)
+    ctx2 = fab.context(c2.call_id)
+    assert ctx2.deadline_s == pytest.approx(fab.now() + 9.0)
+    fab.flush()
+    assert c1.error is None and c2.error is None
+    with pytest.raises(ValueError, match="deadline_s must be > 0"):
+        rpc.MethodSpec("bad", rpc.UNARY, deadline_s=0.0)
+
+
+def test_no_blanket_exception_handlers_inside_rpc():
+    """The CI gate the deprecation step enforces, as a test: the
+    fabric's failure semantics are the product, so a silent
+    ``except Exception`` inside src/repro/rpc/ would swallow exactly
+    the faults the fault tier exists to surface. Broad catches must go
+    through the named HANDLER_FAULTS boundary in rpc/fabric.py."""
+    root = pathlib.Path(__file__).resolve().parents[1] \
+        / "src" / "repro" / "rpc"
+    pat = re.compile(r"except +\(? *(Base)?Exception\b")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{p.name}:{i}: {line.strip()}")
+    assert not offenders, offenders
+
+
 def test_retry_not_triggered_by_permanent_errors():
     retry = rpc.RetryInterceptor(max_attempts=5)
     fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
