@@ -71,6 +71,10 @@ class BenchConfig:
     # explicit payload override (e.g. --arch): a core.payload.PayloadSpec;
     # when set, the S/M/L generator fields above are ignored
     payload_spec: Optional[object] = None
+    # attach a rpc.Tracer to the fabric even on measured transports
+    # (modeled transports always trace — spans cost nothing on the
+    # modeled clock); bench_comm --trace exports the Chrome JSON
+    trace: bool = False
 
 
 # §4.5 experiment: 2 parameter servers, 3 workers

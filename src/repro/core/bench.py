@@ -17,7 +17,7 @@ incast: bidi into one server that streams the fetch back).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -47,6 +47,12 @@ class BenchStats:
     # per-method interceptor metrics (fabric families): call counts +
     # latency percentiles from the MetricsInterceptor on the fabric
     rpc_metrics: Dict[str, dict] = field(default_factory=dict)
+    # per-method phase-level latency breakdown (fabric families, from
+    # the fabric Tracer): {method: {calls, end_to_end_s, phases: {...}}}
+    rpc_phases: Dict[str, dict] = field(default_factory=dict)
+    # the rpc.Tracer the run recorded into (None when untraced) — holds
+    # the span trees; export_chrome() writes the Perfetto-loadable JSON
+    tracer: Optional[object] = None
 
     def row(self) -> str:
         d = ",".join(f"{k}={v:.6g}" for k, v in self.derived.items())
@@ -228,12 +234,19 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
                       rpclib.AdmissionInterceptor(cfg.admission_limit,
                                                   metrics=metrics)]
         client_ics.append(rpclib.RetryInterceptor(max_attempts=4))
+    # modeled transports always carry a Tracer (spans cost nothing on
+    # the modeled clock and feed the --json phase breakdown); measured
+    # transports only trace when asked, so the hot loop stays clean
+    tracer = None
+    if cfg.trace or getattr(transport, "modeled", False):
+        tracer = rpclib.Tracer()
     fabric = rpclib.RpcFabric(
         transport,
         window_bytes=max(4 * 1024 * 1024, (chunks + 1) * per_chunk),
         window_msgs=max(32, chunks + 1),
         client_interceptors=client_ics,
-        server_interceptors=server_ics)
+        server_interceptors=server_ics,
+        tracer=tracer)
     return fabric, bufs, metrics
 
 
@@ -264,6 +277,16 @@ def _cluster_projection(st: BenchStats, cfg: BenchConfig, fabric,
             cl, sizes, n_chunks=n_chunks, serialized=serialized,
             fetch_ratio=cfg.fetch_ratio)
     st.model_projection["cluster"] = st.derived["rpcs_per_round"] / t
+
+
+def _attach_trace(st: BenchStats, fabric) -> None:
+    """Publish the fabric Tracer's per-phase latency breakdown (and the
+    tracer itself, for Chrome export) on the stats row."""
+    tracer = getattr(fabric, "tracer", None)
+    if tracer is None:
+        return
+    st.tracer = tracer
+    st.rpc_phases = tracer.phase_breakdown()
 
 
 def _fabric_bench(cfg: BenchConfig, exchange, fabric,
@@ -310,6 +333,7 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
                 {"rpcs_per_s": rpcs / float(np.mean(times)),
                  "rpcs_per_round": float(rpcs)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _attach_trace(st, fabric)
     _cluster_projection(st, cfg, fabric, spec)
     return st
 
@@ -340,6 +364,7 @@ def ring(cfg: BenchConfig) -> BenchStats:
                  "rpcs_per_round": float(rpcs),
                  "chunks_per_stream": float(n_chunks)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _attach_trace(st, fabric)
     _cluster_projection(st, cfg, fabric, spec, n_chunks=n_chunks)
     return st
 
@@ -377,6 +402,7 @@ def incast(cfg: BenchConfig) -> BenchStats:
                  "chunks_per_stream": float(n_chunks),
                  "fetch_ratio": float(cfg.fetch_ratio)}, mon.report)
     st.rpc_metrics = metrics.snapshot()
+    _attach_trace(st, fabric)
     _cluster_projection(st, cfg, fabric, spec, n_chunks=n_chunks)
     return st
 
@@ -396,3 +422,80 @@ FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
 
 def run(cfg: BenchConfig) -> BenchStats:
     return BENCHMARKS[cfg.benchmark](cfg)
+
+
+# ---------------------------------------------------------------------------
+# Perf-baseline telemetry: deterministic modeled numbers for all six
+# benchmark families, committed to benchmarks/BENCH_fabric.json and
+# re-derived in CI. The paper families use the netmodel closed forms;
+# the fabric families run the simulated transport (exact on the modeled
+# clock) — so a fresh run diffs clean against the committed file unless
+# the pricing model or the fabric's behavior actually changed.
+
+BASELINE_SCHEMA = 1
+
+
+def collect_baseline(network: str = "eth40g", num_ps: int = 2,
+                     num_workers: int = 4, iovec_count: int = 10,
+                     scheme: str = "uniform", mode: str = "non_serialized",
+                     stream_chunks: int = 4, fetch_ratio: float = 1.0,
+                     seed: int = 0) -> dict:
+    """Modeled round time + throughput of every benchmark family.
+
+    The returned dict records the exact config it was collected under,
+    so ``check_baseline`` can re-run the identical configuration.
+    """
+    config = dict(network=network, num_ps=num_ps, num_workers=num_workers,
+                  iovec_count=iovec_count, scheme=scheme, mode=mode,
+                  stream_chunks=stream_chunks, fetch_ratio=fetch_ratio,
+                  seed=seed)
+    base = BenchConfig(num_ps=num_ps, num_workers=num_workers, mode=mode,
+                       scheme=scheme, iovec_count=iovec_count, seed=seed,
+                       network=network, transport="simulated",
+                       stream_chunks=stream_chunks, fetch_ratio=fetch_ratio)
+    spec = generate_spec(base)
+    net = NETWORKS[network]
+    serialized = mode == "serialized"
+    rtt = net.rtt(spec, serialized=serialized)
+    mbps = net.bandwidth(spec, serialized=serialized)
+    families: Dict[str, dict] = {
+        "p2p_latency": {"round_time_s": rtt, "throughput": 1.0 / rtt,
+                        "metric": "rounds_per_s"},
+        "p2p_bandwidth": {
+            "round_time_s": spec.total_bytes / (mbps * 1e6),
+            "throughput": mbps, "metric": "MBps"},
+        "ps_throughput": {
+            "round_time_s": net.ps_round_time(spec, num_ps, num_workers,
+                                              serialized=serialized),
+            "throughput": net.ps_throughput(spec, num_ps, num_workers,
+                                            serialized=serialized),
+            "metric": "rpcs_per_s"},
+    }
+    for fam in FABRIC_BENCHMARKS:
+        st = run(replace(base, benchmark=fam))
+        families[fam] = {"round_time_s": st.mean_s,
+                         "throughput": st.derived["rpcs_per_s"],
+                         "metric": "rpcs_per_s"}
+    return {"schema": BASELINE_SCHEMA, "config": config,
+            "families": families}
+
+
+def check_baseline(baseline: dict, rel_tol: float = 0.01) -> List[str]:
+    """Diff a committed baseline dict against a fresh collection under
+    its recorded config. Returns human-readable drift lines (empty =
+    the run still matches within ``rel_tol`` relative tolerance)."""
+    fresh = collect_baseline(**baseline.get("config", {}))
+    problems: List[str] = []
+    for fam, want in baseline.get("families", {}).items():
+        got = fresh["families"].get(fam)
+        if got is None:
+            problems.append(f"{fam}: family missing from fresh run")
+            continue
+        for key in ("round_time_s", "throughput"):
+            a, b = float(want[key]), float(got[key])
+            rel = abs(b - a) / max(abs(a), 1e-30)
+            if rel > rel_tol:
+                problems.append(
+                    f"{fam}.{key}: baseline {a:.6g} vs fresh {b:.6g} "
+                    f"(rel drift {rel:.3%} > tol {rel_tol:.3%})")
+    return problems

@@ -40,7 +40,16 @@ mode, transport, benchmark, network, workers, stream_chunks — the last
 two generate scaling curves) and runs the full cross-product of their
 values in one invocation. Fabric-family rows carry per-method
 interceptor metrics (call counts + latency percentiles) under
-"rpc_metrics" in the --json output.
+"rpc_metrics" and the tracer's per-phase latency breakdown under
+"rpc_phases" in the --json output; --json writes a versioned envelope
+{"schema": 2, "rows": [...]}.
+
+--trace OUT.json exports the run's span trees as Chrome trace-event
+JSON (load in Perfetto / chrome://tracing; one track per endpoint).
+--baseline PATH collects the deterministic modeled round-time /
+throughput of all six families and writes the baseline file CI diffs;
+--check-baseline PATH re-collects under the file's recorded config and
+exits 1 on drift beyond --baseline-tolerance.
 """
 import argparse
 import json
@@ -106,7 +115,8 @@ def _build_config(args, payload_spec, **overrides):
         network=args.network, transport=args.transport,
         stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
         deadline_s=args.deadline_s, admission_limit=args.admission_limit,
-        cluster_spec=args.cluster_spec, payload_spec=payload_spec)
+        cluster_spec=args.cluster_spec, payload_spec=payload_spec,
+        trace=args.trace is not None)
     base.update(overrides)
     return BenchConfig(**base)
 
@@ -139,6 +149,24 @@ def _print_single(st, cfg, args) -> None:
         unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s"}.get(
             st.name, "RPC/s")
         print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
+    _print_phases(st)
+
+
+def _print_phases(st) -> None:
+    """Per-phase latency breakdown table (fabric families with a
+    tracer): mean per-call time in each phase, per method."""
+    if not st.rpc_phases:
+        return
+    from repro.rpc.tracing import PHASES
+    print("phase breakdown (mean us/call):")
+    for meth in sorted(st.rpc_phases):
+        rec = st.rpc_phases[meth]
+        calls = max(1, rec["calls"])
+        cells = "  ".join(
+            f"{p} {rec['phases'].get(p, 0.0) / calls * 1e6:.1f}"
+            for p in PHASES if rec["phases"].get(p, 0.0) > 0.0)
+        print(f"  {meth:24s} {rec['calls']} calls  "
+              f"e2e {rec['end_to_end_s'] / calls * 1e6:.1f}  {cells}")
 
 
 def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
@@ -186,6 +214,8 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
                    value=st.derived.get(m, st.derived.get("rpcs_per_s")))
         if st.rpc_metrics:
             row["rpc_metrics"] = st.rpc_metrics
+        if st.rpc_phases:
+            row["rpc_phases"] = st.rpc_phases
         rows.append(row)
     return rows
 
@@ -269,8 +299,23 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="comma-separated axes to cross-product in one "
                          f"run: {','.join(SWEEP_AXES)}")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the result rows as JSON "
+                    help="also write the result rows as a versioned "
+                         "JSON envelope {schema: 2, rows: [...]} "
                          "('-' for stdout)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="fabric families, single run: export the "
+                         "run's span trees as Chrome trace-event JSON "
+                         "(Perfetto / chrome://tracing)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="collect the deterministic modeled baseline "
+                         "(round time + throughput, all six families) "
+                         "and write it to PATH, then exit")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="re-collect under PATH's recorded config and "
+                         "exit 1 on drift beyond --baseline-tolerance")
+    ap.add_argument("--baseline-tolerance", type=float, default=0.01,
+                    help="relative drift tolerance for "
+                         "--check-baseline (default 0.01 = 1%%)")
     args = ap.parse_args(argv)
 
     # --categories: validate against the payload generator's known
@@ -298,6 +343,20 @@ def main(argv: Optional[List[str]] = None) -> None:
         ap.error("--deadline-s/--admission-limit need a fabric "
                  f"benchmark ({', '.join(FABRIC_BENCHMARKS)}); got "
                  f"--benchmark {args.benchmark}")
+    if args.baseline_tolerance <= 0:
+        ap.error(f"--baseline-tolerance must be > 0, got "
+                 f"{args.baseline_tolerance}")
+    if args.baseline is not None and args.check_baseline is not None:
+        ap.error("--baseline and --check-baseline are mutually "
+                 "exclusive (write a file OR diff against one)")
+    if args.trace is not None:
+        if args.sweep is not None:
+            ap.error("--trace needs a single run, not --sweep (one "
+                     "trace file per run)")
+        if args.benchmark not in FABRIC_BENCHMARKS:
+            ap.error(f"--trace needs a fabric benchmark "
+                     f"({', '.join(FABRIC_BENCHMARKS)}); got "
+                     f"--benchmark {args.benchmark}")
 
     axes = None
     if args.sweep is not None:
@@ -348,6 +407,36 @@ def main(argv: Optional[List[str]] = None) -> None:
 
     from repro.core import bench
 
+    # baseline telemetry actions are standalone: collect/diff the
+    # deterministic modeled numbers and exit without running a bench
+    if args.check_baseline is not None:
+        try:
+            with open(args.check_baseline) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            ap.error(f"--check-baseline: {e}")
+        problems = bench.check_baseline(
+            data, rel_tol=args.baseline_tolerance)
+        if problems:
+            for p in problems:
+                print(f"BASELINE DRIFT: {p}")
+            sys.exit(1)
+        print(f"baseline OK: {len(data.get('families', {}))} families "
+              f"within {args.baseline_tolerance:.2%}")
+        return
+    if args.baseline is not None:
+        kw = {"network": args.network} if args.network else {}
+        data = bench.collect_baseline(**kw)
+        text = json.dumps(data, indent=2, sort_keys=True)
+        if args.baseline == "-":
+            sys.stdout.write(text + "\n")
+        else:
+            with open(args.baseline, "w") as f:
+                f.write(text + "\n")
+            print(f"wrote baseline ({len(data['families'])} families, "
+                  f"{data['config']['network']}) to {args.baseline}")
+        return
+
     payload_spec = None
     if args.arch:
         from repro.configs import get_config
@@ -375,8 +464,17 @@ def main(argv: Optional[List[str]] = None) -> None:
                                          st.derived.get("rpcs_per_s"))}]
         if st.rpc_metrics:
             rows[0]["rpc_metrics"] = st.rpc_metrics
+        if st.rpc_phases:
+            rows[0]["rpc_phases"] = st.rpc_phases
+        if args.trace:
+            if st.tracer is None:
+                ap.error(f"--trace: the {cfg.transport} run attached "
+                         f"no tracer")
+            st.tracer.export_chrome(args.trace)
+            print(f"wrote Chrome trace ({len(st.tracer.spans())} "
+                  f"spans) to {args.trace}")
     if args.json:
-        text = json.dumps(rows, indent=2)
+        text = json.dumps({"schema": 2, "rows": rows}, indent=2)
         if args.json == "-":
             sys.stdout.write(text + "\n")
         else:

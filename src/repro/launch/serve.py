@@ -21,6 +21,11 @@ and per-endpoint interceptor metrics:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
       --transport cluster --cluster-spec cluster.json --unary
+
+``--trace out.json`` attaches a ``rpc.Tracer`` to the serving fabric
+(loopback or cluster) and exports every request's span tree — queue /
+credit-stall / wire / server / reply phases, retries and shard
+failovers included — as Chrome trace-event JSON for Perfetto.
 """
 from __future__ import annotations
 
@@ -37,6 +42,13 @@ from repro.serve.engine import (DISPATCH_POLICIES, ServeConfig,
                                 ServeEngine)
 
 
+def _export_trace(tracer, path: str) -> None:
+    if tracer is None:
+        return
+    tracer.export_chrome(path)
+    print(f"trace          : {len(tracer.spans())} spans -> {path}")
+
+
 def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
                           vocab_size: int) -> None:
     """One request per worker endpoint per round, all flushed (and so
@@ -50,11 +62,12 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
     # flight (single-PS specs have no shard to fail over to)
     metrics = rpclib.MetricsInterceptor(per_endpoint=True,
                                         endpoint_name=cluster.name_of)
+    tracer = rpclib.Tracer() if args.trace else None
     fabric, stubs = engine.serve_cluster(
         cluster, policy=args.policy,
         client_interceptors=[metrics,
                              rpclib.RetryInterceptor(max_attempts=4)],
-        server_interceptors=[metrics])
+        server_interceptors=[metrics], tracer=tracer)
     rng = np.random.default_rng(0)
     print(f"cluster        : {len(stubs)} worker endpoint(s) -> "
           f"{len(next(iter(stubs.values())).servers)} ps endpoint(s), "
@@ -87,6 +100,7 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
     per_ep = {k: v["calls"] for k, v in metrics.snapshot().items()
               if "@" in k and not k.startswith("server:")}
     print(f"per-endpoint   : {per_ep}")
+    _export_trace(tracer, args.trace)
 
 
 def main() -> None:
@@ -113,6 +127,9 @@ def main() -> None:
     ap.add_argument("--policy", default="round_robin",
                     choices=DISPATCH_POLICIES,
                     help="PS shard dispatch policy (cluster transport)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the serving fabric's span trees as "
+                         "Chrome trace-event JSON (Perfetto)")
     args = ap.parse_args()
 
     if args.transport == "cluster" and args.cluster_spec is None:
@@ -122,6 +139,9 @@ def main() -> None:
     if args.transport == "cluster" and args.no_rpc:
         ap.error("--no-rpc bypasses the fabric; it cannot combine with "
                  "--transport cluster")
+    if args.trace and args.no_rpc:
+        ap.error("--trace records fabric spans; it cannot combine with "
+                 "--no-rpc")
 
     cluster = None
     if args.transport == "cluster":
@@ -147,8 +167,11 @@ def main() -> None:
         return
 
     channel = None
+    tracer = None
     if not args.no_rpc:
-        _, channel = engine.serve_loopback()
+        from repro import rpc as rpclib
+        tracer = rpclib.Tracer() if args.trace else None
+        _, channel = engine.serve_loopback(tracer=tracer)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -172,6 +195,8 @@ def main() -> None:
         print(f"request {i} [{via}]: batch={args.batch} "
               f"new={out.shape[1]} {dt*1e3:.1f} ms ({tps:.1f} tok/s) "
               f"sample={out[0][:8].tolist()}")
+    if args.trace:
+        _export_trace(tracer, args.trace)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,13 @@ Layers, bottom-up:
               admission control (ResourceExhausted rejections)
   service     declarative ServiceDef/MethodSpec + generated Stubs —
               the gRPC-style API surface over the fabric
+  tracing     distributed tracing: per-call span trees (phases, wire
+              spans, server spans) on the fabric clock, trace ids
+              propagated in a frame-header word, Chrome trace-event
+              export (Perfetto) + per-phase latency breakdown
+  telemetry   bounded latency histograms (exact up to a cap, then
+              log-bucketed) behind a shared HistogramRegistry — what
+              MetricsInterceptor records percentiles into
 
 See docs/RPC.md for the architecture and transport matrix.
 """
@@ -62,6 +69,8 @@ from repro.rpc.framing import (FLAG_ERROR, FLAG_FAULT, FLAG_ONE_WAY,
                                FLAG_REPLY, FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, Frame, decode, encode,
                                make_frame, method_id, stream_chunk)
+from repro.rpc.telemetry import BoundedHistogram, HistogramRegistry
+from repro.rpc.tracing import PHASES, Span, Tracer
 from repro.rpc.transport import (Delivery, FaultInjectionTransport,
                                  LoopbackTransport, Message,
                                  SimulatedTransport, Transport,
@@ -69,19 +78,21 @@ from repro.rpc.transport import (Delivery, FaultInjectionTransport,
                                  spec_of)
 
 __all__ = [
-    "AdmissionInterceptor", "BIDI", "BidiStream", "Call", "CallContext",
+    "AdmissionInterceptor", "BIDI", "BidiStream", "BoundedHistogram",
+    "Call", "CallContext",
     "Channel", "ChunkGate", "CLIENT_STREAM", "CONFORMANCE_SERVICE",
     "ClientInterceptor", "ClusterSpec", "ClusterTransport", "Codec",
     "CompletionQueue", "CreditWindow", "DEADLINE_EXCEEDED",
     "DeadlineInterceptor", "Delivery", "EXCHANGE_SERVICE",
     "EndpointSpec", "Event", "FaultInjectionTransport", "FlightReport",
-    "FlowStats", "Frame", "HANDLER_FAULTS", "INCAST_SERVICE",
-    "LINK_FAULT", "LinkSpec", "LoopbackTransport", "Message",
-    "MethodSpec", "MetricsInterceptor", "RING_SERVICE",
-    "ResourceExhausted", "RetryInterceptor", "RpcError", "RpcFabric",
-    "SERVER_STREAM", "Server", "ServerContext", "ServerInterceptor",
-    "ServerStream", "ServiceDef", "SimulatedTransport", "StreamHandle",
-    "Stub", "StubMethod", "Transport", "TransientError", "UNARY",
+    "FlowStats", "Frame", "HANDLER_FAULTS", "HistogramRegistry",
+    "INCAST_SERVICE", "LINK_FAULT", "LinkSpec", "LoopbackTransport",
+    "Message", "MethodSpec", "MetricsInterceptor", "PHASES",
+    "RING_SERVICE", "ResourceExhausted", "RetryInterceptor", "RpcError",
+    "RpcFabric", "SERVER_STREAM", "Server", "ServerContext",
+    "ServerInterceptor", "ServerStream", "ServiceDef",
+    "SimulatedTransport", "Span", "StreamHandle", "Stub", "StubMethod",
+    "Tracer", "Transport", "TransientError", "UNARY",
     "UnaryCall", "WindowConfig", "as_cluster_spec",
     "cluster_fc_round_time", "cluster_incast_round_time",
     "cluster_ring_round_time", "conformance_handlers", "decode",

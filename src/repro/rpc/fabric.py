@@ -51,6 +51,14 @@ already-expired work before invoking any handler. Messages a
 ``FLAG_FAULT``: their credits are refunded and the call fails with a
 retryable transient error.
 
+A :class:`tracing.Tracer` attached at construction
+(``RpcFabric(..., tracer=t)``) records a span tree per call on the
+fabric clock — queue/credit_stall/wire/server/reply/backoff phases on
+the client track, admit/shed/handler spans on the server tracks — with
+the trace id stamped into the frame header at flight departure
+alongside the budget, so spans stay attributed across cluster
+endpoints, retries, and failover re-routes.
+
 Transports with ``dispatches=False`` (the collective transport) are pure
 exchange datapaths: delivery itself completes the call and the reply
 flight is skipped (the 64B ack is priced inside the transport).
@@ -72,6 +80,7 @@ from repro.rpc.interceptors import (RESOURCE_EXHAUSTED, TRANSIENT_PREFIX,
                                     CallContext, ClientInterceptor,
                                     ResourceExhausted, ServerContext,
                                     ServerInterceptor, TransientError)
+from repro.rpc.tracing import Tracer
 from repro.rpc.transport import Message, Transport
 
 
@@ -174,13 +183,18 @@ class Server:
 
     def __init__(self, endpoint: int, *,
                  interceptors=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer=None):
         self.endpoint = endpoint
         # a list, or a zero-arg callable returning one (the fabric
         # passes a getter so reassigning fabric.server_interceptors
         # after add_server still takes effect)
         self._interceptors = interceptors
         self._clock = clock
+        # a Tracer, or a zero-arg getter (the fabric passes one so
+        # attaching a tracer later reaches existing servers); server
+        # spans — admit/shed/handler — land on this endpoint's track
+        self._tracer_src = tracer
         self._methods: Dict[int, Tuple[str, Callable, str]] = {}
         self._services: Set[str] = set()
         self._streams: Dict[int, List[List[np.ndarray]]] = {}
@@ -200,6 +214,11 @@ class Server:
         if callable(it):
             return it()
         return it if it is not None else []
+
+    @property
+    def tracer(self) -> Optional[Tracer]:
+        t = self._tracer_src
+        return t() if callable(t) else t
 
     def add_service(self, service, handlers) -> "Server":
         """Bind every method of ``service`` (a ``ServiceDef``) at once.
@@ -274,19 +293,30 @@ class Server:
                 queue_depth: int = 0):
         """Run one handler invocation through the server interceptor
         chain: on_receive outer->inner, on_done inner->outer (with the
-        fault when the handler raised)."""
+        fault when the handler raised). An attached tracer gets one
+        ``handler`` span per invocation on this endpoint's track."""
         chain = self.interceptors
-        if not chain:
+        tracer = self.tracer
+        if not chain and tracer is None:
             return handler(*args)
-        sctx = self._sctx(frame, name, kind, deadline_s, queue_depth)
+        sctx = (self._sctx(frame, name, kind, deadline_s, queue_depth)
+                if chain else None)
         for si in chain:
             si.on_receive(sctx)
+        t0 = self._clock() if tracer is not None else 0.0
         try:
             out = handler(*args)
         except HANDLER_FAULTS as e:
+            if tracer is not None:
+                tracer.server_span(frame, self.endpoint,
+                                   f"handler {name}", t0, self._clock(),
+                                   ok=False, error=str(e))
             for si in reversed(chain):
                 si.on_done(sctx, False, str(e))
             raise
+        if tracer is not None:
+            tracer.server_span(frame, self.endpoint, f"handler {name}",
+                               t0, self._clock(), ok=True)
         for si in reversed(chain):
             si.on_done(sctx, True)
         return out
@@ -312,6 +342,11 @@ class Server:
         self.abort_call(frame.call_id)
         if frame.is_stream and not frame.stream_end:
             self._dead_streams.add(frame.call_id)
+        tracer = self.tracer
+        if tracer is not None:
+            t = self._clock()
+            tracer.server_span(frame, self.endpoint, "shed", t, t,
+                               reason=DEADLINE_EXCEEDED)
         chain = self.interceptors
         if chain:
             sctx = self._sctx(frame, name, kind, deadline_s, queue_depth)
@@ -339,6 +374,13 @@ class Server:
                 self.abort_call(frame.call_id)
                 if frame.is_stream and not frame.stream_end:
                     self._dead_streams.add(frame.call_id)
+                tracer = self.tracer
+                if tracer is not None:
+                    t = self._clock()
+                    tracer.server_span(frame, self.endpoint,
+                                       "admission_reject", t, t,
+                                       reason=reason,
+                                       queue_depth=queue_depth)
                 if frame.one_way:
                     return []
                 return [_error_reply(
@@ -372,6 +414,12 @@ class Server:
                                    queue_depth)
             if rejected is not None:
                 return rejected
+            tracer = self.tracer
+            if tracer is not None:
+                # the admission decision itself, on the server track
+                t = self._clock()
+                tracer.server_span(frame, self.endpoint, "admit", t, t,
+                                   queue_depth=queue_depth)
         is_stream = frame.is_stream
         if is_stream != (kind in (CLIENT_STREAM, BIDI)):
             got = "streaming" if is_stream else "unary"
@@ -601,10 +649,18 @@ class RpcFabric:
                  client_interceptors: Optional[
                      List[ClientInterceptor]] = None,
                  server_interceptors: Optional[
-                     List[ServerInterceptor]] = None):
+                     List[ServerInterceptor]] = None,
+                 tracer: Optional[Tracer] = None):
         self.transport = transport
         self.window_bytes = window_bytes
         self.window_msgs = window_msgs
+        #: optional distributed tracing (repro.rpc.tracing): every call
+        #: gets a span tree — phases on the client track, admit/shed/
+        #: handler spans on the server tracks — with its trace id
+        #: propagated in the frame header across endpoints
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.bind(self)
         self.cq = CompletionQueue()
         self.client_interceptors: List[ClientInterceptor] = \
             list(client_interceptors or [])
@@ -700,7 +756,8 @@ class RpcFabric:
         # later still reaches existing servers
         srv = Server(endpoint,
                      interceptors=lambda: self.server_interceptors,
-                     clock=self.now)
+                     clock=self.now,
+                     tracer=lambda: self.tracer)
         self.servers[endpoint] = srv
         return srv
 
@@ -735,6 +792,8 @@ class RpcFabric:
                 channel.window.stats.stalled += 1
             channel.backlogged += 1
             self._backlog.append((channel, msg))
+            if self.tracer is not None:
+                self.tracer.on_stall(frame.call_id)
 
     def register_handle(self, handle: StreamHandle, *,
                         kind: str = SERVER_STREAM,
@@ -767,6 +826,8 @@ class RpcFabric:
             else None,
             request=request)
         self._ctx[call_id] = ctx
+        if self.tracer is not None:
+            self.tracer.on_call_start(ctx, channel.src)
         for ic in self.client_interceptors:
             ic.on_start(ctx)
         return ctx
@@ -824,6 +885,11 @@ class RpcFabric:
             handle.call_id = new_id
             handle.channel = ctx.channel
             self._handles[new_id] = handle
+        if self.tracer is not None:
+            # attempt N closed at the failure, backoff paid on the
+            # clock, attempt N+1 (possibly re-routed) opens now
+            t_fail = ctx.end_s if ctx.end_s is not None else self.now()
+            self.tracer.on_retry(ctx, old_id, t_fail, self.now())
         self._emit(Event(new_id, "retry"))
         self.submit_raw(ctx.channel, frame)
 
@@ -842,6 +908,8 @@ class RpcFabric:
             if self._client_complete(ctx, ev):
                 return                       # retried; future stays open
         call.done, call.result, call.error = True, frame, error
+        if self.tracer is not None and ctx is not None:
+            self.tracer.on_terminal(ctx, kind, error)
         self._emit(ev)
         # the caller holds the Call object; the fabric is done with it
         self._calls.pop(call.call_id, None)
@@ -862,6 +930,8 @@ class RpcFabric:
             if self._client_complete(ctx, ev):
                 return                  # retried; the handle stays open
         handle.done, handle.error = True, error
+        if self.tracer is not None and ctx is not None:
+            self.tracer.on_terminal(ctx, ev.kind, error)
         self._emit(ev)
         self._handles.pop(handle.call_id, None)
         self._ctx.pop(handle.call_id, None)
@@ -876,9 +946,10 @@ class RpcFabric:
         """Queue one server->client stream chunk behind the channel's
         reverse window; admitted chunks join the next flight."""
         msg = Message(channel.dst, channel.src, frame)
-        self._pending.extend((channel, m) for m in
-                             channel.rx_gate.offer(msg,
-                                                   frame.total_bytes))
+        admitted = channel.rx_gate.offer(msg, frame.total_bytes)
+        self._pending.extend((channel, m) for m in admitted)
+        if self.tracer is not None and not admitted:
+            self.tracer.on_stall(frame.call_id)
 
     def _on_client_chunk(self, m: Message) -> None:
         """A server->client stream chunk was delivered: hand it to the
@@ -908,19 +979,26 @@ class RpcFabric:
         return any(c.deadline_s is not None for c in self._ctx.values())
 
     def _stamp_budget(self, msg: Message, now: float) -> Message:
-        """Deadline propagation (gRPC's ``grpc-timeout``): stamp the
-        remaining budget into a request frame's header word at flight
-        departure, so the receiving server can shed work whose budget
-        the wire consumed before the handler ever runs."""
+        """Context propagation at flight departure: stamp the remaining
+        deadline budget (gRPC's ``grpc-timeout``) and the call's trace
+        id (the census-metadata analogue) into a request frame's header
+        words, so the receiving server can shed work whose budget the
+        wire consumed and attribute its spans to the originating
+        call."""
         f = msg.frame
         if f.is_reply:
             return msg
         ctx = self._ctx.get(f.call_id)
-        if ctx is None or ctx.deadline_s is None:
+        if ctx is None:
             return msg
-        budget = max(1, min(framing.MAX_BUDGET_US,
-                            int((ctx.deadline_s - now) * 1e6)))
-        return replace(msg, frame=replace(f, budget_us=budget))
+        budget = f.budget_us
+        if ctx.deadline_s is not None:
+            budget = max(1, min(framing.MAX_BUDGET_US,
+                                int((ctx.deadline_s - now) * 1e6)))
+        if budget == f.budget_us and ctx.trace_id == f.trace_id:
+            return msg
+        return replace(msg, frame=replace(f, budget_us=budget,
+                                          trace_id=ctx.trace_id))
 
     def _cancel_expired(self) -> int:
         now = self.now()
@@ -996,6 +1074,8 @@ class RpcFabric:
         stragglers of the call can be consumed without dispatching."""
         cid = m.frame.call_id
         self._refund_message(m)
+        if self.tracer is not None:
+            self.tracer.on_fault(m, self.now())
         ctx = self._ctx.get(cid)
         if ctx is not None:
             self._cancel(ctx, LINK_FAULT, kind="error")
@@ -1050,12 +1130,21 @@ class RpcFabric:
             flight = self._pending
             self._pending = []
             t_send = self.now()     # flight departure: budgets stamped
-            delivery = self.transport.deliver(
-                [self._stamp_budget(m, t_send) for _, m in flight])
+            stamped = [self._stamp_budget(m, t_send) for _, m in flight]
+            if self.tracer is not None:
+                for m in stamped:
+                    if not m.frame.is_reply:
+                        self.tracer.on_depart(m.frame.call_id, t_send)
+            delivery = self.transport.deliver(stamped)
             rep.flights += 1
             rep.rounds += delivery.rounds
             rep.messages += len(delivery.messages)
             rep.elapsed_s += delivery.elapsed_s
+            if self.tracer is not None:
+                t_arrive = t_send + delivery.elapsed_s
+                for m in delivery.messages:
+                    if not (m.frame.flags & framing.FLAG_FAULT):
+                        self.tracer.on_wire(m, t_send, t_arrive)
             replies: List[Message] = []
             dead: Set[int] = set()      # calls killed by a link fault
             # per-dst call_ids landed this flight: the queue-depth unit
@@ -1111,12 +1200,17 @@ class RpcFabric:
                 depth = len(landed) \
                     + sum(1 for k in srv._streams if k not in landed) \
                     + sum(1 for k in srv._bidi_seq if k not in landed)
+                if self.tracer is not None:
+                    self.tracer.on_server(cid, self.now())
                 outs = srv.dispatch(m.frame, deadline_s=deadline,
                                     queue_depth=depth)
                 self._emit(Event(m.frame.call_id, "received",
                                  payload=_spec_only(m.frame)))
                 plain = [o for o in outs if not o.is_stream]
                 chunks = [o for o in outs if o.is_stream]
+                if self.tracer is not None:
+                    self.tracer.on_dispatched(
+                        cid, self.now(), replying=bool(plain or chunks))
                 if plain:
                     # request credits return when the reply lands
                     self._awaiting_grant.setdefault(m.frame.call_id,
@@ -1141,11 +1235,17 @@ class RpcFabric:
                     assert ch is not None
                     self._offer_chunk(ch, o)
             if replies:
+                t_rsend = self.now()
                 rdel = self.transport.deliver(replies)
                 rep.flights += 1
                 rep.rounds += rdel.rounds
                 rep.replies += len(rdel.messages)
                 rep.elapsed_s += rdel.elapsed_s
+                if self.tracer is not None:
+                    t_rarr = t_rsend + rdel.elapsed_s
+                    for m in rdel.messages:
+                        if not (m.frame.flags & framing.FLAG_FAULT):
+                            self.tracer.on_wire(m, t_rsend, t_rarr)
                 for m in rdel.messages:
                     # grant the REQUEST's credits (reply size differs);
                     # even for a LOST reply — the server consumed the
@@ -1159,6 +1259,8 @@ class RpcFabric:
                         # the reply was lost to an injected link fault:
                         # the call fails transiently (a retry re-runs
                         # the handler — at-least-once, like gRPC)
+                        if self.tracer is not None:
+                            self.tracer.on_fault(m, self.now())
                         ctx = self._ctx.get(m.frame.call_id)
                         if ctx is not None:
                             self._cancel(ctx, LINK_FAULT, kind="error")
@@ -1208,6 +1310,9 @@ class RpcFabric:
                 continue
             msgs = ch.rx_gate.pump(force_one=force_one and not admitted)
             self._pending.extend((ch, m) for m in msgs)
+            if self.tracer is not None:
+                for m in msgs:
+                    self.tracer.on_admit(m.frame.call_id, reply=True)
             admitted += len(msgs)
         return admitted
 
@@ -1227,10 +1332,14 @@ class RpcFabric:
                 self._pending.append((ch_, msg))
                 ch_.backlogged -= 1
                 admitted += 1
+                if self.tracer is not None:
+                    self.tracer.on_admit(msg.frame.call_id)
             elif force_one and admitted == 0:
                 self._pending.append((ch_, msg))
                 ch_.backlogged -= 1
                 admitted += 1
+                if self.tracer is not None:
+                    self.tracer.on_admit(msg.frame.call_id)
             else:
                 blocked.add(id(ch_))
                 rest.append((ch_, msg))

@@ -16,14 +16,21 @@ paper's payload modes:
 Header layout (uint32 words, little-endian), zero-padded to a multiple
 of the 128-byte TPU lane so it can itself be a pack-kernel buffer:
 
-  [MAGIC, call_id, method_id, flags, seq, budget_us, n_buffers,
-   size_0 .. size_{n-1}]
+  [MAGIC, call_id, method_id, flags, seq, budget_us, trace_id,
+   n_buffers, size_0 .. size_{n-1}]
 
 ``budget_us`` is the call's remaining deadline budget in microseconds
 at the moment the frame left the sender — the wire form of gRPC's
 ``grpc-timeout`` header (0 = no deadline). The fabric stamps it at
 flight departure and the receiving server sheds frames whose budget the
 wire already consumed, before invoking any handler.
+
+``trace_id`` is the call's distributed-tracing context (the gRPC
+census-metadata analogue, see :mod:`repro.rpc.tracing`): stamped at
+flight departure alongside the budget, propagated unchanged into
+replies and reply chunks, and stable across retries and failover
+re-routes — the receiving endpoint attributes its spans to the
+originating call through it (0 = untraced).
 
 ``seq`` orders the chunks of one stream (0 for unary frames). Stream
 *chunks* (``stream_chunk``) carry FLAG_STREAM and a running seq; the
@@ -69,6 +76,9 @@ FLAG_FAULT = 64
 #: expiring mid-flight is indistinguishable from no deadline anyway)
 MAX_BUDGET_US = 0xFFFFFFFF
 
+#: trace_id is a uint32 header word (0 = untraced)
+MAX_TRACE_ID = 0xFFFFFFFF
+
 _WORD = 4
 
 
@@ -90,9 +100,11 @@ class Frame:
     bufs: Optional[List[np.ndarray]] = None   # uint8, len == len(sizes)
     seq: int = 0                     # chunk index within a stream
     budget_us: int = 0               # remaining deadline budget (0=none)
+    trace_id: int = 0                # tracing context (0=untraced)
 
     def __post_init__(self):
         assert 0 <= self.budget_us <= MAX_BUDGET_US, self.budget_us
+        assert 0 <= self.trace_id <= MAX_TRACE_ID, self.trace_id
         if self.bufs is not None:
             assert len(self.bufs) == len(self.sizes)
             for b, s in zip(self.bufs, self.sizes):
@@ -136,7 +148,7 @@ class Frame:
         if error:
             flags |= FLAG_ERROR
         return Frame(self.call_id, self.method, flags, tuple(sizes),
-                     bufs)
+                     bufs, trace_id=self.trace_id)
 
     def reply_chunk(self, bufs: Optional[List[np.ndarray]], *, seq: int,
                     end: bool = False,
@@ -155,7 +167,8 @@ class Frame:
         flags = ((self.flags & FLAG_SERIALIZED) | FLAG_REPLY | FLAG_STREAM
                  | (FLAG_STREAM_END if end else 0))
         return Frame(self.call_id, self.method, flags,
-                     tuple(int(s) for s in sizes), bufs, seq=seq)
+                     tuple(int(s) for s in sizes), bufs, seq=seq,
+                     trace_id=self.trace_id)
 
 
 def make_frame(call_id: int, method: str, bufs: Optional[List[np.ndarray]],
@@ -199,14 +212,15 @@ def stream_chunk(call_id: int, method: str,
 # header
 # ---------------------------------------------------------------------------
 
-# MAGIC, call_id, method, flags, seq, budget_us, n_buffers
-_FIXED_WORDS = 7
+# MAGIC, call_id, method, flags, seq, budget_us, trace_id, n_buffers
+_FIXED_WORDS = 8
 
 
 def header_bytes(frame: Frame) -> np.ndarray:
     """Little-endian uint32 header, zero-padded to a LANE multiple."""
     words = [MAGIC, frame.call_id, frame.method, frame.flags, frame.seq,
-             frame.budget_us, frame.n_buffers, *frame.sizes]
+             frame.budget_us, frame.trace_id, frame.n_buffers,
+             *frame.sizes]
     raw = np.asarray(words, dtype="<u4").view(np.uint8)
     out = np.zeros(_pad128(raw.size), dtype=np.uint8)
     out[:raw.size] = raw
@@ -217,14 +231,14 @@ def parse_header(data: np.ndarray) -> Tuple[Frame, int]:
     """Parse a header prefix -> (spec-only Frame, header length in bytes)."""
     head = np.ascontiguousarray(data[:LANE]).view("<u4")
     assert int(head[0]) == MAGIC, f"bad frame magic {int(head[0]):#x}"
-    call_id, method, flags, seq, budget_us, n = (
+    call_id, method, flags, seq, budget_us, trace_id, n = (
         int(head[1]), int(head[2]), int(head[3]), int(head[4]),
-        int(head[5]), int(head[6]))
+        int(head[5]), int(head[6]), int(head[7]))
     hdr_len = _pad128((_FIXED_WORDS + n) * _WORD)
     words = np.ascontiguousarray(data[:hdr_len]).view("<u4")
     sizes = tuple(int(s) for s in words[_FIXED_WORDS:_FIXED_WORDS + n])
     return Frame(call_id, method, flags, sizes, None, seq=seq,
-                 budget_us=budget_us), hdr_len
+                 budget_us=budget_us, trace_id=trace_id), hdr_len
 
 
 # ---------------------------------------------------------------------------

@@ -58,10 +58,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
 from repro.rpc import framing
 from repro.rpc.completion import Event
+from repro.rpc.telemetry import HistogramRegistry
 
 
 class TransientError(Exception):
@@ -94,6 +93,10 @@ class CallContext:
     end_s: Optional[float] = None
     attempts: int = 1
     chunks: int = 0                # response stream chunks delivered
+    #: distributed-tracing context (0 = untraced): assigned by the
+    #: fabric's Tracer at call start, stamped into the frame header at
+    #: flight departure, stable across retries and failover re-routes
+    trace_id: int = 0
     # retained for retries (unary + server-stream; bufs caller-owned)
     request: Optional[framing.Frame] = None
     meta: Dict[str, Any] = field(default_factory=dict)
@@ -198,12 +201,24 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
     client endpoints get separate counts and percentiles — the
     per-endpoint breakdown a cluster run reports. ``endpoint_name``
     labels the endpoints (a cluster transport's ``endpoint_name``
-    renders names instead of indices)."""
+    renders names instead of indices).
+
+    Latency distributions live in a :class:`telemetry.HistogramRegistry`
+    (one bounded histogram per method key — exact percentiles for small
+    runs, log-bucketed constant memory past
+    ``telemetry.EXACT_CAP`` samples, instead of the unbounded per-call
+    list this class used to keep). Pass ``registry=`` to share one sink
+    across several interceptors; ``histogram(method)`` exposes the full
+    distribution (p999 etc.) beyond the 4 percentiles ``snapshot()``
+    reports."""
 
     def __init__(self, *, per_endpoint: bool = False,
-                 endpoint_name: Optional[Callable[[int], str]] = None):
+                 endpoint_name: Optional[Callable[[int], str]] = None,
+                 registry: Optional[HistogramRegistry] = None):
         self.per_endpoint = per_endpoint
         self._ep_name = endpoint_name or str
+        self.registry = registry if registry is not None \
+            else HistogramRegistry()
         self._recs: Dict[str, Dict[str, Any]] = {}
         # per-endpoint queue depth, refreshed by on_admit each dispatch
         # — the load signal an AdmissionInterceptor installed INNER to
@@ -213,8 +228,13 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
     def _rec(self, method: str) -> Dict[str, Any]:
         return self._recs.setdefault(method, {
             "calls": 0, "ok": 0, "errors": 0, "deadline_exceeded": 0,
-            "retries": 0, "chunks": 0, "shed": 0, "rejected": 0,
-            "latencies_s": []})
+            "retries": 0, "chunks": 0, "shed": 0, "rejected": 0})
+
+    def histogram(self, method: str):
+        """The method's full latency distribution (a
+        :class:`telemetry.BoundedHistogram`, seconds; None before the
+        first completion)."""
+        return self.registry.get("latency:" + method)
 
     def _client_keys(self, ctx: CallContext) -> List[str]:
         keys = [ctx.method]
@@ -227,6 +247,8 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         """Discard everything recorded so far (benchmarks call this
         after warmup so compile/warmup calls don't pollute the
         published percentiles)."""
+        for k in self._recs:
+            self.registry.remove("latency:" + k)
         self._recs.clear()
         self._depth.clear()
 
@@ -254,7 +276,8 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
             else:
                 rec["errors"] += 1
             if ctx.end_s is not None:
-                rec["latencies_s"].append(ctx.end_s - ctx.start_s)
+                self.registry.hist("latency:" + k).record(
+                    ctx.end_s - ctx.start_s)
         return None
 
     # server side --------------------------------------------------------
@@ -301,15 +324,14 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         """JSON-ready per-method summary with latency percentiles."""
         out: Dict[str, Dict[str, Any]] = {}
         for method, rec in self._recs.items():
-            row = {k: v for k, v in rec.items() if k != "latencies_s"}
-            lat = rec["latencies_s"]
-            if lat:
-                a = np.asarray(lat) * 1e6
+            row = dict(rec)
+            h = self.registry.get("latency:" + method)
+            if h is not None and h.count:
                 row["latency_us"] = {
-                    "mean": float(a.mean()),
-                    "p50": float(np.percentile(a, 50)),
-                    "p95": float(np.percentile(a, 95)),
-                    "p99": float(np.percentile(a, 99)),
+                    "mean": h.mean * 1e6,
+                    "p50": h.percentile(50) * 1e6,
+                    "p95": h.percentile(95) * 1e6,
+                    "p99": h.percentile(99) * 1e6,
                 }
             out[method] = row
         return out

@@ -131,14 +131,16 @@ class ServeEngine:
         })
 
     def serve_loopback(self, *, endpoint: int = 0, client: int = 1,
-                       serialized: bool = True):
+                       serialized: bool = True, tracer=None):
         """One-call wiring for single-host serving experiments: a
         loopback-transport fabric with this engine at ``endpoint``.
+        ``tracer`` (a ``rpc.Tracer``) records per-call span trees.
         Returns (fabric, client channel)."""
         from repro import rpc as rpclib
         fabric = rpclib.RpcFabric(
             rpclib.make_transport("loopback",
-                                  max(endpoint, client) + 1))
+                                  max(endpoint, client) + 1),
+            tracer=tracer)
         self.attach(fabric.add_server(endpoint))
         return fabric, fabric.channel(client, endpoint,
                                       serialized=serialized)
@@ -147,7 +149,8 @@ class ServeEngine:
                       policy: str = "round_robin", ps_job: str = "ps",
                       worker_job: str = "worker",
                       client_interceptors=None,
-                      server_interceptors=None, fault=None):
+                      server_interceptors=None, fault=None,
+                      tracer=None):
         """Multi-endpoint serving over a cluster transport: this
         engine's ``Serve`` service bound on every ``ps_job`` endpoint
         of ``cluster`` (a ``rpc.ClusterSpec`` / dict / JSON), one
@@ -163,7 +166,10 @@ class ServeEngine:
         in a seeded fault schedule; and endpoints that advertise an
         ``admission_limit`` in the spec get an ``AdmissionInterceptor``
         installed automatically, fed by a server-side
-        ``MetricsInterceptor`` when one is present in the chain."""
+        ``MetricsInterceptor`` when one is present in the chain.
+        ``tracer`` (a ``rpc.Tracer``) records per-call span trees —
+        spans follow calls across endpoints and through shard
+        failover re-routes."""
         from repro import rpc as rpclib
         from repro.rpc.cluster import as_cluster_spec
         cluster = as_cluster_spec(cluster)
@@ -180,7 +186,7 @@ class ServeEngine:
                                               **fault)
         fabric = rpclib.RpcFabric(
             transport, client_interceptors=client_interceptors,
-            server_interceptors=server_interceptors)
+            server_interceptors=server_interceptors, tracer=tracer)
         limits = cluster.admission_limits()
         if limits and not any(isinstance(si, rpclib.AdmissionInterceptor)
                               for si in fabric.server_interceptors):

@@ -617,7 +617,7 @@ def test_bench_comm_cluster_cli_json(tmp_path):
                      str(spec_path), "--stream-chunks", "2",
                      "--warmup", "0", "--duration", "0",
                      "--json", str(out)])
-    rows = json.loads(out.read_text())
+    rows = json.loads(out.read_text())["rows"]
     assert rows[0]["transport"] == "cluster"
     assert rows[0]["network"] == "cluster"
     keys = rows[0]["rpc_metrics"].keys()
@@ -665,7 +665,7 @@ def test_example_sweep_smoke(tmp_path, capsys):
         spec.loader.exec_module(mod)
         out = tmp_path / "rows.json"
         mod.main(["--quick", "--json", str(out)])
-        rows = json.loads(out.read_text())
+        rows = json.loads(out.read_text())["rows"]
     finally:
         sys.modules.pop(spec.name, None)
     # benchmark x workers x stream_chunks cross-product, ring + incast

@@ -453,7 +453,9 @@ def test_bench_comm_sweep_single_table(capsys, tmp_path):
                      "--transport", "simulated", "--network", "eth40g",
                      "--num-workers", "4", "--json", str(out)])
     table = capsys.readouterr().out
-    rows = _json.loads(out.read_text())
+    doc = _json.loads(out.read_text())
+    assert doc["schema"] == 2
+    rows = doc["rows"]
     assert len(rows) == 3 * 2              # schemes x modes
     combos = {(r["scheme"], r["mode"]) for r in rows}
     assert combos == {(s, m) for s in ("uniform", "random", "skew")

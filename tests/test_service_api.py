@@ -104,7 +104,7 @@ def test_sweep_benchmark_cross_stream_chunks_drops_fully_connected(
     bench_comm.main(["--sweep", "benchmark,stream_chunks",
                      "--transport", "simulated", "--network", "eth40g",
                      "--num-workers", "4", "--json", str(out)])
-    rows = json.loads(out.read_text())
+    rows = json.loads(out.read_text())["rows"]
     assert {r["benchmark"] for r in rows} == {"ring", "incast"}
     assert len(rows) == 2 * 4
 
@@ -473,6 +473,26 @@ def test_no_blanket_exception_handlers_inside_rpc():
     assert not offenders, offenders
 
 
+def test_no_wall_clock_reads_inside_rpc():
+    """The CI gate the wall-clock step enforces, as a test: the fabric
+    runs on ``RpcFabric.now()`` (the modeled transport clock when there
+    is one), so a stray ``time.time()``/``time.monotonic()`` inside
+    src/repro/rpc/ would silently mix wall time into modeled spans and
+    deadlines. Clock access is owned by fabric.py (``now()``) and the
+    tracing/telemetry modules that consume it."""
+    root = pathlib.Path(__file__).resolve().parents[1] \
+        / "src" / "repro" / "rpc"
+    pat = re.compile(r"time\.time\(|time\.monotonic\(")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        if p.name in ("tracing.py", "telemetry.py"):
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{p.name}:{i}: {line.strip()}")
+    assert not offenders, offenders
+
+
 def test_retry_not_triggered_by_permanent_errors():
     retry = rpc.RetryInterceptor(max_attempts=5)
     fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
@@ -687,7 +707,7 @@ def test_bench_comm_sweep_scaling_axes(tmp_path):
     bench_comm.main(["--sweep", "workers,stream_chunks",
                      "--benchmark", "ring", "--transport", "simulated",
                      "--network", "eth40g", "--json", str(out)])
-    rows = json.loads(out.read_text())
+    rows = json.loads(out.read_text())["rows"]
     assert len(rows) == 4 * 4
     combos = {(r["workers"], r["stream_chunks"]) for r in rows}
     assert combos == {(w, c) for w in (2, 4, 8, 16)
@@ -715,7 +735,7 @@ def test_bench_comm_json_carries_rpc_metrics(tmp_path):
     bench_comm.main(["--benchmark", "incast", "--transport", "simulated",
                      "--network", "eth40g", "--num-workers", "4",
                      "--fetch-ratio", "0.25", "--json", str(out)])
-    (row,) = json.loads(out.read_text())
+    (row,) = json.loads(out.read_text())["rows"]
     m = row["rpc_metrics"]["Incast/push_fetch"]
     assert m["calls"] > 0 and m["ok"] == m["calls"]
     assert m["latency_us"]["p50"] > 0

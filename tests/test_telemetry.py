@@ -1,0 +1,154 @@
+"""Bounded-histogram telemetry: the exact regime is byte-identical to
+np.percentile over the raw samples (the behavior the MetricsInterceptor
+tests pin), the bucketed regime is bounded-memory with monotone,
+conservatively-rounded percentiles, and the HistogramRegistry is the
+shared sink interceptors record into."""
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.rpc.telemetry import (EXACT_CAP, BoundedHistogram,
+                                 HistogramRegistry)
+
+
+# ---------------------------------------------------------------------------
+# exact regime
+# ---------------------------------------------------------------------------
+
+def test_exact_regime_matches_numpy():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(-9, 1.5, 1000)
+    h = BoundedHistogram()
+    h.extend(samples)
+    assert not h.bucketed
+    for q in (0, 10, 50, 95, 99, 99.9, 100):
+        assert h.percentile(q) == float(np.percentile(samples, q))
+    assert h.mean == pytest.approx(samples.mean())
+    assert h.min == samples.min() and h.max == samples.max()
+    assert h.count == 1000 and h.total == pytest.approx(samples.sum())
+
+
+def test_empty_histogram():
+    h = BoundedHistogram()
+    assert h.percentile(50) == 0.0 and h.mean == 0.0
+    assert h.snapshot() == {"count": 0}
+
+
+# ---------------------------------------------------------------------------
+# bucketed regime
+# ---------------------------------------------------------------------------
+
+def test_fold_preserves_exact_aggregates_and_bounds_memory():
+    h = BoundedHistogram(exact_cap=100)
+    rng = np.random.default_rng(1)
+    samples = rng.lognormal(-8, 1.0, 5000)
+    h.extend(samples)
+    assert h.bucketed
+    assert h.count == 5000
+    assert h.total == pytest.approx(samples.sum())
+    assert h.min == samples.min() and h.max == samples.max()
+    # memory is the fixed bucket array, not the sample list
+    assert h._exact is None
+    assert len(h._counts) == h._n_buckets
+    assert int(h._counts.sum()) == 5000
+
+
+def test_bucketed_percentiles_monotone_and_close():
+    h = BoundedHistogram(exact_cap=10)
+    rng = np.random.default_rng(2)
+    samples = rng.lognormal(-9, 2.0, 20000)
+    h.extend(samples)
+    assert h.bucketed
+    qs = [0, 1, 10, 25, 50, 75, 90, 99, 99.9, 100]
+    vals = h.percentiles(qs)
+    assert vals == sorted(vals)                      # monotone in q
+    assert vals[0] == h.min and vals[-1] == h.max    # extremes exact
+    # bucket upper edges: never under-report, and within one bucket's
+    # relative resolution (10^(1/16) ~ 15.5%) of the true percentile
+    for q, v in zip(qs[1:-1], vals[1:-1]):
+        true = float(np.percentile(samples, q))
+        assert v >= true * 0.999
+        assert v <= true * 10 ** (1 / 16) * 1.001
+
+
+def test_bucketed_handles_out_of_range_values():
+    h = BoundedHistogram(exact_cap=2, lo=1e-6, hi=1.0)
+    h.extend([1e-9, 5e-9, 2.0, 3.0, 0.5])     # under + over + in range
+    assert h.bucketed
+    assert h.percentile(100) == 3.0
+    assert h.percentile(0) == 1e-9
+    # the overflow bucket reports the exact max, not hi
+    assert h.percentile(99) <= 3.0
+
+
+def test_snapshot_keys_and_default_cap():
+    h = BoundedHistogram()
+    h.extend(float(i) / 1000 for i in range(10))
+    snap = h.snapshot()
+    assert set(snap) == {"count", "mean", "min", "max",
+                         "p50", "p95", "p99", "p999"}
+    assert EXACT_CAP == 4096 and h.exact_cap == EXACT_CAP
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_shared_sink():
+    reg = HistogramRegistry(exact_cap=8)
+    a = reg.hist("latency:m")
+    assert reg.hist("latency:m") is a          # one histogram per name
+    assert a.exact_cap == 8                     # registry params apply
+    a.record(0.5)
+    assert reg.get("latency:m").count == 1
+    assert reg.get("nope") is None
+    assert reg.names() == ["latency:m"]
+    assert reg.snapshot()["latency:m"]["count"] == 1
+    reg.remove("latency:m")
+    assert reg.names() == []
+    reg.hist("x").record(1.0)
+    reg.clear()
+    assert reg.names() == []
+
+
+# ---------------------------------------------------------------------------
+# MetricsInterceptor integration (the refactor the registry exists for)
+# ---------------------------------------------------------------------------
+
+def _echo_fabric(metrics):
+    fab = rpc.RpcFabric(rpc.make_transport("simulated", 2,
+                                           network="eth40g"),
+                        client_interceptors=[metrics])
+    fab.add_server(1).register("echo", lambda bufs: bufs)
+    return fab
+
+
+def test_metrics_interceptor_records_into_registry():
+    metrics = rpc.MetricsInterceptor()
+    fab = _echo_fabric(metrics)
+    ch = fab.channel(0, 1)
+    for _ in range(4):
+        ch.call("echo", [np.zeros(64, np.uint8)])
+    fab.flush()
+    h = metrics.histogram("echo")
+    assert isinstance(h, BoundedHistogram) and h.count == 4
+    assert "latency:echo" in metrics.registry.names()
+    snap = metrics.snapshot()["echo"]
+    assert set(snap["latency_us"]) == {"mean", "p50", "p95", "p99"}
+    assert snap["latency_us"]["p50"] == pytest.approx(
+        h.percentile(50) * 1e6)
+
+
+def test_metrics_interceptors_can_share_one_registry():
+    reg = HistogramRegistry()
+    m1 = rpc.MetricsInterceptor(registry=reg)
+    m2 = rpc.MetricsInterceptor(registry=reg)
+    fab = _echo_fabric(m1)
+    ch = fab.channel(0, 1)
+    ch.call("echo", [np.zeros(8, np.uint8)])
+    fab.flush()
+    # the second interceptor sees the first one's distribution: one
+    # bounded copy per process, not one list per interceptor
+    assert m2.registry.get("latency:echo").count == 1
+    m1.reset()
+    assert reg.get("latency:echo") is None     # reset removes its keys

@@ -1,0 +1,193 @@
+"""Property tests for distributed tracing: under random payload mixes,
+window pressure, fault schedules, and shard failover, every closed
+call's span tree stays well-nested, its phases form a contiguous
+non-overlapping partition summing to the end-to-end latency, and one
+trace id survives header round-trips, retries, and re-routes. Skips
+cleanly when hypothesis is absent; runs with --hypothesis-profile=ci
+in CI."""
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro import rpc
+from repro.rpc import framing
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+def _check_tree(root, rel_tol=1e-9):
+    """The invariants every closed call must satisfy."""
+    assert root.closed
+    # one trace id across the whole tree
+    assert {s.trace_id for s in root.walk()} == {root.trace_id}
+    # well-nested: every closed child lies within its parent's window
+    # (phases/wire/server nest in attempts; attempts + backoff in the
+    # root)
+    by_id = {s.span_id: s for s in root.walk()}
+    for s in root.walk():
+        if s.parent_id is None or not s.closed:
+            continue
+        parent = by_id[s.parent_id]
+        assert parent.closed
+        assert s.start_s >= parent.start_s - 1e-12
+        assert s.end_s <= parent.end_s + 1e-12
+    # phase partition: contiguous, non-overlapping, sums to e2e
+    phases = sorted((s for s in root.phase_spans() if s.closed),
+                    key=lambda s: (s.start_s, s.span_id))
+    assert phases
+    assert phases[0].start_s == root.start_s
+    assert phases[-1].end_s == root.end_s
+    for a, b in zip(phases, phases[1:]):
+        assert a.end_s == b.start_s
+    total = sum(p.duration_s for p in phases)
+    assert total == pytest.approx(root.duration_s, rel=rel_tol, abs=0.0)
+
+
+# ---------------------------------------------------------------------------
+# trace-id header word round-trip
+# ---------------------------------------------------------------------------
+
+@given(trace_id=st.integers(0, framing.MAX_TRACE_ID),
+       sizes=st.lists(st.integers(0, 1024), min_size=0, max_size=6),
+       serialized=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_trace_id_header_roundtrip(trace_id, sizes, serialized):
+    """trace_id survives header encode/parse, the full wire round trip,
+    and is inherited by replies and stream chunks."""
+    f = framing.make_frame(3, "prop", _bufs(sizes),
+                           serialized=serialized)
+    f = framing.Frame(**{**f.__dict__, "trace_id": trace_id})
+    parsed, _ = framing.parse_header(framing.header_bytes(f))
+    assert parsed.trace_id == trace_id
+    assert framing.decode(framing.encode(f)).trace_id == trace_id
+    assert f.reply([np.zeros(1, np.uint8)]).trace_id == trace_id
+    assert f.reply_chunk([np.zeros(1, np.uint8)],
+                         seq=1).trace_id == trace_id
+
+
+# ---------------------------------------------------------------------------
+# span trees under random traffic + window pressure
+# ---------------------------------------------------------------------------
+
+@given(n_calls=st.integers(1, 8),
+       window_msgs=st.integers(1, 4),
+       sizes=st.lists(st.integers(1, 4096), min_size=1, max_size=5),
+       data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_span_invariants_random_unary_traffic(n_calls, window_msgs,
+                                              sizes, data):
+    tracer = rpc.Tracer()
+    fab = rpc.RpcFabric(rpc.make_transport("simulated", 3,
+                                           network="eth40g"),
+                        window_msgs=window_msgs, tracer=tracer)
+    for ep in (1, 2):
+        fab.add_server(ep).register("echo", lambda bufs: bufs)
+    for i in range(n_calls):
+        dst = data.draw(st.sampled_from((1, 2)))
+        fab.channel(0, dst).call("echo", _bufs(sizes, seed=i))
+    fab.flush()
+    roots = tracer.calls()
+    assert len(roots) == n_calls
+    ids = [r.trace_id for r in roots]
+    assert len(set(ids)) == n_calls          # ids are unique per call
+    for root in roots:
+        _check_tree(root)
+    # live tracking state fully reclaimed
+    assert not tracer._by_call and not tracer._by_trace
+
+
+@given(n_chunks=st.integers(1, 4), window_msgs=st.integers(1, 3),
+       fault_seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_trace_survives_faulted_retried_streams(n_chunks, window_msgs,
+                                                fault_seed):
+    """A server-stream under a random transient fault schedule keeps
+    ONE trace id across every retry attempt, and the closed tree still
+    satisfies nesting + partition."""
+    tracer = rpc.Tracer()
+    inner = rpc.make_transport("simulated", 2, network="eth40g")
+    transport = rpc.make_transport("fault", inner=inner,
+                                   seed=fault_seed, fault_rate=0.4,
+                                   max_faults=2)
+    fab = rpc.RpcFabric(
+        transport, window_msgs=window_msgs, tracer=tracer,
+        client_interceptors=[rpc.RetryInterceptor(max_attempts=6,
+                                                  backoff_s=1e-4)])
+
+    def stream(bufs):
+        return ([np.full(8, i, np.uint8)] for i in range(n_chunks))
+
+    fab.add_server(1).register_server_stream("stream", stream)
+    h = fab.channel(0, 1).server_stream("stream", _bufs([256]))
+    fab.flush()
+    # a fault AFTER the first delivered chunk fails the call (stream
+    # retry only applies at zero chunks) — the tree invariants must
+    # hold either way
+    assert h.done
+    (root,) = tracer.calls()
+    _check_tree(root)
+    attempts = root.attempt_spans()
+    assert len(attempts) == root.attrs["attempts"]
+    # every attempt (incl. re-issues) carries the root's trace id
+    assert {a.trace_id for a in attempts} == {root.trace_id}
+    if h.error is None:
+        assert root.attrs["outcome"] == "stream_end"
+    else:
+        assert root.attrs["outcome"] == "error"
+    if len(attempts) > 1:
+        # retries happened: backoff phases separate the attempts
+        backoffs = [s for s in root.phase_spans()
+                    if s.name == "backoff"]
+        assert len(backoffs) == len(attempts) - 1
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_trace_id_survives_shard_failover(seed):
+    """A call rejected by one shard and re-issued on the next keeps
+    its trace id; the re-route is visible as the new attempt's dst."""
+    from repro.serve.engine import SERVE_SERVICE, ShardedServeStub
+    from repro.serve.engine import _i32_buf, decode_generate_request
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=1),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("worker0")))
+    tracer = rpc.Tracer()
+    metrics = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(
+        rpc.make_transport("cluster", cluster=cluster),
+        client_interceptors=[metrics],
+        server_interceptors=[metrics, rpc.AdmissionInterceptor(
+            limits=cluster.admission_limits(), metrics=metrics)],
+        tracer=tracer)
+
+    def handlers(name):
+        def generate(bufs):
+            prompts, mnt = decode_generate_request(bufs)
+            return [_i32_buf([prompts.shape[0], max(mnt, 1)]),
+                    _i32_buf(np.full((prompts.shape[0], max(mnt, 1)),
+                                     int(name[-1]), np.int32))]
+        return {"generate": generate, "generate_stream": generate}
+
+    for name in ("ps0", "ps1"):
+        fab.add_server(name).add_service(SERVE_SERVICE, handlers(name))
+    stub = ShardedServeStub(fab, "worker0", ("ps0", "ps1"))
+    prompts = np.random.default_rng(seed).integers(
+        0, 100, (1, 4), dtype=np.int32)
+    calls = [stub.generate(prompts, 1) for _ in range(3)]
+    fab.flush()
+    for c in calls:
+        assert c.error is None
+    assert stub._failover.failovers >= 1
+    roots = tracer.calls()
+    assert len(roots) == 3
+    failed_over = [r for r in roots if len(r.attempt_spans()) > 1]
+    assert failed_over
+    for root in failed_over:
+        dsts = [a.attrs["dst"] for a in root.attempt_spans()]
+        assert dsts[0] == "ps0" and dsts[-1] == "ps1"   # the re-route
+    for root in roots:
+        _check_tree(root)
