@@ -353,6 +353,11 @@ def main(argv: Optional[List[str]] = None) -> None:
         if args.sweep is not None:
             ap.error("--trace needs a single run, not --sweep (one "
                      "trace file per run)")
+        if args.baseline is not None or args.check_baseline is not None:
+            ap.error("--trace records a benchmark run's spans, but "
+                     "--baseline/--check-baseline collect modeled "
+                     "numbers without running a benchmark; drop one "
+                     "of the flags")
         if args.benchmark not in FABRIC_BENCHMARKS:
             ap.error(f"--trace needs a fabric benchmark "
                      f"({', '.join(FABRIC_BENCHMARKS)}); got "

@@ -25,7 +25,16 @@ and per-endpoint interceptor metrics:
 ``--trace out.json`` attaches a ``rpc.Tracer`` to the serving fabric
 (loopback or cluster) and exports every request's span tree — queue /
 credit-stall / wire / server / reply phases, retries and shard
-failovers included — as Chrome trace-event JSON for Perfetto.
+failovers included, plus the scheduler's waiting / prefill / decode /
+preempted request phases — as Chrome trace-event JSON for Perfetto.
+
+Each served endpoint runs a continuous-batching scheduler
+(``repro.serve.scheduler``): ``--max-batch N`` caps concurrent decodes
+per endpoint and ``--kv-blocks N`` sets the modeled KV-cache block
+budget (exhaustion preempts + requeues the newest request). With the
+cluster transport, ``--policy scheduler_least_loaded`` dispatches on
+the endpoints' reported scheduler load instead of the client's own
+outstanding-call counts.
 """
 from __future__ import annotations
 
@@ -67,7 +76,8 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
         cluster, policy=args.policy,
         client_interceptors=[metrics,
                              rpclib.RetryInterceptor(max_attempts=4)],
-        server_interceptors=[metrics], tracer=tracer)
+        server_interceptors=[metrics], tracer=tracer,
+        max_batch=args.max_batch, kv_blocks=args.kv_blocks)
     rng = np.random.default_rng(0)
     print(f"cluster        : {len(stubs)} worker endpoint(s) -> "
           f"{len(next(iter(stubs.values())).servers)} ps endpoint(s), "
@@ -98,8 +108,15 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
               f"({total/dt:.1f} tok/s aggregate, modeled clock "
               f"{fabric.now()*1e3:.3f} ms)")
     per_ep = {k: v["calls"] for k, v in metrics.snapshot().items()
-              if "@" in k and not k.startswith("server:")}
+              if "@" in k and not k.startswith("server:")
+              and not k.startswith("serve:")}
     print(f"per-endpoint   : {per_ep}")
+    for ep, sched in engine.schedulers.items():
+        st = sched.stats()
+        print(f"scheduler [{ep}]: "
+              f"admitted={st['admitted']} finished={st['finished']} "
+              f"preempted={st['preempted']} requeued={st['requeued']} "
+              f"peak_running={st['peak_running']}")
     _export_trace(tracer, args.trace)
 
 
@@ -130,6 +147,15 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export the serving fabric's span trees as "
                          "Chrome trace-event JSON (Perfetto)")
+    ap.add_argument("--max-batch", type=int, default=None, metavar="N",
+                    help="continuous-batching scheduler: max requests "
+                         "decoding concurrently per endpoint "
+                         "(default 8)")
+    ap.add_argument("--kv-blocks", type=int, default=None, metavar="N",
+                    help="continuous-batching scheduler: modeled "
+                         "KV-cache budget in 16-token blocks per "
+                         "endpoint (default unlimited; exhaustion "
+                         "preempts + requeues)")
     args = ap.parse_args()
 
     if args.transport == "cluster" and args.cluster_spec is None:
@@ -142,6 +168,16 @@ def main() -> None:
     if args.trace and args.no_rpc:
         ap.error("--trace records fabric spans; it cannot combine with "
                  "--no-rpc")
+    if args.no_rpc and (args.max_batch is not None
+                        or args.kv_blocks is not None):
+        ap.error("--max-batch/--kv-blocks configure the rpc endpoint "
+                 "scheduler; they cannot combine with --no-rpc")
+    if args.max_batch is not None and args.max_batch < 1:
+        ap.error("--max-batch must be >= 1")
+    if args.kv_blocks is not None and args.kv_blocks < 1:
+        ap.error("--kv-blocks must be >= 1")
+    if args.max_batch is None:
+        args.max_batch = 8
 
     cluster = None
     if args.transport == "cluster":
@@ -171,7 +207,9 @@ def main() -> None:
     if not args.no_rpc:
         from repro import rpc as rpclib
         tracer = rpclib.Tracer() if args.trace else None
-        _, channel = engine.serve_loopback(tracer=tracer)
+        _, channel = engine.serve_loopback(tracer=tracer,
+                                           max_batch=args.max_batch,
+                                           kv_blocks=args.kv_blocks)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -195,6 +233,12 @@ def main() -> None:
         print(f"request {i} [{via}]: batch={args.batch} "
               f"new={out.shape[1]} {dt*1e3:.1f} ms ({tps:.1f} tok/s) "
               f"sample={out[0][:8].tolist()}")
+    for ep, sched in engine.schedulers.items():
+        st = sched.stats()
+        print(f"scheduler [{ep}]: admitted={st['admitted']} "
+              f"finished={st['finished']} preempted={st['preempted']} "
+              f"requeued={st['requeued']} "
+              f"peak_running={st['peak_running']}")
     if args.trace:
         _export_trace(tracer, args.trace)
 

@@ -44,7 +44,7 @@ from repro.rpc.fabric import (BIDI, CLIENT_STREAM, DEADLINE_EXCEEDED,
                               HANDLER_FAULTS, LINK_FAULT, SERVER_STREAM,
                               UNARY, BidiStream, Call, Channel,
                               FlightReport, RpcError, RpcFabric, Server,
-                              ServerStream, StreamHandle,
+                              ServerStream, StreamHandle, StreamPump,
                               fully_connected_exchange, incast_exchange,
                               ring_exchange)
 from repro.rpc.cluster import (ClusterSpec, ClusterTransport,
@@ -91,7 +91,8 @@ __all__ = [
     "RING_SERVICE", "ResourceExhausted", "RetryInterceptor", "RpcError",
     "RpcFabric", "SERVER_STREAM", "Server", "ServerContext",
     "ServerInterceptor", "ServerStream", "ServiceDef",
-    "SimulatedTransport", "Span", "StreamHandle", "Stub", "StubMethod",
+    "SimulatedTransport", "Span", "StreamHandle", "StreamPump", "Stub",
+    "StubMethod",
     "Tracer", "Transport", "TransientError", "UNARY",
     "UnaryCall", "WindowConfig", "as_cluster_spec",
     "cluster_fc_round_time", "cluster_incast_round_time",

@@ -148,6 +148,36 @@ def _error_reply(frame: framing.Frame, msg: str) -> framing.Frame:
                         .copy()], error=True)
 
 
+class StreamPump:
+    """Opt-in incremental server streaming: a SERVER_STREAM handler that
+    returns ``StreamPump(chunks)`` (instead of a list/generator that the
+    server materializes at dispatch) has its chunks pulled **one per
+    flush-loop iteration** — so several pumped calls on one endpoint
+    interleave chunk-by-chunk instead of each monopolizing the wire
+    until done. The serving engine's continuous-batching scheduler
+    rides this: every flush iteration is one shared decode step across
+    all in-flight generation requests.
+
+    ``frame`` and ``server`` are bound by the server at dispatch, so
+    the producer (via a closure over the pump) can attribute
+    server-track tracer spans to the originating call."""
+
+    def __init__(self, chunks):
+        self.chunks = iter(chunks)
+        self.frame: Optional[framing.Frame] = None
+        self.server: Optional["Server"] = None
+        self.name = ""                 # wire method name, set at dispatch
+        self.seq = 0                   # next server->client chunk seq
+        # (src, dst, serialized) of the owning channel — bound by the
+        # flush loop at dispatch so pumped chunks ride the right gate
+        self.channel_key: Optional[Tuple[int, int, bool]] = None
+
+    def close(self) -> None:
+        close = getattr(self.chunks, "close", None)
+        if close is not None:
+            close()
+
+
 def _chunk_frames(frame: framing.Frame, chunks: Sequence[ChunkPayload],
                   *, seq0: int = 0, close: bool = False
                   ) -> List[framing.Frame]:
@@ -199,6 +229,10 @@ class Server:
         self._services: Set[str] = set()
         self._streams: Dict[int, List[List[np.ndarray]]] = {}
         self._bidi_seq: Dict[int, int] = {}
+        # open incremental server streams (handlers that returned a
+        # StreamPump); the flush loop pulls one chunk per pump per
+        # iteration
+        self._pumps: Dict[int, StreamPump] = {}
         # streams shed/rejected at their opening chunk: later chunks of
         # the same call are dropped instead of re-creating state (they
         # may ride the same flight as the rejected opener)
@@ -219,6 +253,12 @@ class Server:
     def tracer(self) -> Optional[Tracer]:
         t = self._tracer_src
         return t() if callable(t) else t
+
+    @property
+    def clock(self) -> Callable[[], float]:
+        """The clock this endpoint timestamps on (the fabric clock when
+        fabric-created) — services that record their own spans read it."""
+        return self._clock
 
     def add_service(self, service, handlers) -> "Server":
         """Bind every method of ``service`` (a ``ServiceDef``) at once.
@@ -279,6 +319,27 @@ class Server:
         self._streams.pop(call_id, None)
         self._bidi_seq.pop(call_id, None)
         self._dead_streams.discard(call_id)
+        pump = self._pumps.pop(call_id, None)
+        if pump is not None:
+            pump.close()        # producer's finally-cleanup runs now
+
+    def pump_one(self, call_id: int) -> List[framing.Frame]:
+        """Pull the next chunk of one pumped stream: one chunk frame,
+        a bare END trailer when the producer is exhausted, or an error
+        reply when it raised (through the HANDLER_FAULTS boundary, like
+        a dispatch-time handler fault)."""
+        pump = self._pumps[call_id]
+        frame = pump.frame
+        try:
+            chunk = next(pump.chunks)
+        except StopIteration:
+            del self._pumps[call_id]
+            return _chunk_frames(frame, [], seq0=pump.seq, close=True)
+        except HANDLER_FAULTS as e:   # producer fault -> RPC error
+            return self._fault(frame, pump.name, e)
+        out = _chunk_frames(frame, [chunk], seq0=pump.seq)
+        pump.seq += len(out)
+        return out
 
     def _sctx(self, frame: framing.Frame, name: str, kind: str,
               deadline_s: Optional[float], queue_depth: int
@@ -459,7 +520,11 @@ class Server:
         if kind == SERVER_STREAM:
             # materialize inside the fault boundary: handlers may
             # return lazy generators whose errors surface mid-iteration
-            handler = (lambda req, _h=handler: list(_h(req) or []))
+            # — unless the handler opted into incremental delivery by
+            # returning a StreamPump (pulled by the flush loop instead)
+            handler = (lambda req, _h=handler:
+                       (lambda out: out if isinstance(out, StreamPump)
+                        else list(out or []))(_h(req)))
         try:
             reply = self._invoke(frame, name, kind, handler, (request,),
                                  deadline_s=deadline_s,
@@ -469,6 +534,10 @@ class Server:
         self.calls_served += 1
 
         if kind == SERVER_STREAM:
+            if isinstance(reply, StreamPump):
+                reply.frame, reply.server, reply.name = frame, self, name
+                self._pumps[frame.call_id] = reply
+                return []
             return _chunk_frames(frame, reply, close=True)
         if frame.one_way:
             return []
@@ -534,7 +603,11 @@ class BidiStream(StreamHandle):
             serialized=self.channel.serialized, sizes=sizes)
         self._seq += 1
         self.closed = end
-        self.channel.fabric.submit_raw(self.channel, frame)
+        fabric = self.channel.fabric
+        ctx = fabric.context(self.call_id)
+        if ctx is not None:
+            fabric._buffer_request_chunk(ctx, frame)
+        fabric.submit_raw(self.channel, frame)
 
     def close(self) -> None:
         """End the client direction with a bare END trailer."""
@@ -646,6 +719,7 @@ class RpcFabric:
     def __init__(self, transport: Transport, *,
                  window_bytes: int = 4 * 1024 * 1024,
                  window_msgs: int = 32,
+                 retry_buffer_chunks: int = 16,
                  client_interceptors: Optional[
                      List[ClientInterceptor]] = None,
                  server_interceptors: Optional[
@@ -654,6 +728,11 @@ class RpcFabric:
         self.transport = transport
         self.window_bytes = window_bytes
         self.window_msgs = window_msgs
+        #: how many sent chunks of a client-stream/bidi call the client
+        #: retains for transparent retry (gRPC's bounded retry buffer);
+        #: past the bound the call stops being retryable (sticky), 0
+        #: disables stream-retry buffering entirely
+        self.retry_buffer_chunks = retry_buffer_chunks
         #: optional distributed tracing (repro.rpc.tracing): every call
         #: gets a span tree — phases on the client track, admit/shed/
         #: handler spans on the server tracks — with its trace id
@@ -768,9 +847,11 @@ class RpcFabric:
                retryable: bool = False) -> Call:
         call = Call(frame.call_id, method, channel.dst)
         self._calls[frame.call_id] = call
-        self._start_ctx(frame.call_id, method, kind, channel,
-                        deadline_s=deadline_s,
-                        request=frame if retryable else None)
+        ctx = self._start_ctx(frame.call_id, method, kind, channel,
+                              deadline_s=deadline_s,
+                              request=frame if retryable else None)
+        if kind == CLIENT_STREAM:
+            self._buffer_request_chunk(ctx, frame)
         self.submit_raw(channel, frame)
         return call
 
@@ -794,6 +875,28 @@ class RpcFabric:
             self._backlog.append((channel, msg))
             if self.tracer is not None:
                 self.tracer.on_stall(frame.call_id)
+
+    def _buffer_request_chunk(self, ctx: CallContext,
+                              frame: framing.Frame) -> None:
+        """Client-side chunk retention for transparent stream retry:
+        keep up to ``retry_buffer_chunks`` sent frames of a
+        client-stream/bidi call on its context so a RetryInterceptor
+        can replay the whole stream under a fresh call id. Past the
+        bound the buffer is dropped for good — the sticky
+        ``meta["buffer_overflow"]`` makes the interceptor give up
+        (``gave_up_buffer``) instead of replaying a hole."""
+        if ctx.kind not in (CLIENT_STREAM, BIDI) \
+                or ctx.meta.get("buffer_overflow"):
+            return
+        if ctx.request_chunks is None:
+            ctx.request_chunks = []
+        ctx.request_chunks.append(frame)
+        if ctx.request is None:
+            ctx.request = frame
+        if len(ctx.request_chunks) > self.retry_buffer_chunks:
+            ctx.request = None
+            ctx.request_chunks = None
+            ctx.meta["buffer_overflow"] = True
 
     def register_handle(self, handle: StreamHandle, *,
                         kind: str = SERVER_STREAM,
@@ -855,12 +958,15 @@ class RpcFabric:
         return False
 
     def _resubmit(self, ctx: CallContext) -> None:
-        """Re-issue a failed unary or server-stream call under a fresh
-        call_id; the caller's Call future / stream handle stays open
-        across attempts. An interceptor-requested backoff
-        (``ctx.meta["retry_backoff_s"]``) is paid on the fabric clock
-        first — the call's original deadline keeps running through it,
-        so a retry can still be cancelled by the budget it inherited."""
+        """Re-issue a failed call under a fresh call_id; the caller's
+        Call future / stream handle stays open across attempts. Unary
+        and server-stream calls replay their single retained request
+        frame; client-stream/bidi calls replay every buffered sent
+        chunk in order (``retry_buffer_chunks``). An
+        interceptor-requested backoff (``ctx.meta["retry_backoff_s"]``)
+        is paid on the fabric clock first — the call's original
+        deadline keeps running through it, so a retry can still be
+        cancelled by the budget it inherited."""
         old_id = ctx.call_id
         call = self._calls.pop(old_id, None)
         handle = self._handles.pop(old_id, None)
@@ -873,9 +979,15 @@ class RpcFabric:
             else:
                 time.sleep(backoff)
         new_id = self.next_call_id()
-        frame = replace(ctx.request, call_id=new_id)
+        if ctx.request_chunks:
+            frames = [replace(f, call_id=new_id)
+                      for f in ctx.request_chunks]
+            ctx.request_chunks = frames
+            ctx.request = frames[0]
+        else:
+            frames = [replace(ctx.request, call_id=new_id)]
+            ctx.request = frames[0]
         ctx.call_id, ctx.attempts = new_id, ctx.attempts + 1
-        ctx.request = frame
         ctx.dst = ctx.channel.dst     # failover may have rerouted
         self._ctx[new_id] = ctx
         if call is not None:
@@ -891,7 +1003,8 @@ class RpcFabric:
             t_fail = ctx.end_s if ctx.end_s is not None else self.now()
             self.tracer.on_retry(ctx, old_id, t_fail, self.now())
         self._emit(Event(new_id, "retry"))
-        self.submit_raw(ctx.channel, frame)
+        for frame in frames:
+            self.submit_raw(ctx.channel, frame)
 
     # completion --------------------------------------------------------
     def _complete(self, call: Call, frame: Optional[framing.Frame],
@@ -960,6 +1073,19 @@ class RpcFabric:
             ch.rx_gate.grant(m.frame.total_bytes)
         handle = self._handles.get(m.frame.call_id)
         if handle is None or handle.done:
+            return
+        if (m.frame.flags & framing.FLAG_ERROR) \
+                and not m.frame.is_stream:
+            # a pumped stream's producer faulted mid-stream: the error
+            # reply rides the chunk path (reverse window) back to the
+            # client and fails the handle like a dispatch-time fault
+            err = (bytes(m.frame.bufs[0]).decode(errors="replace")
+                   if m.frame.bufs else "error")
+            self._purge_call(m.frame.call_id)
+            self._finish_handle(
+                handle, error=err,
+                kind=("deadline_exceeded" if DEADLINE_EXCEEDED in err
+                      else "error"))
             return
         if m.frame.n_buffers or not m.frame.stream_end:
             # bare END trailers carry no payload chunk
@@ -1113,8 +1239,13 @@ class RpcFabric:
         while True:
             if self._ctx and self._have_deadlines():
                 self._cancel_expired()
+            if self._open_pumps():
+                # one chunk per pumped stream per iteration: concurrent
+                # pumped calls interleave chunk-by-chunk (the serving
+                # scheduler's decode steps ride this cadence)
+                self._pump_server_streams()
             if not (self._pending or self._backlog
-                    or self._gated_chunks()):
+                    or self._gated_chunks() or self._open_pumps()):
                 break
             if not self._pending:
                 # admit as credits allow; otherwise wait out a stalled
@@ -1195,8 +1326,13 @@ class RpcFabric:
                 landed = arrivals.setdefault(m.dst, set())
                 landed.add(cid)
                 # queue depth = calls landed on this endpoint so far
-                # this flight (including this one) + partial streams
-                # still open from EARLIER flights
+                # this flight (including this one) + partial input
+                # streams still open from EARLIER flights. Open pumps
+                # are NOT counted: a pump is a call that was already
+                # admitted and is now delivering results, so counting
+                # it would starve unary traffic behind every long
+                # decode (pump load reaches dispatch policies via the
+                # scheduler gauges instead).
                 depth = len(landed) \
                     + sum(1 for k in srv._streams if k not in landed) \
                     + sum(1 for k in srv._bidi_seq if k not in landed)
@@ -1208,9 +1344,15 @@ class RpcFabric:
                                  payload=_spec_only(m.frame)))
                 plain = [o for o in outs if not o.is_stream]
                 chunks = [o for o in outs if o.is_stream]
+                pump = srv._pumps.get(cid)
+                if pump is not None and pump.channel_key is None:
+                    pump.channel_key = (m.src, m.dst,
+                                        m.frame.serialized)
                 if self.tracer is not None:
                     self.tracer.on_dispatched(
-                        cid, self.now(), replying=bool(plain or chunks))
+                        cid, self.now(),
+                        replying=bool(plain or chunks)
+                        or pump is not None)
                 if plain:
                     # request credits return when the reply lands
                     self._awaiting_grant.setdefault(m.frame.call_id,
@@ -1301,6 +1443,28 @@ class RpcFabric:
 
     def _gated_chunks(self) -> int:
         return sum(len(ch.rx_gate) for ch in self._channels.values())
+
+    def _open_pumps(self) -> int:
+        return sum(len(srv._pumps) for srv in self.servers.values())
+
+    def _pump_server_streams(self) -> None:
+        """Pull one chunk from every open pumped server stream and
+        offer it behind the owning channel's reverse window. A pump
+        whose previous chunk is still window-gated is skipped this
+        iteration — the producer is paced by the consumer's credits
+        instead of piling chunks into the gate."""
+        for srv in self.servers.values():
+            for cid in list(srv._pumps):
+                pump = srv._pumps[cid]
+                ch = (self._channels.get(pump.channel_key)
+                      if pump.channel_key is not None else None)
+                if ch is None:      # registered this iteration; next one
+                    continue
+                if any(m.frame.call_id == cid
+                       for m, _ in ch.rx_gate.items()):
+                    continue
+                for o in srv.pump_one(cid):
+                    self._offer_chunk(ch, o)
 
     def _pump_gates(self, force_one: bool = False) -> int:
         """Re-admit reverse-window-stalled chunks after credit grants."""

@@ -99,6 +99,11 @@ class CallContext:
     trace_id: int = 0
     # retained for retries (unary + server-stream; bufs caller-owned)
     request: Optional[framing.Frame] = None
+    #: sent chunk frames of a client-stream/bidi call, retained (up to
+    #: the fabric's ``retry_buffer_chunks``) so a retry can replay the
+    #: whole stream; None once the bound is exceeded (sticky
+    #: ``meta["buffer_overflow"]`` marks that) or for unary calls
+    request_chunks: Optional[List[framing.Frame]] = None
     meta: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -224,6 +229,9 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         # — the load signal an AdmissionInterceptor installed INNER to
         # this one feeds on
         self._depth: Dict[int, int] = {}
+        # live gauge providers merged into snapshot() under their own
+        # keys (e.g. a serve scheduler publishing admission counters)
+        self._gauges: Dict[str, Callable[[], Dict[str, Any]]] = {}
 
     def _rec(self, method: str) -> Dict[str, Any]:
         return self._recs.setdefault(method, {
@@ -319,10 +327,28 @@ class MetricsInterceptor(ClientInterceptor, ServerInterceptor):
         for k in self._server_keys(ctx):
             self._rec(k)["ok" if ok else "errors"] += 1
 
+    def attach_gauges(self, key: str,
+                      fn: Callable[[], Dict[str, Any]]) -> None:
+        """Register a live gauge provider: ``snapshot(gauges=True)``
+        calls ``fn`` and reports its dict under ``key`` alongside the
+        per-method records. A serve scheduler attaches its
+        admission/preemption counters here so they surface in
+        ``rpc_metrics`` output."""
+        self._gauges[key] = fn
+
+    def gauges(self) -> Dict[str, Dict[str, Any]]:
+        """Live gauge readings alone, keyed by provider."""
+        return {key: dict(fn()) for key, fn in self._gauges.items()}
+
     # reporting ----------------------------------------------------------
-    def snapshot(self) -> Dict[str, Dict[str, Any]]:
-        """JSON-ready per-method summary with latency percentiles."""
+    def snapshot(self, *, gauges: bool = False
+                 ) -> Dict[str, Dict[str, Any]]:
+        """JSON-ready per-method summary with latency percentiles.
+        ``gauges=True`` folds in attached gauge providers (whose
+        records have their own shapes, not the per-method schema)."""
         out: Dict[str, Dict[str, Any]] = {}
+        if gauges:
+            out.update(self.gauges())
         for method, rec in self._recs.items():
             row = dict(rec)
             h = self.registry.get("latency:" + method)
@@ -361,11 +387,22 @@ class DeadlineInterceptor(ClientInterceptor):
 
 class RetryInterceptor(ClientInterceptor):
     """Retries calls that failed transiently, up to ``max_attempts``
-    total attempts: unary calls, and — transparently — server-stream
-    calls iff ZERO response chunks have been delivered (re-issuing the
-    request frame then cannot duplicate anything the caller observed).
-    The retry consumes the failure: interceptors outer to this one see
-    only the final outcome.
+    total attempts — the full call-kind matrix:
+
+      unary          always (the request frame is retained)
+      server_stream  iff ZERO response chunks have been delivered
+                     (re-issuing then cannot duplicate anything the
+                     caller observed)
+      client_stream  iff the fabric's bounded client-side chunk buffer
+                     (``RpcFabric(retry_buffer_chunks=...)``) still
+                     holds every sent chunk — the whole stream is
+                     replayed under a fresh call id
+      bidi           same buffer condition, and additionally zero
+                     response chunks delivered (like server_stream)
+
+    A transient failure whose sent-chunk buffer overflowed is NOT
+    retried; ``gave_up_buffer`` counts those. The retry consumes the
+    failure: interceptors outer to this one see only the final outcome.
 
     Retries respect the call's ORIGINAL deadline — the budget keeps
     running across attempts, never resets — and back off
@@ -386,12 +423,21 @@ class RetryInterceptor(ClientInterceptor):
         self.backoff_multiplier = backoff_multiplier
         self.retries = 0
         self.gave_up_budget = 0
+        self.gave_up_buffer = 0
 
     def on_complete(self, ctx: CallContext, event: Event
                     ) -> Optional[str]:
-        if event.kind != "error" or ctx.request is None:
+        if event.kind != "error":
             return None
-        if ctx.kind == "server_stream" and ctx.chunks > 0:
+        if ctx.meta.get("buffer_overflow"):
+            # client-stream/bidi whose sent chunks outgrew the bounded
+            # retry buffer: a replay is impossible, give up loudly
+            if self.retry_on(ctx.meta.get("error")):
+                self.gave_up_buffer += 1
+            return None
+        if ctx.request is None:
+            return None
+        if ctx.kind in ("server_stream", "bidi") and ctx.chunks > 0:
             return None        # mid-stream: a re-issue would duplicate
         if ctx.attempts >= self.max_attempts \
                 or not self.retry_on(ctx.meta.get("error")):

@@ -1,17 +1,29 @@
 """Batched serving engine: prefill + decode with per-layer KV/SSM state,
-greedy/temperature sampling, static batch with slot reuse.
+greedy/temperature sampling, continuous batching through a per-endpoint
+request scheduler.
 
-Generation requests can also arrive through the rpc fabric: the engine
-binds the ``Serve`` service (:data:`SERVE_SERVICE`) on an
-``rpc.Server`` endpoint via ``attach``/``serve_loopback``, so serving
-traffic exercises the same framing / flow-control / transport stack the
+All generation — local ``generate`` calls and rpc-served traffic —
+runs through a :class:`repro.serve.scheduler.ServeScheduler`: a queue
+of in-flight requests advanced one token per shared decode step, with
+admission gated by ``max_batch`` and a modeled KV-cache block budget,
+and preemption-by-recompute when decode growth exhausts the budget
+(see ``docs/SERVE.md``). ``attach`` builds one scheduler per served
+endpoint, so requests that arrive while others are mid-decode join the
+running step instead of queueing behind a whole batch.
+
+Generation requests arrive through the rpc fabric: the engine binds
+the ``Serve`` service (:data:`SERVE_SERVICE`) on an ``rpc.Server``
+endpoint via ``attach``/``serve_loopback``, so serving traffic
+exercises the same framing / flow-control / transport stack the
 communication benchmarks measure. The service has two methods:
 
   ``generate``         unary — the whole (B, new) token block in one
                        reply (the original wire shape).
   ``generate_stream``  server-streaming — one chunk per decode step,
-                       each a (B,) int32 token vector, so clients see
-                       token-by-token generation over the fabric.
+                       each a (B,) int32 token vector, emitted
+                       incrementally from the shared step (an
+                       ``rpc.StreamPump``), so concurrent streams
+                       interleave chunk-by-chunk over the fabric.
 
 ``serve_stub(channel)`` builds the generated client stub;
 ``rpc_generate`` / ``rpc_generate_stream`` are convenience wrappers
@@ -26,8 +38,9 @@ endpoints generate concurrently over per-link-priced cluster routes.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +51,9 @@ from repro.launch import steps as steps_lib
 from repro.models import model as M
 from repro.parallel.sharding import ParallelCtx
 from repro.rpc.interceptors import (ClientInterceptor,
+                                    MetricsInterceptor,
                                     is_resource_exhausted)
+from repro.serve.scheduler import Request, ServeScheduler
 
 
 @dataclass
@@ -59,6 +74,8 @@ class ServeEngine:
         self._prefill = steps_lib.make_prefill_step(ctx, acfg,
                                                     max_seq=cfg.max_seq)
         self._decode = {}
+        #: per-endpoint ServeScheduler, populated by :meth:`attach`
+        self.schedulers: Dict = {}
 
     def _decode_fn(self, batch: int):
         if batch not in self._decode:
@@ -72,76 +89,164 @@ class ServeEngine:
         return jax.random.categorical(key,
                                       logits[:, -1] / self.cfg.temperature)
 
-    def generate_tokens(self, prompts: np.ndarray,
-                        max_new_tokens: Optional[int] = None
-                        ) -> Iterator[jax.Array]:
-        """Token-by-token generation: yields one (B,) token vector per
-        decode step — the unit the server-streaming ``generate_stream``
-        method ships as a chunk. Yields *device* arrays so the unary
-        ``generate`` keeps async dispatch and transfers once; streaming
-        consumers pay the per-step host transfer, which they need
-        anyway to put bytes on the wire."""
-        B, S = prompts.shape
-        mnt = max_new_tokens or self.cfg.max_new_tokens
-        assert S + mnt <= self.cfg.max_seq, (S, mnt, self.cfg.max_seq)
-        key = jax.random.PRNGKey(self.cfg.seed)
+    # ------------------------------------------------------------------
+    # scheduler model ops: one request's prefill / decode-step /
+    # state rebuild, each at the request's own batch size — the compute
+    # half of the continuous-batching loop (ServeScheduler owns the
+    # queueing half). Key-stream discipline is identical across all
+    # three, so a preempted request resumes byte-identically.
+    # ------------------------------------------------------------------
 
-        states, logits = self._prefill(self.params,
-                                       {"tokens": jnp.asarray(prompts)})
-        decode = self._decode_fn(B)
+    def scheduler_prefill(self, req: Request) -> np.ndarray:
+        """Prefill ``req`` and sample its first token; leaves the
+        request's decode runtime (states, last token, key) on it."""
+        states, logits = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompts)})
+        key = jax.random.PRNGKey(self.cfg.seed)
         key, k0 = jax.random.split(key)
         tok = self._sample(logits, k0)
-        yield tok
-        for _ in range(mnt - 1):
+        req.runtime = (states, tok, key)
+        return np.asarray(tok)
+
+    def scheduler_decode(self, req: Request) -> np.ndarray:
+        """Advance ``req`` one decode step; returns the (B,) token."""
+        states, tok, key = req.runtime
+        key, k = jax.random.split(key)
+        states, logits = self._decode_fn(req.rows)(
+            self.params, states, tok[:, None], None)
+        tok = self._sample(logits, k)
+        req.runtime = (states, tok, key)
+        return np.asarray(tok)
+
+    def scheduler_rebuild(self, req: Request) -> None:
+        """Recompute a preempted request's runtime from its prompt and
+        recorded tokens (teacher-forced replay of the exact prefill +
+        decode + key-split sequence, so the rebuilt states are
+        bit-identical to the ones dropped at preemption)."""
+        states, logits = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompts)})
+        key = jax.random.PRNGKey(self.cfg.seed)
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits, k0)
+        decode = self._decode_fn(req.rows)
+        for _ in range(len(req.tokens) - 1):
             key, k = jax.random.split(key)
             states, logits = decode(self.params, states, tok[:, None],
                                     None)
             tok = self._sample(logits, k)
-            yield tok
+        req.runtime = (states, tok, key)
+
+    def make_scheduler(self, *, max_batch: int = 8,
+                       kv_blocks: Optional[int] = None,
+                       block_size: int = 16) -> ServeScheduler:
+        """A continuous-batching scheduler over this engine's model
+        ops (``attach`` builds one per served endpoint)."""
+        return ServeScheduler(self, max_batch=max_batch,
+                              kv_blocks=kv_blocks,
+                              block_size=block_size)
+
+    def generate_tokens(self, prompts: np.ndarray,
+                        max_new_tokens: Optional[int] = None
+                        ) -> Iterator[np.ndarray]:
+        """Token-by-token generation: yields one (B,) token vector per
+        decode step — the unit the server-streaming ``generate_stream``
+        method ships as a chunk. Runs the request through a private
+        unconstrained scheduler, so the op/key sequence (and therefore
+        every token) is identical to a request sharing a served
+        endpoint's continuous batch."""
+        sched = self.make_scheduler(max_batch=1)
+        req = sched.submit(np.asarray(prompts), max_new_tokens)
+        return sched.stream_tokens(req)
 
     def generate(self, prompts: np.ndarray,
                  max_new_tokens: Optional[int] = None) -> np.ndarray:
         """prompts: (B, S) int32 (right-aligned, no padding support needed
         for fixed-length prompt batches). Returns (B, new) int32."""
         toks = list(self.generate_tokens(prompts, max_new_tokens))
-        return np.asarray(jnp.stack(toks, axis=1))
+        return np.stack(toks, axis=1)
 
     # ------------------------------------------------------------------
     # rpc endpoint
     # ------------------------------------------------------------------
 
-    def rpc_handler(self, bufs: List[np.ndarray]) -> List[np.ndarray]:
-        """``Serve/generate`` method body: iovec request -> iovec reply."""
+    def rpc_handler(self, bufs: List[np.ndarray],
+                    scheduler: Optional[ServeScheduler] = None
+                    ) -> List[np.ndarray]:
+        """``Serve/generate`` method body: iovec request -> iovec reply.
+        With a ``scheduler`` the request joins the endpoint's shared
+        continuous batch and is driven to completion (concurrently
+        advancing whatever else is in flight there)."""
         prompts, mnt = decode_generate_request(bufs)
-        out = self.generate(prompts, mnt or None)
+        if scheduler is None:
+            out = self.generate(prompts, mnt or None)
+        else:
+            out = scheduler.run(scheduler.submit(prompts, mnt or None))
         return encode_generate_reply(out)
 
-    def rpc_stream_handler(self, bufs: List[np.ndarray]):
+    def rpc_stream_handler(self, bufs: List[np.ndarray],
+                           scheduler: Optional[ServeScheduler] = None):
         """``Serve/generate_stream`` method body: iovec request -> one
-        chunk per decode step, each a (B,) int32 token vector."""
+        chunk per decode step, each a (B,) int32 token vector. With a
+        ``scheduler`` the chunks come from the endpoint's shared decode
+        step wrapped in an ``rpc.StreamPump``, so the flush loop pulls
+        one chunk per iteration and concurrent streams interleave."""
         prompts, mnt = decode_generate_request(bufs)
-        return ([_i32_buf(tok)]
-                for tok in self.generate_tokens(prompts, mnt or None))
+        if scheduler is None:
+            return ([_i32_buf(tok)]
+                    for tok in self.generate_tokens(prompts, mnt or None))
+        from repro import rpc as rpclib
+        req = scheduler.submit(prompts, mnt or None)
+        pump = rpclib.StreamPump(
+            [_i32_buf(tok)] for tok in scheduler.stream_tokens(req))
+        req.pump = pump          # phase spans attribute to this call
+        return pump
 
-    def attach(self, server) -> None:
-        """Bind this engine's Serve service on an ``rpc.Server``."""
+    def attach(self, server, *, max_batch: int = 8,
+               kv_blocks: Optional[int] = None,
+               block_size: int = 16) -> ServeScheduler:
+        """Bind this engine's Serve service on an ``rpc.Server``, with
+        a dedicated continuous-batching scheduler for the endpoint
+        (``self.schedulers[endpoint]``; also returned). The scheduler
+        adopts the server's clock/tracer for phase spans, and publishes
+        its counters through a ``MetricsInterceptor`` when the server's
+        chain has one (under ``serve:scheduler@<endpoint>``)."""
+        sched = self.make_scheduler(max_batch=max_batch,
+                                    kv_blocks=kv_blocks,
+                                    block_size=block_size).bind(server)
+        self.schedulers[server.endpoint] = sched
         server.add_service(SERVE_SERVICE, {
-            "generate": self.rpc_handler,
-            "generate_stream": self.rpc_stream_handler,
+            "generate":
+                lambda bufs: self.rpc_handler(bufs, scheduler=sched),
+            "generate_stream":
+                lambda bufs: self.rpc_stream_handler(bufs,
+                                                     scheduler=sched),
         })
+        metrics = next((si for si in server.interceptors
+                        if isinstance(si, MetricsInterceptor)), None)
+        if metrics is not None:
+            metrics.attach_gauges(f"serve:scheduler@{server.endpoint}",
+                                  sched.stats)
+        return sched
 
     def serve_loopback(self, *, endpoint: int = 0, client: int = 1,
-                       serialized: bool = True, tracer=None):
+                       serialized: bool = True, tracer=None,
+                       max_batch: int = 8,
+                       kv_blocks: Optional[int] = None,
+                       block_size: int = 16):
         """One-call wiring for single-host serving experiments: a
         loopback-transport fabric with this engine at ``endpoint``.
-        ``tracer`` (a ``rpc.Tracer``) records per-call span trees.
-        Returns (fabric, client channel)."""
+        ``tracer`` (a ``rpc.Tracer``) records per-call span trees —
+        including the scheduler's waiting/prefill/decode/preempted
+        phases. ``max_batch`` / ``kv_blocks`` / ``block_size``
+        configure the endpoint's scheduler. Returns (fabric, client
+        channel)."""
         from repro import rpc as rpclib
         fabric = rpclib.RpcFabric(
             rpclib.make_transport("loopback",
                                   max(endpoint, client) + 1),
             tracer=tracer)
-        self.attach(fabric.add_server(endpoint))
+        self.attach(fabric.add_server(endpoint), max_batch=max_batch,
+                    kv_blocks=kv_blocks, block_size=block_size)
         return fabric, fabric.channel(client, endpoint,
                                       serialized=serialized)
 
@@ -150,7 +255,9 @@ class ServeEngine:
                       worker_job: str = "worker",
                       client_interceptors=None,
                       server_interceptors=None, fault=None,
-                      tracer=None):
+                      tracer=None, max_batch: int = 8,
+                      kv_blocks: Optional[int] = None,
+                      block_size: int = 16):
         """Multi-endpoint serving over a cluster transport: this
         engine's ``Serve`` service bound on every ``ps_job`` endpoint
         of ``cluster`` (a ``rpc.ClusterSpec`` / dict / JSON), one
@@ -169,7 +276,13 @@ class ServeEngine:
         ``MetricsInterceptor`` when one is present in the chain.
         ``tracer`` (a ``rpc.Tracer``) records per-call span trees —
         spans follow calls across endpoints and through shard
-        failover re-routes."""
+        failover re-routes.
+
+        ``max_batch`` / ``kv_blocks`` / ``block_size`` configure each
+        PS endpoint's continuous-batching scheduler; each scheduler
+        reports its load as a metrics gauge that the
+        ``scheduler_least_loaded`` dispatch policy reads (admission
+        control sheds on the per-flight dispatch queue depth)."""
         from repro import rpc as rpclib
         from repro.rpc.cluster import as_cluster_spec
         cluster = as_cluster_spec(cluster)
@@ -197,7 +310,8 @@ class ServeEngine:
                 rpclib.AdmissionInterceptor(limits=limits,
                                             metrics=metrics))
         for name in ps:
-            self.attach(fabric.add_server(name))
+            self.attach(fabric.add_server(name), max_batch=max_batch,
+                        kv_blocks=kv_blocks, block_size=block_size)
         stubs = {w: ShardedServeStub(fabric, w, ps, policy=policy,
                                      serialized=serialized)
                  for w in workers}
@@ -276,7 +390,8 @@ def serve_stub(channel):
 
 
 #: dispatch policies ShardedServeStub understands
-DISPATCH_POLICIES = ("round_robin", "least_loaded")
+DISPATCH_POLICIES = ("round_robin", "least_loaded",
+                     "scheduler_least_loaded")
 
 
 class ShardFailoverInterceptor(ClientInterceptor):
@@ -314,6 +429,10 @@ class ShardFailoverInterceptor(ClientInterceptor):
             nxt = (nxt + 1) % len(stub.servers)
         ctx.meta["shard_route"] = (stub, nxt)
         ctx.channel = stub.shard_channel(nxt)
+        # keep the stub's outstanding-call books consistent with the
+        # re-route: the call now loads the NEW shard, not the rejected
+        # one — least_loaded dispatch reads these counts
+        stub._move_inflight(ctx.call_id, shard, nxt)
         self.failovers += 1
         return "retry"
 
@@ -371,11 +490,41 @@ class ShardedServeStub:
                                  if not h.done]
         return len(self._inflight[shard])
 
+    def _move_inflight(self, call_id: int, old: int, new: int) -> None:
+        """Re-book a call failover moved between shards, so
+        ``outstanding`` charges it to the shard actually serving it."""
+        for h in self._inflight[old]:
+            if h.call_id == call_id:
+                self._inflight[old].remove(h)
+                self._inflight[new].append(h)
+                return
+
+    def _shard_queue_depth(self, shard: int) -> int:
+        metrics = next((si for si in self.fabric.server_interceptors
+                        if isinstance(si, MetricsInterceptor)), None)
+        if metrics is None:
+            return 0
+        ep = self.fabric.resolve_endpoint(self.servers[shard])
+        gauge = metrics.gauges().get(f"serve:scheduler@{ep}")
+        if gauge is not None:
+            # the endpoint scheduler's live load report: requests
+            # decoding + requests queued behind the batch/KV budget
+            return gauge["running"] + gauge["waiting"]
+        return metrics.server_queue_depth(ep)
+
     def _pick(self) -> int:
         if self.policy == "round_robin":
             shard = self._rr % len(self._stubs)
             self._rr += 1
             return shard
+        if self.policy == "scheduler_least_loaded":
+            # server-reported load first (the endpoint scheduler's
+            # running + waiting gauge), own outstanding calls as the
+            # tiebreak — so dispatch steers around shards other
+            # clients have loaded up, not just ours
+            return min(range(len(self._stubs)),
+                       key=lambda i: (self._shard_queue_depth(i),
+                                      self.outstanding(i), i))
         return min(range(len(self._stubs)),
                    key=lambda i: (self.outstanding(i), i))
 
@@ -409,6 +558,11 @@ def rpc_generate(channel, prompts: np.ndarray,
                  max_new_tokens: int = 0) -> np.ndarray:
     """Deprecated shim (one release): delegates to the generated stub's
     unary ``generate`` method. Use ``serve_stub(channel).generate``."""
+    warnings.warn(
+        "rpc_generate is deprecated; use "
+        "serve_stub(channel).generate((prompts, max_new_tokens))"
+        ".result() instead",
+        DeprecationWarning, stacklevel=2)
     return serve_stub(channel).generate((prompts, max_new_tokens)) \
         .result()
 

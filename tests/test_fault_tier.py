@@ -53,6 +53,7 @@ def assert_credits_balanced(fab):
     assert not fab._awaiting_grant
     for srv in fab.servers.values():
         assert srv._streams == {} and srv._bidi_seq == {}
+        assert srv._pumps == {}
         assert srv._dead_streams == set()
 
 
@@ -754,3 +755,205 @@ def test_serve_cluster_under_faults_completes_all_requests():
     assert snap["server:Serve/generate"]["shed"] == 0
     assert fabric.servers[0].calls_shed == 0
     assert_credits_balanced(fabric)
+
+
+# ---------------------------------------------------------------------------
+# the closed retry matrix: client-stream + bidi retried exactly-once
+# (bounded client-side chunk buffering in RetryInterceptor)
+# ---------------------------------------------------------------------------
+
+def _client_stream_retry_scenario(n_chunks=3, **fabric_kw):
+    """A client-stream whose opening chunk frame is faulted once: with
+    buffered request chunks the whole stream is transparently
+    re-issued under a fresh call id."""
+    retry = rpc.RetryInterceptor(max_attempts=4)
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, fault_rate=1.0, max_faults=1,
+                      links=[(0, 1)]),
+        client_interceptors=[retry], **fabric_kw)
+    invocations = {"n": 0, "chunks": 0}
+
+    def concat(bufs):
+        invocations["n"] += 1
+        invocations["chunks"] = len(bufs)
+        return [np.concatenate(bufs)]
+
+    svc = rpc.ServiceDef("CS", (rpc.MethodSpec("concat",
+                                               rpc.CLIENT_STREAM),))
+    fab.add_server(1).add_service(svc, {"concat": concat})
+    chunks = [[np.full(64, i, np.uint8)] for i in range(n_chunks)]
+    call = fab.stub(svc, 0, 1).concat.client_stream(chunks,
+                                                    deadline_s=60.0)
+    fab.flush()
+    return fab, call, retry, invocations
+
+
+def test_client_stream_retried_exactly_once_under_faults():
+    fab, call, retry, invocations = _client_stream_retry_scenario()
+    assert call.done and call.error is None, call.error
+    (out,) = call.result()
+    expected = np.concatenate([np.full(64, i, np.uint8)
+                               for i in range(3)])
+    assert np.array_equal(out, expected)     # every chunk, in order
+    assert invocations["n"] == 1             # handler ran once
+    assert invocations["chunks"] == 3        # with the full stream
+    assert retry.retries == 1
+    assert fab.transport.faults_injected == 1
+    assert_credits_balanced(fab)
+
+
+def test_client_stream_retry_gives_up_past_buffer_bound():
+    """Streams longer than retry_buffer_chunks cannot be replayed: the
+    fault surfaces as an error and gave_up_buffer counts the give-up
+    (the bounded-memory contract — no unbounded chunk retention)."""
+    fab, call, retry, invocations = _client_stream_retry_scenario(
+        n_chunks=4, retry_buffer_chunks=2)
+    assert call.done and call.error is not None
+    assert rpc.is_transient(call.error)
+    assert invocations["n"] == 0             # nothing reached the handler
+    assert retry.retries == 0                # no partial re-issue
+    assert retry.gave_up_buffer == 1
+    assert_credits_balanced(fab)
+
+
+def test_bidi_retried_exactly_once_under_faults():
+    retry = rpc.RetryInterceptor(max_attempts=4)
+    fab = _faulty_fabric(
+        "simulated", 2,
+        fault_kw=dict(seed=0, fault_rate=1.0, max_faults=1,
+                      links=[(0, 1)]),
+        client_interceptors=[retry])
+    echoed = {"n": 0}
+
+    def mirror(chunk, end):
+        if chunk:
+            echoed["n"] += 1
+            return [chunk]
+        return None
+
+    svc = rpc.ServiceDef("BD", (rpc.MethodSpec("mirror", rpc.BIDI),))
+    fab.add_server(1).add_service(svc, {"mirror": mirror})
+    h = fab.stub(svc, 0, 1).mirror(
+        [[np.full(32, i, np.uint8)] for i in range(2)], deadline_s=60.0)
+    fab.flush()
+    assert h.done and h.error is None, h.error
+    assert echoed["n"] == 2                  # each chunk handled once
+    assert len(h.chunks) == 2
+    for i, bufs in enumerate(h.chunks):
+        assert np.array_equal(bufs[0], np.full(32, i, np.uint8))
+    assert retry.retries == 1
+    assert fab.transport.faults_injected == 1
+    assert_credits_balanced(fab)
+
+
+def test_failover_moves_outstanding_call_accounting():
+    """Regression: a failed-over call used to stay booked against the
+    REJECTING shard's outstanding count, permanently biasing
+    least_loaded dispatch away from it. The re-route must move the
+    handle to the shard that actually serves it."""
+    from repro.serve.engine import SERVE_SERVICE, ShardedServeStub
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=1),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("worker0"),))
+    metrics = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(
+        rpc.make_transport("cluster", cluster=cluster),
+        client_interceptors=[metrics],
+        server_interceptors=[metrics, rpc.AdmissionInterceptor(
+            limits=cluster.admission_limits(), metrics=metrics)])
+    served = {"ps0": 0, "ps1": 0}
+    for name in ("ps0", "ps1"):
+        fab.add_server(name).add_service(SERVE_SERVICE,
+                                         _serve_handlers(name, served))
+    stub = ShardedServeStub(fab, "worker0", ("ps0", "ps1"))
+    prompts = np.zeros((1, 4), np.int32)
+    calls = [stub.generate(prompts, 1) for _ in range(3)]
+    assert [len(b) for b in stub._inflight] == [2, 1]   # rr booking
+    fab.flush()
+    assert stub._failover.failovers == 1
+    moved = calls[2].call_id
+    # the re-routed call's handle now loads ps1's book, not ps0's
+    assert all(h.call_id != moved for h in stub._inflight[0])
+    assert any(h.call_id == moved for h in stub._inflight[1])
+    assert stub.outstanding(0) == 0 and stub.outstanding(1) == 0
+    assert_credits_balanced(fab)
+
+
+def test_shed_plus_failover_mid_decode_keeps_trace_and_phases():
+    """Fault-tier serve scenario: admission sheds a unary generate off
+    ps0 (two calls land there in one flight, limit 1) and failover
+    re-routes it to ps1, whose scheduler is mid-decode on a stream —
+    the re-routed request JOINS that running batch. The call keeps ONE
+    trace id across the shed + re-route, and every call's phase spans
+    still partition its end-to-end latency exactly."""
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.parallel import NO_MESH
+    from repro.serve.engine import (ServeConfig, ServeEngine,
+                                    ShardedServeStub,
+                                    decode_token_chunk)
+
+    cfg = get_reduced_config("qwen3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(NO_MESH, cfg, params,
+                      ServeConfig(max_seq=64, max_new_tokens=4))
+    prompts = np.random.default_rng(3).integers(
+        0, cfg.model.vocab_size, (1, 8), dtype=np.int32)
+    direct = eng.generate(prompts)
+
+    cluster = rpc.ClusterSpec(endpoints=(
+        rpc.EndpointSpec("ps0", job="ps", admission_limit=1),
+        rpc.EndpointSpec("ps1", job="ps"),
+        rpc.EndpointSpec("worker0")))
+    tracer = rpc.Tracer()
+    metrics = rpc.MetricsInterceptor()
+    fab = rpc.RpcFabric(
+        rpc.make_transport("cluster", cluster=cluster),
+        client_interceptors=[metrics],
+        server_interceptors=[metrics, rpc.AdmissionInterceptor(
+            limits=cluster.admission_limits(), metrics=metrics)],
+        tracer=tracer)
+    for name in ("ps0", "ps1"):
+        eng.attach(fab.add_server(name))
+    stub = ShardedServeStub(fab, "worker0", ("ps0", "ps1"))
+    # round-robin: stream -> ps0, stream -> ps1, unary -> ps0; the
+    # unary is the SECOND call landing on ps0 that flight, so it is
+    # shed and re-routed to ps1 mid-decode of ps1's stream
+    s0 = stub.generate_stream(prompts)
+    s1 = stub.generate_stream(prompts)
+    call = stub.generate(prompts)
+    fab.flush()
+    for h in (s0, s1):
+        assert h.done and h.error is None, h.error
+        got = np.stack([decode_token_chunk(c) for c in h.chunk_bufs()],
+                       axis=1)
+        assert np.array_equal(got, direct)
+    assert np.array_equal(call.result(), direct)
+    assert stub._failover.failovers >= 1
+    # the re-routed unary joined ps1's batch while the stream decoded
+    sched_ps1 = eng.schedulers[fab.resolve_endpoint("ps1")]
+    assert sched_ps1.counters["peak_running"] >= 2
+    roots = tracer.calls()
+    assert len(roots) == 3
+    rerouted = [r for r in roots if len(r.attempt_spans()) > 1]
+    assert rerouted
+    for root in rerouted:
+        dsts = [a.attrs["dst"] for a in root.attempt_spans()]
+        assert dsts[0] == "ps0" and dsts[-1] == "ps1"
+    for root in roots:
+        # one trace id survives the shed + failover...
+        assert {s.trace_id for s in root.walk()} == {root.trace_id}
+        # ...and the phases stay a contiguous partition of e2e
+        phases = sorted((s for s in root.phase_spans() if s.closed),
+                        key=lambda s: (s.start_s, s.span_id))
+        assert phases
+        assert phases[0].start_s == root.start_s
+        assert phases[-1].end_s == root.end_s
+        for a, b in zip(phases, phases[1:]):
+            assert a.end_s == b.start_s
+        assert sum(p.duration_s for p in phases) == pytest.approx(
+            root.duration_s, rel=1e-9, abs=0.0)
+    assert_credits_balanced(fab)

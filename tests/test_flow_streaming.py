@@ -216,6 +216,7 @@ def test_streaming_state_does_not_accumulate():
     assert len(fab._handles) == 0
     assert len(fab._calls) == 0
     assert srv._streams == {} and srv._bidi_seq == {}
+    assert srv._pumps == {}
     assert len(ch.rx_gate) == 0
 
 

@@ -59,6 +59,7 @@ def _windows_restored(fab):
         assert len(ch.rx_gate) == 0 and ch.backlogged == 0
     for srv in fab.servers.values():
         assert srv._streams == {} and srv._bidi_seq == {}
+        assert srv._pumps == {}
 
 
 @given(n_faults=st.integers(0, 3), n_chunks=st.integers(1, 4),

@@ -502,7 +502,7 @@ def test_serve_engine_over_rpc_matches_direct(serialized):
     from repro.models import init_params
     from repro.parallel import NO_MESH
     from repro.serve.engine import (ServeConfig, ServeEngine,
-                                    rpc_generate)
+                                    serve_stub)
 
     cfg = get_reduced_config("qwen3-8b")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -512,5 +512,5 @@ def test_serve_engine_over_rpc_matches_direct(serialized):
         0, cfg.model.vocab_size, (2, 8), dtype=np.int32)
     direct = eng.generate(prompts)
     _, channel = eng.serve_loopback(serialized=serialized)
-    via_rpc = rpc_generate(channel, prompts)
+    via_rpc = serve_stub(channel).generate((prompts, 0)).result()
     assert np.array_equal(direct, via_rpc)

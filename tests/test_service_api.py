@@ -761,7 +761,8 @@ def test_rpc_generate_shims_delegate_to_stub(monkeypatch):
     real = E.serve_stub
     monkeypatch.setattr(
         E, "serve_stub", lambda c: (used.append(c), real(c))[1])
-    out = E.rpc_generate(ch, np.zeros((2, 4), np.int32))
+    with pytest.warns(DeprecationWarning, match="rpc_generate"):
+        out = E.rpc_generate(ch, np.zeros((2, 4), np.int32))
     assert used == [ch], "rpc_generate must delegate through the stub"
     assert np.array_equal(out, tokens)
     out2 = E.rpc_generate_stream(ch, np.zeros((2, 4), np.int32))
@@ -783,6 +784,23 @@ def test_no_direct_registration_outside_rpc():
     for p in sorted(root.rglob("*.py")):
         rel = p.relative_to(root)
         if rel.parts[:2] == ("repro", "rpc"):
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, offenders
+
+
+def test_no_rpc_generate_callers_outside_shim():
+    """The rpc_generate deprecation gate the CI step enforces, as a
+    test: the one-release shim has no internal callers — everything
+    dispatches through ``serve_stub`` (the generated Stub surface)."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src"
+    pat = re.compile(r"\brpc_generate\s*\(")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        rel = p.relative_to(root)
+        if rel.as_posix() == "repro/serve/engine.py":
             continue
         for i, line in enumerate(p.read_text().splitlines(), 1):
             if pat.search(line):

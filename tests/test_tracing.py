@@ -226,6 +226,14 @@ def test_bench_comm_trace_flag_validation(capsys):
                          "--transport", "simulated",
                          "--trace", "x.json"])
     assert "single run" in capsys.readouterr().err
+    # --baseline/--check-baseline run no benchmark, so combining them
+    # with --trace used to silently write no trace file; now rejected
+    for flag in ("--baseline", "--check-baseline"):
+        with pytest.raises(SystemExit):
+            bench_comm.main(["--benchmark", "incast", "--transport",
+                             "simulated", "--trace", "x.json",
+                             flag, "b.json"])
+        assert "without running a benchmark" in capsys.readouterr().err
 
 
 def test_baseline_collect_check_and_drift(tmp_path, capsys):
