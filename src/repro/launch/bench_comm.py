@@ -42,7 +42,22 @@ values in one invocation. Fabric-family rows carry per-method
 interceptor metrics (call counts + latency percentiles) under
 "rpc_metrics" and the tracer's per-phase latency breakdown under
 "rpc_phases" in the --json output; --json writes a versioned envelope
-{"schema": 2, "rows": [...]}.
+{"schema": 3, "rows": [...]} (3 added the open-loop workload row
+shape; closed-loop rows are unchanged from schema 2).
+
+--workload switches the CLI from the paper's closed-loop families to
+the open-loop trace driver (repro.workload): synthesize a seeded
+arrival process (--workload poisson|bursty|diurnal with --rate and
+--duration-s) or replay a recorded trace (--workload trace
+--trace-in PATH), fire it against a synthetic-engine serve cluster
+(--num-ps/--num-workers/--cluster-spec, scheduler policy via
+--sched-policy), and print the SLO table (p50/p99/p999 TTFT,
+per-token, e2e; goodput under --deadline-s; shed/retry/preempt).
+--trace-out records the workload (arrivals, shapes, fault windows)
+for exact replay; --fault-bursts N carves N correlated burst-loss
+windows into the trace. Open-loop flags are rejected for the
+closed-loop families, and --trace-in is mutually exclusive with the
+generator flags — a replayed trace IS the workload.
 
 --trace OUT.json exports the run's span trees as Chrome trace-event
 JSON (load in Perfetto / chrome://tracing; one track per endpoint).
@@ -57,6 +72,7 @@ import sys
 from typing import List, Optional
 
 FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
+WORKLOAD_CHOICES = ("poisson", "bursty", "diurnal", "trace")
 BENCHMARK_CHOICES = ("p2p_latency", "p2p_bandwidth", "ps_throughput",
                      "fully_connected", "ring", "incast")
 TRANSPORT_CHOICES = ("collective", "loopback", "simulated", "cluster")
@@ -277,6 +293,59 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "call cap enforced by server-side admission "
                          "control (rejected calls retry; rejected "
                          "counts land in rpc_metrics)")
+    ap.add_argument("--workload", default=None,
+                    choices=list(WORKLOAD_CHOICES),
+                    help="open-loop workload mode: synthesize a seeded "
+                         "arrival process (poisson/bursty/diurnal, "
+                         "needs --rate and --duration-s) or replay a "
+                         "recorded trace (trace, needs --trace-in) "
+                         "against a synthetic serve cluster, and "
+                         "report SLOs instead of closed-loop "
+                         "throughput")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="workload generators: offered load in req/s")
+    ap.add_argument("--duration-s", type=float, default=None,
+                    help="workload generators: trace horizon in "
+                         "modeled seconds")
+    ap.add_argument("--trace-in", default=None, metavar="PATH",
+                    help="--workload trace: recorded trace to replay "
+                         "(mutually exclusive with the generator "
+                         "flags)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="workload mode: record the trace (arrivals, "
+                         "shapes, fault windows) for exact replay")
+    ap.add_argument("--prompt-dist", default="lognormal",
+                    choices=["lognormal", "zipf", "small", "medium",
+                             "large"],
+                    help="workload generators: prompt-length sampler "
+                         "(heavy-tailed lognormal/zipf, or a fixed "
+                         "paper size category)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "sjf"],
+                    help="workload mode: per-endpoint serve scheduler "
+                         "admission policy")
+    ap.add_argument("--dispatch-policy", default="round_robin",
+                    choices=["round_robin", "least_loaded",
+                             "scheduler_least_loaded"],
+                    help="workload mode: sharded dispatch policy "
+                         "across ps endpoints")
+    ap.add_argument("--starvation-age-s", type=float, default=None,
+                    help="workload mode, --sched-policy sjf: waits "
+                         "past this age regain FIFO priority")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="workload mode: per-endpoint continuous-"
+                         "batching admission cap")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="workload mode: per-endpoint KV-cache block "
+                         "budget (None = unbounded; small values "
+                         "exercise preemption)")
+    ap.add_argument("--fault-bursts", type=int, default=0,
+                    help="workload generators: carve this many "
+                         "correlated burst-loss windows into the "
+                         "trace (replayed with it)")
+    ap.add_argument("--fault-burst-width-s", type=float, default=0.5,
+                    help="width of each --fault-bursts window "
+                         "(modeled seconds)")
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
     ap.add_argument("--scheme", default="uniform",
@@ -339,7 +408,7 @@ def main(argv: Optional[List[str]] = None) -> None:
                  f"{args.admission_limit}")
     if (args.deadline_s is not None or args.admission_limit is not None) \
             and args.benchmark not in FABRIC_BENCHMARKS \
-            and args.sweep is None:
+            and args.sweep is None and args.workload is None:
         ap.error("--deadline-s/--admission-limit need a fabric "
                  f"benchmark ({', '.join(FABRIC_BENCHMARKS)}); got "
                  f"--benchmark {args.benchmark}")
@@ -362,6 +431,77 @@ def main(argv: Optional[List[str]] = None) -> None:
             ap.error(f"--trace needs a fabric benchmark "
                      f"({', '.join(FABRIC_BENCHMARKS)}); got "
                      f"--benchmark {args.benchmark}")
+
+    # open-loop workload flags vs the closed-loop paper families:
+    # every combination is either meaningful or a loud error, never a
+    # silently ignored flag
+    if args.workload is None:
+        used = [name for name, val in (
+            ("--rate", args.rate),
+            ("--duration-s", args.duration_s),
+            ("--trace-in", args.trace_in),
+            ("--trace-out", args.trace_out),
+            ("--starvation-age-s", args.starvation_age_s),
+            ("--kv-blocks", args.kv_blocks),
+            ("--fault-bursts", args.fault_bursts or None),
+        ) if val is not None]
+        if args.sched_policy != "fifo":
+            used.append("--sched-policy")
+        if args.dispatch_policy != "round_robin":
+            used.append("--dispatch-policy")
+        if used:
+            ap.error(f"{', '.join(used)}: open-loop workload flag"
+                     f"{'s' if len(used) > 1 else ''} without "
+                     f"--workload — the closed-loop paper families "
+                     f"pace themselves on completions; pass "
+                     f"--workload {{{', '.join(WORKLOAD_CHOICES)}}} "
+                     f"for an open-loop run")
+    else:
+        for flag, val in (("--sweep", args.sweep),
+                          ("--trace", args.trace),
+                          ("--baseline", args.baseline),
+                          ("--check-baseline", args.check_baseline),
+                          ("--arch", args.arch)):
+            if val is not None:
+                ap.error(f"--workload is a standalone open-loop run; "
+                         f"it cannot combine with {flag}")
+        if args.fault_bursts < 0:
+            ap.error(f"--fault-bursts must be >= 0, got "
+                     f"{args.fault_bursts}")
+        if args.fault_burst_width_s <= 0:
+            ap.error(f"--fault-burst-width-s must be > 0, got "
+                     f"{args.fault_burst_width_s}")
+        if args.max_batch < 1:
+            ap.error(f"--max-batch must be >= 1, got {args.max_batch}")
+        if args.kv_blocks is not None and args.kv_blocks < 1:
+            ap.error(f"--kv-blocks must be >= 1, got {args.kv_blocks}")
+        if args.workload == "trace":
+            if args.trace_in is None:
+                ap.error("--workload trace replays a recorded trace; "
+                         "pass --trace-in PATH")
+            fixed = [n for n, v in (("--rate", args.rate),
+                                    ("--duration-s", args.duration_s))
+                     if v is not None]
+            if args.fault_bursts:
+                fixed.append("--fault-bursts")
+            if fixed:
+                ap.error(f"{', '.join(fixed)}: a replayed trace "
+                         f"already fixes its arrivals and fault "
+                         f"schedule; generator flags are mutually "
+                         f"exclusive with --trace-in")
+        else:
+            if args.trace_in is not None:
+                ap.error("--trace-in implies --workload trace; the "
+                         f"{args.workload} generator synthesizes its "
+                         "own arrivals")
+            if args.rate is None or args.duration_s is None:
+                ap.error(f"--workload {args.workload} is open-loop: "
+                         f"it needs --rate (req/s) and --duration-s")
+            if args.rate <= 0:
+                ap.error(f"--rate must be > 0, got {args.rate}")
+            if args.duration_s <= 0:
+                ap.error(f"--duration-s must be > 0, got "
+                         f"{args.duration_s}")
 
     axes = None
     if args.sweep is not None:
@@ -401,14 +541,20 @@ def main(argv: Optional[List[str]] = None) -> None:
     if args.cluster_spec is not None:
         # parse + consistency in one place, before any work or output
         if args.transport != "cluster" \
-                and not (axes and "transport" in axes):
-            ap.error("--cluster-spec needs --transport cluster (or a "
-                     "transport sweep axis)")
+                and not (axes and "transport" in axes) \
+                and args.workload is None:
+            ap.error("--cluster-spec needs --transport cluster, a "
+                     "transport sweep axis, or --workload")
         from repro.rpc.cluster import load_cluster_spec
         try:
             args.cluster_spec = load_cluster_spec(args.cluster_spec)
         except (OSError, ValueError, KeyError, TypeError) as e:
             ap.error(f"--cluster-spec: {e}")
+
+    if args.workload is not None:
+        rows = run_workload(args, ap)
+        _write_json(args, rows)
+        return
 
     from repro.core import bench
 
@@ -478,14 +624,76 @@ def main(argv: Optional[List[str]] = None) -> None:
             st.tracer.export_chrome(args.trace)
             print(f"wrote Chrome trace ({len(st.tracer.spans())} "
                   f"spans) to {args.trace}")
-    if args.json:
-        text = json.dumps({"schema": 2, "rows": rows}, indent=2)
-        if args.json == "-":
-            sys.stdout.write(text + "\n")
-        else:
-            with open(args.json, "w") as f:
-                f.write(text + "\n")
-            print(f"wrote {len(rows)} row(s) to {args.json}")
+    _write_json(args, rows)
+
+
+def _write_json(args, rows: List[dict]) -> None:
+    if not args.json:
+        return
+    text = json.dumps({"schema": 3, "rows": rows}, indent=2)
+    if args.json == "-":
+        sys.stdout.write(text + "\n")
+    else:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {len(rows)} row(s) to {args.json}")
+
+
+def run_workload(args, ap) -> List[dict]:
+    """Open-loop workload mode: build/replay the trace, serve it, and
+    print the SLO table. Returns the schema-3 workload row."""
+    from repro.workload import (Trace, correlated_burst_windows,
+                                format_slo_table, serve_workload,
+                                synthesize_trace)
+    if args.workload == "trace":
+        try:
+            trace = Trace.load(args.trace_in)
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            ap.error(f"--trace-in: {e}")
+    else:
+        trace = synthesize_trace(args.workload, args.rate,
+                                 args.duration_s, seed=args.seed,
+                                 prompt_kind=args.prompt_dist)
+        if args.fault_bursts:
+            correlated_burst_windows(
+                trace, n_windows=args.fault_bursts,
+                width_s=args.fault_burst_width_s)
+    if args.trace_out:
+        trace.save(args.trace_out)
+        print(f"wrote trace ({len(trace)} events, "
+              f"{len(trace.fault_windows)} fault windows) to "
+              f"{args.trace_out}")
+    try:
+        run = serve_workload(
+            trace, cluster=args.cluster_spec, n_ps=args.num_ps,
+            n_workers=args.num_workers,
+            dispatch_policy=args.dispatch_policy,
+            sched_policy=args.sched_policy,
+            starvation_age_s=args.starvation_age_s,
+            max_batch=args.max_batch, kv_blocks=args.kv_blocks,
+            deadline_s=args.deadline_s)
+    except ValueError as e:
+        ap.error(f"--workload: {e}")
+    kind = trace.meta.get("kind", "trace")
+    print(f"workload       : {kind} [{len(trace)} events over "
+          f"{trace.duration_s:.3f} s, seed {trace.seed}]")
+    print(f"serving        : {args.num_ps} ps x {args.num_workers} "
+          f"workers, sched {args.sched_policy}, dispatch "
+          f"{args.dispatch_policy}")
+    if trace.fault_windows:
+        print(f"fault windows  : {len(trace.fault_windows)} "
+              f"correlated burst-loss window"
+              f"{'s' if len(trace.fault_windows) > 1 else ''}")
+    print(format_slo_table(run.report))
+    return [{
+        "benchmark": "workload", "workload": kind,
+        "events": len(trace), "seed": trace.seed,
+        "sched_policy": args.sched_policy,
+        "dispatch_policy": args.dispatch_policy,
+        "fault_windows": len(trace.fault_windows),
+        "slo": run.report.to_dict(),
+        "rpc_metrics": run.metrics.snapshot(gauges=True),
+    }]
 
 
 if __name__ == "__main__":

@@ -34,7 +34,10 @@ per endpoint and ``--kv-blocks N`` sets the modeled KV-cache block
 budget (exhaustion preempts + requeues the newest request). With the
 cluster transport, ``--policy scheduler_least_loaded`` dispatches on
 the endpoints' reported scheduler load instead of the client's own
-outstanding-call counts.
+outstanding-call counts. ``--sched-policy sjf`` admits
+shortest-prompt-first instead of FIFO (``--starvation-age-s`` bounds
+how long a long prompt can be bypassed); see ``docs/WORKLOAD.md`` for
+driving a served cluster with recorded open-loop traces.
 """
 from __future__ import annotations
 
@@ -49,6 +52,7 @@ from repro.models import init_params
 from repro.parallel.sharding import make_ctx
 from repro.serve.engine import (DISPATCH_POLICIES, ServeConfig,
                                 ServeEngine)
+from repro.serve.scheduler import SCHED_POLICIES
 
 
 def _export_trace(tracer, path: str) -> None:
@@ -77,7 +81,9 @@ def _serve_cluster_rounds(engine: ServeEngine, cluster, args,
         client_interceptors=[metrics,
                              rpclib.RetryInterceptor(max_attempts=4)],
         server_interceptors=[metrics], tracer=tracer,
-        max_batch=args.max_batch, kv_blocks=args.kv_blocks)
+        max_batch=args.max_batch, kv_blocks=args.kv_blocks,
+        sched_policy=args.sched_policy,
+        starvation_age_s=args.starvation_age_s)
     rng = np.random.default_rng(0)
     print(f"cluster        : {len(stubs)} worker endpoint(s) -> "
           f"{len(next(iter(stubs.values())).servers)} ps endpoint(s), "
@@ -156,6 +162,17 @@ def main() -> None:
                          "KV-cache budget in 16-token blocks per "
                          "endpoint (default unlimited; exhaustion "
                          "preempts + requeues)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=SCHED_POLICIES,
+                    help="scheduler admission order: fifo (arrival "
+                         "order) or sjf (shortest-prompt-first, FIFO "
+                         "tiebreak; preempted requests and starved "
+                         "waits keep priority)")
+    ap.add_argument("--starvation-age-s", type=float, default=None,
+                    metavar="S",
+                    help="sjf only: waits older than this regain "
+                         "strict FIFO priority (default: no escape "
+                         "hatch)")
     args = ap.parse_args()
 
     if args.transport == "cluster" and args.cluster_spec is None:
@@ -169,9 +186,17 @@ def main() -> None:
         ap.error("--trace records fabric spans; it cannot combine with "
                  "--no-rpc")
     if args.no_rpc and (args.max_batch is not None
-                        or args.kv_blocks is not None):
-        ap.error("--max-batch/--kv-blocks configure the rpc endpoint "
+                        or args.kv_blocks is not None
+                        or args.sched_policy != "fifo"
+                        or args.starvation_age_s is not None):
+        ap.error("--max-batch/--kv-blocks/--sched-policy/"
+                 "--starvation-age-s configure the rpc endpoint "
                  "scheduler; they cannot combine with --no-rpc")
+    if args.starvation_age_s is not None and args.sched_policy != "sjf":
+        ap.error("--starvation-age-s is the sjf starvation escape "
+                 "hatch; it needs --sched-policy sjf")
+    if args.starvation_age_s is not None and args.starvation_age_s < 0:
+        ap.error("--starvation-age-s must be >= 0")
     if args.max_batch is not None and args.max_batch < 1:
         ap.error("--max-batch must be >= 1")
     if args.kv_blocks is not None and args.kv_blocks < 1:
@@ -207,9 +232,10 @@ def main() -> None:
     if not args.no_rpc:
         from repro import rpc as rpclib
         tracer = rpclib.Tracer() if args.trace else None
-        _, channel = engine.serve_loopback(tracer=tracer,
-                                           max_batch=args.max_batch,
-                                           kv_blocks=args.kv_blocks)
+        _, channel = engine.serve_loopback(
+            tracer=tracer, max_batch=args.max_batch,
+            kv_blocks=args.kv_blocks, sched_policy=args.sched_policy,
+            starvation_age_s=args.starvation_age_s)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

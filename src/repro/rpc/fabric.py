@@ -1230,13 +1230,23 @@ class RpcFabric:
         return self._cancel_expired() > 0
 
     # event loop --------------------------------------------------------
-    def flush(self) -> FlightReport:
+    def flush(self, *, until_s: Optional[float] = None) -> FlightReport:
         """Drive the event loop until every submitted call completes,
         every open response stream drains, and every expired deadline
-        has cancelled its call."""
+        has cancelled its call.
+
+        ``until_s`` bounds the drive by *fabric-clock time* instead:
+        the loop stops as soon as ``now()`` reaches it, leaving
+        unfinished calls pending for a later ``flush`` to continue —
+        the open-loop workload driver (``repro.workload.driver``)
+        rides this to interleave new arrivals with in-flight traffic
+        on the modeled clock. Flights are atomic, so the clock may
+        overshoot ``until_s`` by one flight."""
         rep = FlightReport(modeled=self.transport.modeled)
         t0 = time.perf_counter()
         while True:
+            if until_s is not None and self.now() >= until_s:
+                break
             if self._ctx and self._have_deadlines():
                 self._cancel_expired()
             if self._open_pumps():

@@ -189,14 +189,29 @@ class FaultInjectionTransport(Transport):
     let tests assert the schedule actually fired. Unknown attributes
     (``clock_s``, ``resolve``, ``channel_windows``, ``cluster``, ...)
     delegate to the wrapped transport, so the wrapper is drop-in for
-    loopback, simulated, and cluster fabrics alike."""
+    loopback, simulated, and cluster fabrics alike.
+
+    ``burst_windows`` adds *correlated* burst loss on top of the
+    i.i.d. schedule: a list of ``(t_start, t_end)`` or
+    ``(t_start, t_end, link)`` windows on the modeled clock during
+    which every eligible message is lost (``link`` is a directed
+    ``(src, dst)`` pair — names resolve through a cluster inner — or
+    None for all links). Real outages cluster in time; the workload
+    tier derives these windows from a trace's arrival bursts so fault
+    schedules correlate with load instead of sampling independently
+    per message. Windows need a modeled inner transport (the loss
+    condition is a clock read) and do not draw from the RNG or count
+    against ``max_faults`` — they are already time-bounded;
+    ``burst_faults_injected`` counts them separately (they also bump
+    ``faults_injected``, the total every lost message shares)."""
 
     def __init__(self, inner: Transport, *, seed: int = 0,
                  fault_rate: float = 0.0, stall_rate: float = 0.0,
                  latency_rate: float = 0.0, stall_s: float = 0.0,
                  latency_s: float = 0.0,
                  links: Optional[Iterable[Tuple[int, int]]] = None,
-                 max_faults: Optional[int] = None):
+                 max_faults: Optional[int] = None,
+                 burst_windows: Optional[Iterable[tuple]] = None):
         for rate in (fault_rate, stall_rate, latency_rate):
             assert 0.0 <= rate <= 1.0, rate
         assert fault_rate + stall_rate + latency_rate <= 1.0, \
@@ -215,8 +230,35 @@ class FaultInjectionTransport(Transport):
         self.max_faults = max_faults
         self.faults_injected = 0
         self.stalls_injected = 0
+        self.burst_faults_injected = 0
         self.extra_latency_s = 0.0
         self._rng = np.random.default_rng(seed)
+        self.burst_windows: List[Tuple[float, float,
+                                       Optional[Tuple[int, int]]]] = []
+        if burst_windows:
+            assert inner.modeled and hasattr(inner, "clock_s"), \
+                "burst_windows are defined on the modeled clock; the " \
+                "inner transport must be modeled (simulated/cluster)"
+            for w in burst_windows:
+                t0, t1 = float(w[0]), float(w[1])
+                assert t1 > t0, (t0, t1)
+                link = w[2] if len(w) > 2 else None
+                if link is not None:
+                    s, d = link
+                    if isinstance(s, str):
+                        s = inner.resolve(s)
+                    if isinstance(d, str):
+                        d = inner.resolve(d)
+                    link = (int(s), int(d))
+                self.burst_windows.append((t0, t1, link))
+
+    def _in_burst(self, m: Message) -> bool:
+        if not self.burst_windows:
+            return False
+        t = self.inner.clock_s
+        return any(t0 <= t < t1
+                   and (link is None or (m.src, m.dst) == link)
+                   for t0, t1, link in self.burst_windows)
 
     # the wrapped transport's identity -----------------------------------
     @property
@@ -259,6 +301,14 @@ class FaultInjectionTransport(Transport):
         through: List[Message] = []
         extra = 0.0
         for m in messages:
+            if self._in_burst(m):
+                self.burst_faults_injected += 1
+                self.faults_injected += 1
+                faulted.append(replace(
+                    m, frame=replace(m.frame,
+                                     flags=m.frame.flags
+                                     | framing.FLAG_FAULT)))
+                continue
             draw = (self._rng.random()
                     if self._eligible(m) and self._budget_left()
                     else 1.0)

@@ -138,12 +138,19 @@ class ServeEngine:
 
     def make_scheduler(self, *, max_batch: int = 8,
                        kv_blocks: Optional[int] = None,
-                       block_size: int = 16) -> ServeScheduler:
+                       block_size: int = 16,
+                       sched_policy: str = "fifo",
+                       starvation_age_s: Optional[float] = None
+                       ) -> ServeScheduler:
         """A continuous-batching scheduler over this engine's model
-        ops (``attach`` builds one per served endpoint)."""
+        ops (``attach`` builds one per served endpoint).
+        ``sched_policy`` picks the admission order (``fifo`` or
+        ``sjf``; see :class:`repro.serve.scheduler.ServeScheduler`)."""
         return ServeScheduler(self, max_batch=max_batch,
                               kv_blocks=kv_blocks,
-                              block_size=block_size)
+                              block_size=block_size,
+                              policy=sched_policy,
+                              starvation_age_s=starvation_age_s)
 
     def generate_tokens(self, prompts: np.ndarray,
                         max_new_tokens: Optional[int] = None
@@ -203,7 +210,9 @@ class ServeEngine:
 
     def attach(self, server, *, max_batch: int = 8,
                kv_blocks: Optional[int] = None,
-               block_size: int = 16) -> ServeScheduler:
+               block_size: int = 16, sched_policy: str = "fifo",
+               starvation_age_s: Optional[float] = None
+               ) -> ServeScheduler:
         """Bind this engine's Serve service on an ``rpc.Server``, with
         a dedicated continuous-batching scheduler for the endpoint
         (``self.schedulers[endpoint]``; also returned). The scheduler
@@ -212,27 +221,19 @@ class ServeEngine:
         chain has one (under ``serve:scheduler@<endpoint>``)."""
         sched = self.make_scheduler(max_batch=max_batch,
                                     kv_blocks=kv_blocks,
-                                    block_size=block_size).bind(server)
+                                    block_size=block_size,
+                                    sched_policy=sched_policy,
+                                    starvation_age_s=starvation_age_s)
         self.schedulers[server.endpoint] = sched
-        server.add_service(SERVE_SERVICE, {
-            "generate":
-                lambda bufs: self.rpc_handler(bufs, scheduler=sched),
-            "generate_stream":
-                lambda bufs: self.rpc_stream_handler(bufs,
-                                                     scheduler=sched),
-        })
-        metrics = next((si for si in server.interceptors
-                        if isinstance(si, MetricsInterceptor)), None)
-        if metrics is not None:
-            metrics.attach_gauges(f"serve:scheduler@{server.endpoint}",
-                                  sched.stats)
-        return sched
+        return bind_scheduler(server, sched)
 
     def serve_loopback(self, *, endpoint: int = 0, client: int = 1,
                        serialized: bool = True, tracer=None,
                        max_batch: int = 8,
                        kv_blocks: Optional[int] = None,
-                       block_size: int = 16):
+                       block_size: int = 16,
+                       sched_policy: str = "fifo",
+                       starvation_age_s: Optional[float] = None):
         """One-call wiring for single-host serving experiments: a
         loopback-transport fabric with this engine at ``endpoint``.
         ``tracer`` (a ``rpc.Tracer``) records per-call span trees —
@@ -246,7 +247,9 @@ class ServeEngine:
                                   max(endpoint, client) + 1),
             tracer=tracer)
         self.attach(fabric.add_server(endpoint), max_batch=max_batch,
-                    kv_blocks=kv_blocks, block_size=block_size)
+                    kv_blocks=kv_blocks, block_size=block_size,
+                    sched_policy=sched_policy,
+                    starvation_age_s=starvation_age_s)
         return fabric, fabric.channel(client, endpoint,
                                       serialized=serialized)
 
@@ -257,7 +260,9 @@ class ServeEngine:
                       server_interceptors=None, fault=None,
                       tracer=None, max_batch: int = 8,
                       kv_blocks: Optional[int] = None,
-                      block_size: int = 16):
+                      block_size: int = 16,
+                      sched_policy: str = "fifo",
+                      starvation_age_s: Optional[float] = None):
         """Multi-endpoint serving over a cluster transport: this
         engine's ``Serve`` service bound on every ``ps_job`` endpoint
         of ``cluster`` (a ``rpc.ClusterSpec`` / dict / JSON), one
@@ -311,7 +316,9 @@ class ServeEngine:
                                             metrics=metrics))
         for name in ps:
             self.attach(fabric.add_server(name), max_batch=max_batch,
-                        kv_blocks=kv_blocks, block_size=block_size)
+                        kv_blocks=kv_blocks, block_size=block_size,
+                        sched_policy=sched_policy,
+                        starvation_age_s=starvation_age_s)
         stubs = {w: ShardedServeStub(fabric, w, ps, policy=policy,
                                      serialized=serialized)
                  for w in workers}
@@ -377,6 +384,48 @@ def _build_serve_service():
 
 #: the serving service: unary ``generate`` + streaming ``generate_stream``
 SERVE_SERVICE = _build_serve_service()
+
+
+def serve_handlers(scheduler: ServeScheduler):
+    """The ``Serve`` service handler table over a scheduler: unary
+    ``generate`` runs the request to completion in the endpoint's
+    shared continuous batch; ``generate_stream`` wraps the request's
+    token stream in an ``rpc.StreamPump`` (one chunk per flush
+    iteration). Engine-agnostic — anything implementing the scheduler
+    model ops serves through it, which is how the workload tier serves
+    a model-free synthetic engine over the same wire surface."""
+    def generate(bufs: List[np.ndarray]) -> List[np.ndarray]:
+        prompts, mnt = decode_generate_request(bufs)
+        out = scheduler.run(scheduler.submit(prompts, mnt or None))
+        return encode_generate_reply(out)
+
+    def generate_stream(bufs: List[np.ndarray]):
+        from repro import rpc as rpclib
+        prompts, mnt = decode_generate_request(bufs)
+        req = scheduler.submit(prompts, mnt or None)
+        pump = rpclib.StreamPump(
+            [_i32_buf(tok)] for tok in scheduler.stream_tokens(req))
+        req.pump = pump          # phase spans attribute to this call
+        return pump
+
+    return {"generate": generate, "generate_stream": generate_stream}
+
+
+def bind_scheduler(server, scheduler: ServeScheduler) -> ServeScheduler:
+    """Wire one scheduler onto one ``rpc.Server`` endpoint: adopt the
+    server's clock/tracer, register the ``Serve`` service, and publish
+    the scheduler's counters through a server-side
+    ``MetricsInterceptor`` when the chain has one (under
+    ``serve:scheduler@<endpoint>`` — the gauge the
+    ``scheduler_least_loaded`` dispatch policy reads)."""
+    scheduler.bind(server)
+    server.add_service(SERVE_SERVICE, serve_handlers(scheduler))
+    metrics = next((si for si in server.interceptors
+                    if isinstance(si, MetricsInterceptor)), None)
+    if metrics is not None:
+        metrics.attach_gauges(f"serve:scheduler@{server.endpoint}",
+                              scheduler.stats)
+    return scheduler
 
 #: wire name of the unary method (kept for callers that log/match on it)
 GENERATE_METHOD = SERVE_SERVICE.full_name("generate")

@@ -39,6 +39,9 @@ from typing import Any, Deque, Dict, Iterator, List, Optional
 
 import numpy as np
 
+#: admission-ordering policies a ServeScheduler understands
+SCHED_POLICIES = ("fifo", "sjf")
+
 #: request lifecycle states
 WAITING = "waiting"
 RUNNING = "running"
@@ -107,17 +110,35 @@ class ServeScheduler:
     ``kv_blocks=None`` disables the cache budget (admission is then
     capped by ``max_batch`` alone). The budget must fit at least one
     sequence: a lone over-budget request still runs — a scheduler that
-    preempted its only request would livelock."""
+    preempted its only request would livelock.
+
+    ``policy`` orders admission from the wait queue: ``"fifo"``
+    (arrival order, the default) or ``"sjf"`` — shortest-prompt-first
+    with FIFO tiebreak, which cuts mean queueing delay under
+    heavy-tailed prompt lengths at the cost of delaying long prompts.
+    Two guards keep SJF safe: preempted requests always resume before
+    fresh admissions (their recompute debt only grows while they
+    wait), and a request whose wait exceeds ``starvation_age_s``
+    regains strict FIFO priority (the starvation escape hatch — a
+    stream of short prompts can otherwise park a long one forever)."""
 
     def __init__(self, engine, *, max_batch: int = 8,
-                 kv_blocks: Optional[int] = None, block_size: int = 16):
+                 kv_blocks: Optional[int] = None, block_size: int = 16,
+                 policy: str = "fifo",
+                 starvation_age_s: Optional[float] = None):
         assert max_batch >= 1, max_batch
         assert kv_blocks is None or kv_blocks >= 1, kv_blocks
         assert block_size >= 1, block_size
+        if policy not in SCHED_POLICIES:
+            raise ValueError(f"unknown scheduler policy {policy!r}; "
+                             f"choose from {SCHED_POLICIES}")
+        assert starvation_age_s is None or starvation_age_s >= 0.0
         self.engine = engine
         self.max_batch = max_batch
         self.kv_blocks = kv_blocks
         self.block_size = block_size
+        self.policy = policy
+        self.starvation_age_s = starvation_age_s
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.counters: Dict[str, int] = {
@@ -212,16 +233,43 @@ class ServeScheduler:
         need = req.blocks(block_size=self.block_size, extra=1)
         return self.used_blocks(extra=1) + need <= self.kv_blocks
 
+    def _next_index(self) -> int:
+        """Index into ``waiting`` of the next request to admit.
+        FIFO: the head. SJF: preempted requests first (resume debt),
+        then any request past the starvation age (FIFO among those),
+        then shortest prompt with FIFO (submit-id) tiebreak."""
+        if self.policy == "fifo" or len(self.waiting) <= 1:
+            return 0
+        preempted = [i for i, r in enumerate(self.waiting)
+                     if r.state == PREEMPTED]
+        if preempted:
+            return min(preempted,
+                       key=lambda i: self.waiting[i].id)
+        if self.starvation_age_s is not None:
+            now = self._now()
+            starved = [i for i, r in enumerate(self.waiting)
+                       if now - r._phase_t0 >= self.starvation_age_s]
+            if starved:
+                return min(starved, key=lambda i: self.waiting[i].id)
+        return min(range(len(self.waiting)),
+                   key=lambda i: (self.waiting[i].prompt_len,
+                                  self.waiting[i].id))
+
     # the shared decode step -------------------------------------------
     def step(self) -> int:
         """One tick of the continuous batch: admit/resume what fits,
         preempt on budget exhaustion, then advance every running
         request one token. Returns the number of tokens produced."""
         fresh: List[Request] = []
-        # join: head-of-queue order, bounded by max_batch + kv budget
-        while self.waiting and len(self.running) < self.max_batch \
-                and self._fits(self.waiting[0]):
-            req = self.waiting.popleft()
+        # join: policy order, bounded by max_batch + kv budget (the
+        # selected candidate not fitting blocks further admission —
+        # no fill-around, so an almost-admitted request cannot starve)
+        while self.waiting and len(self.running) < self.max_batch:
+            idx = self._next_index()
+            if not self._fits(self.waiting[idx]):
+                break
+            req = self.waiting[idx]
+            del self.waiting[idx]
             resumed = req.state == PREEMPTED
             self._close_phase(req, WAITING if not resumed else PREEMPTED)
             t0 = self._now()
@@ -305,10 +353,12 @@ class ServeScheduler:
         out["running"] = len(self.running)
         out["waiting"] = len(self.waiting)
         out["used_blocks"] = self.used_blocks()
+        out["policy"] = self.policy
         if self.kv_blocks is not None:
             out["kv_blocks"] = self.kv_blocks
         return out
 
 
 __all__ = ["CANCELLED", "FINISHED", "PREEMPTED", "RUNNING", "Request",
-           "ServeScheduler", "WAITING", "blocks_per_seq"]
+           "SCHED_POLICIES", "ServeScheduler", "WAITING",
+           "blocks_per_seq"]

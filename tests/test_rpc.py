@@ -454,7 +454,7 @@ def test_bench_comm_sweep_single_table(capsys, tmp_path):
                      "--num-workers", "4", "--json", str(out)])
     table = capsys.readouterr().out
     doc = _json.loads(out.read_text())
-    assert doc["schema"] == 2
+    assert doc["schema"] == 3
     rows = doc["rows"]
     assert len(rows) == 3 * 2              # schemes x modes
     combos = {(r["scheme"], r["mode"]) for r in rows}

@@ -396,3 +396,107 @@ def test_scheduler_least_loaded_steers_to_idle_shard(eng):
     for r in (r1, r2):
         assert np.array_equal(sched0.run(r),
                               eng.generate(r.prompts))
+
+
+# ---------------------------------------------------------------------------
+# admission policy (sjf)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    """Minimal server stand-in: gives the scheduler a controllable
+    clock (bind() only reads .clock/.tracer/.endpoint)."""
+    endpoint = 0
+    tracer = None
+
+    def __init__(self):
+        self.t = 0.0
+
+    def clock(self):
+        return self.t
+
+
+def _admission_order(sched, reqs):
+    order, seen = [], set()
+    while not all(r.finished for r in reqs):
+        sched.step()
+        for r in sched.running:
+            if r.id not in seen:
+                seen.add(r.id)
+                order.append(r.id)
+    return order
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        ServeScheduler(FakeEngine(), policy="lifo")
+
+
+def test_sjf_admits_shortest_first_with_fifo_tiebreak():
+    # one slot: admission order is fully observable. Two plen-2
+    # requests tie -> earlier submit id wins; the plen-8 goes last.
+    eng = FakeEngine()
+    sched = ServeScheduler(eng, max_batch=1, policy="sjf")
+    long_ = sched.submit(_prompts(1, 8, 3))
+    a = sched.submit(_prompts(1, 2, 5))
+    b = sched.submit(_prompts(1, 2, 9))
+    assert _admission_order(sched, [long_, a, b]) \
+        == [a.id, b.id, long_.id]
+    assert sched.stats()["policy"] == "sjf"
+    # fifo baseline: same prompts admit in arrival order
+    fifo = ServeScheduler(FakeEngine(), max_batch=1, policy="fifo")
+    r1 = fifo.submit(_prompts(1, 8, 3))
+    r2 = fifo.submit(_prompts(1, 2, 5))
+    r3 = fifo.submit(_prompts(1, 2, 9))
+    assert _admission_order(fifo, [r1, r2, r3]) \
+        == [r1.id, r2.id, r3.id]
+
+
+def test_sjf_preempted_resumes_before_shorter_fresh_request():
+    # block_size=1 makes the budget arithmetic transparent: two plen-4
+    # requests outgrow kv_blocks=12 at generated=2, evicting the
+    # newest (r2). A fresh plen-1 request then joins the queue — but
+    # r2's recompute debt wins: it resumes (rebuild, not prefill)
+    # ahead of the shorter newcomer, and every stream still delivers
+    # its exact token sequence.
+    eng = FakeEngine()
+    sched = ServeScheduler(eng, max_batch=2, kv_blocks=12,
+                           block_size=1, policy="sjf")
+    r1 = sched.submit(_prompts(1, 4, 1))
+    r2 = sched.submit(_prompts(1, 4, 2))
+    for _ in range(3):
+        sched.step()
+    assert r2.state == PREEMPTED and r2 in sched.waiting
+    short = sched.submit(_prompts(1, 1, 7))
+    while not r2.state == "running":
+        sched.step()
+    assert sched.running[0] is r2        # resumed ahead of `short`
+    assert eng.rebuilds == 1
+    for r in (r1, r2, short):
+        sched.run(r)
+        assert all(np.array_equal(t, e)
+                   for t, e in zip(r.tokens, _expected(r)))
+
+
+def test_sjf_starvation_age_restores_fifo_priority():
+    # a long prompt parked past starvation_age_s regains strict FIFO
+    # priority over fresh short prompts
+    clock = _Clock()
+    sched = ServeScheduler(FakeEngine(), max_batch=1, policy="sjf",
+                           starvation_age_s=1.0).bind(clock)
+    long_ = sched.submit(_prompts(1, 8, 3))
+    short1 = sched.submit(_prompts(1, 2, 5))
+    while not short1.finished:           # sjf favors short1 first
+        sched.step()
+    assert not long_.finished
+    clock.t = 2.0                        # long_ now starved (age 2.0)
+    short2 = sched.submit(_prompts(1, 2, 9))
+    sched.step()
+    assert sched.running[0] is long_     # fifo escape hatch fired
+    assert not short2.finished
+    # control: without the escape hatch, short2 would have won
+    ctrl = ServeScheduler(FakeEngine(), max_batch=1,
+                          policy="sjf").bind(_Clock())
+    c_long = ctrl.submit(_prompts(1, 8, 3))
+    c_short = ctrl.submit(_prompts(1, 2, 5))
+    ctrl.step()
+    assert ctrl.running[0] is c_short and c_long in ctrl.waiting

@@ -152,3 +152,64 @@ def test_metrics_interceptors_can_share_one_registry():
     assert m2.registry.get("latency:echo").count == 1
     m1.reset()
     assert reg.get("latency:echo") is None     # reset removes its keys
+
+
+# ---------------------------------------------------------------------------
+# extreme tails (p999 / p9999): the percentiles SLO reports lean on
+# ---------------------------------------------------------------------------
+
+def test_extreme_tails_exact_regime_match_numpy():
+    # 4096 samples fit the exact cap, so p999/p9999 interpolate over
+    # the raw data exactly like np.percentile — including the far
+    # tail, where a single sample dominates
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(-9, 2.5, EXACT_CAP)
+    h = BoundedHistogram()
+    h.extend(samples)
+    assert not h.bucketed
+    for q in (99.9, 99.99):
+        assert h.percentile(q) == float(np.percentile(samples, q))
+    assert h.percentile(99.9) <= h.percentile(99.99) <= h.max
+
+
+def test_extreme_tails_folded_regime_conservative_and_monotone():
+    rng = np.random.default_rng(8)
+    samples = rng.lognormal(-9, 2.0, 50000)
+    h = BoundedHistogram(exact_cap=50)
+    h.extend(samples)
+    assert h.bucketed
+    p999 = h.percentile(99.9)
+    p9999 = h.percentile(99.99)
+    # conservative: bucket-upper-edge rounding can only over-report a
+    # tail latency, never hide it
+    assert p999 >= float(np.percentile(samples, 99.9))
+    assert p9999 >= float(np.percentile(samples, 99.99))
+    # monotone in q, clamped to the exact max
+    assert h.percentile(99) <= p999 <= p9999 <= h.max
+    assert h.max == samples.max()
+
+
+def test_extreme_tails_single_outlier_survives_fold():
+    # one 10x outlier among 5k fast samples: p9999 must report it
+    # (rank 99.99% of 5001 = 5000.5 > 5000 lands on the outlier) even
+    # after folding
+    h = BoundedHistogram(exact_cap=10)
+    h.extend(np.full(5000, 1e-6))
+    h.record(1e-5)
+    assert h.bucketed
+    assert h.percentile(99.99) >= 1e-5 * 0.999  # the outlier's bucket
+    assert h.percentile(50) < 2e-6
+    assert h.percentile(99.99) <= h.max == 1e-5
+
+
+def test_extreme_tails_quantization_error_bounded_by_resolution():
+    # the folded p999 overshoot is bounded by one bucket's width:
+    # ratio upper/lower edge = 10**(1/buckets_per_decade)
+    rng = np.random.default_rng(9)
+    samples = rng.lognormal(-9, 1.0, 30000)
+    h = BoundedHistogram(exact_cap=10, buckets_per_decade=32)
+    h.extend(samples)
+    step = 10.0 ** (1.0 / 32)
+    for q in (99.0, 99.9, 99.99):
+        exact = float(np.percentile(samples, q))
+        assert exact <= h.percentile(q) <= exact * step * 1.01

@@ -1,7 +1,7 @@
 """Distributed tracing over the fabric: span trees on the modeled
 clock, the phase-partition invariant, trace-id propagation in the frame
 header, Chrome trace-event export, the bench_comm phase breakdown /
---trace / schema-2 JSON surface, and the perf-baseline telemetry
+--trace / schema-3 JSON surface, and the perf-baseline telemetry
 round trip. Ends with the acceptance scenario: a cluster-transport
 serve run under faults whose retried, failed-over server-stream call
 shows stall -> fault -> backoff -> re-route -> delivery as nested
@@ -197,7 +197,7 @@ def _bench_json(tmp_path, *extra):
 def test_bench_comm_json_schema_and_phase_breakdown(tmp_path, capsys):
     doc = _bench_json(tmp_path)
     assert set(doc) == {"schema", "rows"}      # versioned envelope
-    assert doc["schema"] == 2
+    assert doc["schema"] == 3
     (row,) = doc["rows"]
     phases = row["rpc_phases"]["Incast/push_fetch"]
     assert phases["calls"] > 0

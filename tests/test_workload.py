@@ -1,0 +1,448 @@
+"""Workload tier unit + property tests: seeded arrival processes and
+heavy-tailed length samplers (determinism, bounds, distribution
+sanity), exact trace JSON round-trips, correlated burst-loss windows
+on the fault transport, the open-loop driver's pacing over the bounded
+flush, and the SLO report fold. The full-stack acceptance scenario
+lives in test_workload_e2e.py."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_support import given, settings, st
+from repro import rpc
+from repro.workload import (ARRIVALS, SIZE_CATEGORIES, SyntheticEngine,
+                            Trace, TraceEvent, build_slo_report,
+                            bursty_arrivals, correlated_burst_windows,
+                            diurnal_arrivals, fixed_lengths,
+                            format_slo_table, lognormal_lengths,
+                            make_arrivals, make_lengths,
+                            materialize_prompts, poisson_arrivals,
+                            serve_workload, synthesize_trace,
+                            zipf_lengths)
+
+# ---------------------------------------------------------------------------
+# arrivals
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(ARRIVALS))
+def test_arrivals_sorted_bounded_deterministic(kind):
+    a = make_arrivals(kind, 50.0, 2.0, seed=3)
+    b = make_arrivals(kind, 50.0, 2.0, seed=3)
+    np.testing.assert_array_equal(a, b)       # pure function of seed
+    assert np.all(np.diff(a) >= 0)            # sorted
+    assert np.all((a >= 0) & (a < 2.0))       # within the horizon
+    c = make_arrivals(kind, 50.0, 2.0, seed=4)
+    assert len(c) == 0 or len(a) == 0 or not np.array_equal(a, c)
+
+
+def test_poisson_rate_matches():
+    # 2000 expected events: the sample mean rate lands within 10%
+    a = poisson_arrivals(200.0, 10.0, seed=0)
+    assert abs(len(a) / 10.0 - 200.0) < 20.0
+
+
+def test_bursty_is_burstier_than_poisson():
+    # index of dispersion of per-bin counts: ~1 for Poisson, > 1 for
+    # the on-off modulated process (that is what "bursty" means)
+    def dispersion(times, duration, bins=50):
+        counts, _ = np.histogram(times, bins=bins,
+                                 range=(0.0, duration))
+        return counts.var() / max(counts.mean(), 1e-9)
+
+    p = poisson_arrivals(100.0, 20.0, seed=1)
+    b = bursty_arrivals(100.0, 20.0, seed=1, burst_factor=6.0,
+                        idle_factor=0.1)
+    assert dispersion(b, 20.0) > 2.0 * dispersion(p, 20.0)
+
+
+def test_diurnal_follows_the_rate_curve():
+    # arrivals in the peak half-period outnumber the trough's
+    a = diurnal_arrivals(100.0, 10.0, seed=2, period_s=10.0,
+                         depth=0.9)
+    peak = np.sum(a < 5.0)       # sin >= 0 half
+    trough = np.sum(a >= 5.0)    # sin <= 0 half
+    assert peak > 1.5 * trough
+
+
+def test_make_arrivals_unknown_kind():
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        make_arrivals("weibull", 1.0, 1.0)
+
+
+@given(st.integers(min_value=0, max_value=2**31),
+       st.floats(min_value=0.5, max_value=200.0),
+       st.floats(min_value=0.1, max_value=5.0))
+@settings(max_examples=25, deadline=None)
+def test_poisson_arrivals_properties(seed, rate, duration):
+    a = poisson_arrivals(rate, duration, seed=seed)
+    b = poisson_arrivals(rate, duration, seed=seed)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) >= 0)
+    assert np.all((a >= 0) & (a < duration))
+
+
+# ---------------------------------------------------------------------------
+# lengths
+# ---------------------------------------------------------------------------
+
+
+def test_length_samplers_bounds_and_determinism():
+    for fn, kw in ((lognormal_lengths, dict(lo=2, hi=64)),
+                   (zipf_lengths, dict(lo=2, hi=64))):
+        a = fn(500, seed=5, **kw)
+        np.testing.assert_array_equal(a, fn(500, seed=5, **kw))
+        assert a.dtype == np.int64
+        assert a.min() >= 2 and a.max() <= 64
+
+
+def test_zipf_is_heavy_tailed():
+    a = zipf_lengths(5000, seed=0, alpha=1.2, lo=1, hi=128)
+    # mass concentrates at short lengths but the tail is populated
+    assert np.mean(a <= 4) > 0.4
+    assert a.max() > 64
+
+
+def test_fixed_lengths_and_size_categories():
+    np.testing.assert_array_equal(fixed_lengths(3, value=9),
+                                  np.full(3, 9))
+    for cat, value in SIZE_CATEGORIES.items():
+        np.testing.assert_array_equal(make_lengths(cat, 4),
+                                      np.full(4, value))
+    with pytest.raises(ValueError, match="unknown length sampler"):
+        make_lengths("pareto", 4)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_round_trip_exact(tmp_path):
+    tr = synthesize_trace("poisson", 50.0, 1.0, seed=11,
+                          prompt_kind="zipf")
+    correlated_burst_windows(tr, n_windows=2, width_s=0.1,
+                             link=(1, 0))
+    path = tmp_path / "t.json"
+    tr.save(str(path))
+    tr2 = Trace.load(str(path))
+    assert [e.to_row() for e in tr2.events] \
+        == [e.to_row() for e in tr.events]   # float64-exact
+    assert tr2.fault_windows == tr.fault_windows
+    assert tr2.seed == tr.seed and tr2.meta == tr.meta
+
+
+def test_trace_schema_gate():
+    doc = json.loads(synthesize_trace("poisson", 5.0, 0.5).to_json())
+    doc["schema"] = 99
+    with pytest.raises(ValueError, match="schema 99"):
+        Trace.from_json(json.dumps(doc))
+
+
+def test_trace_orders_events_and_rejects_duplicate_ids():
+    ev = [TraceEvent(id=1, t_s=0.5, prompt_len=4, max_new_tokens=2),
+          TraceEvent(id=0, t_s=0.1, prompt_len=4, max_new_tokens=2)]
+    tr = Trace(events=ev)
+    assert [e.id for e in tr.events] == [0, 1]
+    with pytest.raises(AssertionError, match="duplicate"):
+        Trace(events=[ev[0], ev[0]])
+
+
+def test_synthesize_trace_deterministic():
+    a = synthesize_trace("bursty", 30.0, 1.5, seed=8)
+    b = synthesize_trace("bursty", 30.0, 1.5, seed=8)
+    assert [e.to_row() for e in a.events] \
+        == [e.to_row() for e in b.events]
+    c = synthesize_trace("bursty", 30.0, 1.5, seed=9)
+    assert [e.to_row() for e in a.events] \
+        != [e.to_row() for e in c.events]
+
+
+@given(st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=20, deadline=None)
+def test_trace_json_round_trip_property(seed):
+    tr = synthesize_trace("poisson", 20.0, 0.5, seed=seed)
+    tr2 = Trace.from_json(tr.to_json())
+    assert [e.to_row() for e in tr2.events] \
+        == [e.to_row() for e in tr.events]
+
+
+def test_materialize_prompts_deterministic_per_event():
+    ev = TraceEvent(id=3, t_s=0.0, prompt_len=7, max_new_tokens=2)
+    a = materialize_prompts(5, ev)
+    np.testing.assert_array_equal(a, materialize_prompts(5, ev))
+    assert a.shape == (1, 7) and a.dtype == np.int32
+    other = TraceEvent(id=4, t_s=0.0, prompt_len=7, max_new_tokens=2)
+    assert not np.array_equal(a, materialize_prompts(5, other))
+
+
+# ---------------------------------------------------------------------------
+# correlated burst-loss windows (FaultInjectionTransport)
+# ---------------------------------------------------------------------------
+
+
+def _cluster_fault(burst_windows, n=3):
+    inner = rpc.make_transport(
+        "cluster", cluster=rpc.homogeneous(n, "eth40g"))
+    return rpc.make_transport("fault", inner=inner,
+                              burst_windows=burst_windows)
+
+
+def test_burst_window_drops_only_inside_the_window():
+    t = _cluster_fault([(1.0, 2.0, None)])
+    fab = rpc.RpcFabric(t)
+    fab.add_server(0).register("echo", lambda bufs: bufs)
+    ch = fab.channel(1, 0)
+    buf = [np.zeros(64, dtype=np.uint8)]
+
+    call = ch.call("echo", buf)
+    fab.flush()
+    assert call.done and call.error is None       # before the window
+    assert t.burst_faults_injected == 0
+
+    t.clock_s = 1.5                               # inside the window
+    call = ch.call("echo", buf)
+    fab.flush()
+    assert call.error is not None
+    assert t.burst_faults_injected >= 1
+    assert t.faults_injected >= t.burst_faults_injected
+
+    t.clock_s = 5.0                               # after the window
+    call = ch.call("echo", buf)
+    fab.flush()
+    assert call.done and call.error is None
+
+
+def test_burst_window_link_restriction_resolves_names():
+    # window only on worker0 -> ps0; the other worker sails through
+    cluster = rpc.ps_worker_cluster(1, 2)
+    inner = rpc.make_transport("cluster", cluster=cluster)
+    t = rpc.make_transport(
+        "fault", inner=inner,
+        burst_windows=[(0.0, 100.0, ("worker0", "ps0"))])
+    ps0 = cluster.job_endpoints("ps")[0]
+    w0, w1 = cluster.job_endpoints("worker")
+    assert t.burst_windows[0][2] == (inner.resolve(w0),
+                                     inner.resolve(ps0))
+    fab = rpc.RpcFabric(t)
+    fab.add_server(ps0).register("echo", lambda bufs: bufs)
+    buf = [np.zeros(64, dtype=np.uint8)]
+    bad = fab.channel(w0, ps0).call("echo", buf)
+    good = fab.channel(w1, ps0).call("echo", buf)
+    fab.flush()
+    assert bad.error is not None and t.burst_faults_injected >= 1
+    assert good.done and good.error is None
+
+
+def test_burst_window_requires_modeled_inner():
+    inner = rpc.make_transport("loopback", 2)
+    assert not inner.modeled
+    with pytest.raises(AssertionError, match="modeled"):
+        rpc.make_transport("fault", inner=inner,
+                           burst_windows=[(0.0, 1.0)])
+
+
+def test_burst_windows_bypass_max_faults():
+    # max_faults=0 silences the i.i.d. schedule; windows still drop
+    t = _cluster_fault(None)
+    t2 = rpc.make_transport(
+        "fault",
+        inner=rpc.make_transport("cluster",
+                                 cluster=rpc.homogeneous(2, "eth40g")),
+        fault_rate=1.0, max_faults=0,
+        burst_windows=[(0.0, 1e9, None)])
+    fab = rpc.RpcFabric(t2)
+    fab.add_server(0).register("echo", lambda bufs: bufs)
+    call = fab.channel(1, 0).call("echo",
+                                  [np.zeros(8, dtype=np.uint8)])
+    fab.flush()
+    assert call.error is not None
+    assert t2.burst_faults_injected >= 1
+
+
+def test_correlated_burst_windows_attach_to_trace():
+    tr = synthesize_trace("poisson", 40.0, 2.0, seed=1)
+    wins = correlated_burst_windows(tr, n_windows=3, width_s=0.25)
+    assert wins == tr.fault_windows and len(wins) == 3
+    for t0, t1, link in wins:
+        assert 0.0 <= t0 < t1 <= tr.duration_s + 0.25 + 1e-9
+        assert abs((t1 - t0) - 0.25) < 1e-12 and link is None
+    # seeded off the trace seed: same trace -> same windows
+    tr2 = synthesize_trace("poisson", 40.0, 2.0, seed=1)
+    assert correlated_burst_windows(tr2, n_windows=3,
+                                    width_s=0.25) == wins
+
+
+# ---------------------------------------------------------------------------
+# bounded flush (the driver's pacing hook)
+# ---------------------------------------------------------------------------
+
+
+def test_flush_until_s_leaves_pending_work():
+    t = rpc.make_transport("cluster",
+                           cluster=rpc.homogeneous(2, "eth40g"))
+    fab = rpc.RpcFabric(t)
+    fab.add_server(0).register("echo", lambda bufs: bufs)
+    ch = fab.channel(1, 0)
+    call = ch.call("echo", [np.zeros(1 << 20, dtype=np.uint8)])
+    fab.flush(until_s=0.0)          # bound at/before now: no progress
+    assert not call.done
+    fab.flush()                     # unbounded drains it
+    assert call.done and call.error is None
+
+
+def test_flush_until_s_monotone_and_resumable():
+    t = rpc.make_transport("cluster",
+                           cluster=rpc.homogeneous(2, "eth40g"))
+    fab = rpc.RpcFabric(t)
+    fab.add_server(0).register("echo", lambda bufs: bufs)
+    ch = fab.channel(1, 0)
+    calls = [ch.call("echo", [np.zeros(1 << 18, dtype=np.uint8)])
+             for _ in range(8)]
+    t0 = fab.now()
+    fab.flush(until_s=t0)            # bound at now: zero progress
+    assert fab.now() == t0 and not any(c.done for c in calls)
+    fab.flush(until_s=t0 + 1e-9)     # clock only ever moves forward
+    mid = fab.now()
+    assert mid >= t0
+    fab.flush()                      # resuming drains everything
+    assert fab.now() >= mid
+    assert all(c.done and c.error is None for c in calls)
+
+
+def test_driver_pacing_fires_events_at_their_arrival_times():
+    # two events 1s apart on an otherwise-idle fabric: the driver must
+    # jump the modeled clock across the gap, so the second submit
+    # happens at (not before) its scheduled arrival
+    from repro.workload.driver import run_trace
+    from repro.serve.engine import ShardedServeStub, bind_scheduler
+    from repro.serve.scheduler import ServeScheduler
+
+    cluster = rpc.ps_worker_cluster(1, 1)
+    fab = rpc.RpcFabric(rpc.make_transport("cluster", cluster=cluster))
+    eng = SyntheticEngine()
+    ps0 = cluster.job_endpoints("ps")[0]
+    w0 = cluster.job_endpoints("worker")[0]
+    bind_scheduler(fab.add_server(ps0), ServeScheduler(eng))
+    stubs = {w0: ShardedServeStub(fab, w0, [ps0])}
+    tr = Trace(events=[
+        TraceEvent(id=0, t_s=0.0, prompt_len=4, max_new_tokens=2),
+        TraceEvent(id=1, t_s=1.0, prompt_len=4, max_new_tokens=2)])
+    rec = run_trace(tr, fab, stubs)
+    r0, r1 = rec.records[0], rec.records[1]
+    assert r0["outcome"] == "ok" and r1["outcome"] == "ok"
+    assert r0["submit_s"] == pytest.approx(0.0, abs=1e-6)
+    # the first request completed long before the second arrived …
+    assert r0["end_s"] < 1.0
+    # … and the second was *not* submitted early to fill the idle gap
+    assert r1["submit_s"] == pytest.approx(1.0, abs=1e-6)
+    assert r1["end_s"] > 1.0
+    # the recorder uninstalls itself after the run
+    assert all(not isinstance(ic, type(rec))
+               for ic in fab.client_interceptors)
+
+
+# ---------------------------------------------------------------------------
+# SLO report
+# ---------------------------------------------------------------------------
+
+
+def _rec(eid, arrival, first, end, *, chunks=4, ok=True,
+         outcome="ok"):
+    return {"id": eid, "arrival_s": arrival, "submit_s": arrival,
+            "first_chunk_s": first, "end_s": end, "chunks": chunks,
+            "attempts": 1, "ok": ok, "outcome": outcome}
+
+
+def test_slo_report_math():
+    records = [
+        _rec(0, 0.0, 0.010, 0.040),                     # in SLO
+        _rec(1, 0.1, 0.200, 0.400),                     # misses 0.25s
+        _rec(2, 0.2, None, 0.300, chunks=0),            # unary-ish
+        _rec(3, 0.3, None, None, ok=False,
+             outcome="deadline_exceeded"),
+        _rec(4, 0.4, None, None, ok=False, outcome="error"),
+    ]
+    rep = build_slo_report(records, span_s=1.0, deadline_s=0.25)
+    assert rep.offered == 5
+    assert rep.completed_ok == 3
+    assert rep.errors == 1 and rep.deadline_exceeded == 1
+    # goodput counts ok AND within deadline: events 0 and 2
+    assert rep.goodput_rps == pytest.approx(2.0)
+    assert rep.offered_rps == pytest.approx(5.0)
+    assert rep.slo_attainment == pytest.approx(2 / 5)
+    # ttft: event 0 -> 0.010, event 1 -> 0.100, event 2 -> 0.100 (end)
+    assert rep.ttft["n"] == 3
+    assert rep.ttft["p50"] == pytest.approx(0.1, abs=1e-9)
+    # per-token only from streams with >= 2 chunks: events 0, 1
+    assert rep.per_token["n"] == 2
+    assert rep.per_token["p999"] >= rep.per_token["p50"]
+    table = format_slo_table(rep)
+    assert "goodput" in table and "p999" in table
+    assert "deadline_exceeded 1" in table
+
+
+def test_slo_report_empty():
+    rep = build_slo_report([], span_s=1.0)
+    assert rep.offered == 0 and rep.slo_attainment == 0.0
+    assert rep.ttft == {"n": 0}
+    assert "(no samples)" in format_slo_table(rep)
+
+
+# ---------------------------------------------------------------------------
+# driver (small runs; the acceptance scenario is test_workload_e2e)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_workload_all_tokens_correct():
+    tr = synthesize_trace("poisson", 25.0, 1.0, seed=21,
+                          prompt_kind="lognormal",
+                          prompt_kw={"lo": 2, "hi": 32})
+    run = serve_workload(tr, n_ps=1, n_workers=2, max_new_tokens=3)
+    assert run.report.completed_ok == len(tr)
+    assert run.report.errors == 0
+    by_id = {e.id: e for e in tr.events}
+    for rec in run.records:
+        ev = by_id[rec["id"]]
+        assert rec["outcome"] == "ok"
+        assert rec["chunks"] == ev.max_new_tokens
+        assert rec["end_s"] >= ev.t_s            # causality
+        assert rec["first_chunk_s"] <= rec["end_s"]
+
+
+def test_serve_workload_sjf_policy_reaches_schedulers():
+    tr = synthesize_trace("poisson", 10.0, 0.5, seed=2)
+    run = serve_workload(tr, n_ps=2, n_workers=1,
+                        sched_policy="sjf", starvation_age_s=1.0)
+    for sched in run.schedulers.values():
+        assert sched.policy == "sjf"
+        assert sched.stats()["policy"] == "sjf"
+
+
+def test_serve_workload_rejects_oversized_trace():
+    tr = Trace(events=[TraceEvent(id=0, t_s=0.0, prompt_len=100,
+                                  max_new_tokens=8)])
+    with pytest.raises(ValueError, match="max_seq"):
+        serve_workload(tr, max_seq=64)
+
+
+def test_serve_workload_needs_ps_and_workers():
+    tr = synthesize_trace("poisson", 5.0, 0.5, seed=0)
+    with pytest.raises(ValueError, match="worker"):
+        serve_workload(tr, cluster=rpc.homogeneous(2, "eth40g"))
+
+
+def test_synthetic_engine_expected_tokens():
+    eng = SyntheticEngine()
+    prompts = np.arange(12, dtype=np.int32).reshape(1, 12)
+    exp = SyntheticEngine.expected_tokens(prompts, 4)
+    base = int(prompts.sum()) % 997
+    np.testing.assert_array_equal(exp, base + 7 * np.arange(4))
+
+    class _Req:
+        pass
+    req = _Req()
+    req.prompts, req.rows, req.tokens = prompts, 1, []
+    np.testing.assert_array_equal(eng.scheduler_prefill(req),
+                                  np.full(1, exp[0]))
