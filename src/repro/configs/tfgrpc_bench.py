@@ -37,6 +37,12 @@ class BenchConfig:
     num_ps: int = 1
     num_workers: int = 1
     mode: str = "non_serialized"     # non_serialized | serialized
+    # wire mode of the rpc datapath: serialized | scatter_gather |
+    # zero_copy. None derives it from `mode` (serialized ->
+    # "serialized", non_serialized -> "scatter_gather"); set it
+    # explicitly to reach the zero-copy shared-buffer-pool tier.
+    # An explicit value wins over `mode`.
+    wire_mode: Optional[str] = None
     scheme: str = "uniform"          # uniform | random | skew
     skew_bias: str = "large"         # large | medium | small (skew only)
     iovec_count: int = 10
@@ -75,6 +81,15 @@ class BenchConfig:
     # (modeled transports always trace — spans cost nothing on the
     # modeled clock); bench_comm --trace exports the Chrome JSON
     trace: bool = False
+
+    @property
+    def resolved_wire_mode(self) -> str:
+        """The effective wire mode: explicit ``wire_mode`` wins, else
+        derived from the paper's two-valued ``mode`` field."""
+        if self.wire_mode is not None:
+            return self.wire_mode
+        return ("serialized" if self.mode == "serialized"
+                else "scatter_gather")
 
 
 # §4.5 experiment: 2 parameter servers, 3 workers

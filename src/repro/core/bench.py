@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.configs.tfgrpc_bench import BenchConfig
 from repro.core import channels as ch
-from repro.core.netmodel import NETWORKS
+from repro.core.netmodel import NETWORKS, WIRE_MODES
 from repro.core.payload import PayloadSpec, generate_spec
 from repro.core.resource import ResourceMonitor, ResourceReport
 
@@ -84,31 +84,42 @@ def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
         p95_s=float(np.percentile(a, 95)), min_s=float(a.min()),
         max_s=float(a.max()), derived=derived, resources=res)
     for net_name, net in NETWORKS.items():
-        serialized = cfg.mode == "serialized"
+        mode = cfg.resolved_wire_mode
         if name == "p2p_latency":
-            st.model_projection[net_name] = net.rtt(spec,
-                                                    serialized=serialized)
+            st.model_projection[net_name] = net.rtt(spec, mode=mode)
         elif name == "p2p_bandwidth":
             st.model_projection[net_name] = net.bandwidth(
-                spec, serialized=serialized)
+                spec, mode=mode)
         elif name == "fully_connected":
             st.model_projection[net_name] = net.fc_throughput(
-                spec, cfg.num_workers, serialized=serialized)
+                spec, cfg.num_workers, mode=mode)
         elif name == "ring":
             st.model_projection[net_name] = net.ring_throughput(
                 spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
-                serialized=serialized)
+                mode=mode)
         elif name == "incast":
             st.model_projection[net_name] = net.incast_throughput(
                 spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
-                serialized=serialized, fetch_ratio=cfg.fetch_ratio)
+                mode=mode, fetch_ratio=cfg.fetch_ratio)
         else:
             st.model_projection[net_name] = net.ps_throughput(
-                spec, cfg.num_ps, cfg.num_workers, serialized=serialized)
+                spec, cfg.num_ps, cfg.num_workers, mode=mode)
     return st
 
 
+def _check_collective_mode(cfg: BenchConfig) -> None:
+    """The collective transport lowers frames onto device ppermute
+    schedules — there is no shared host buffer pool to point descriptors
+    at, so the zero-copy tier is undefined there. Loud error (a SKIPPED
+    sweep cell) instead of silently pricing it as scatter-gather."""
+    if cfg.resolved_wire_mode == "zero_copy":
+        raise RuntimeError(
+            "wire_mode=zero_copy is not supported on the collective "
+            "transport; use --transport loopback|simulated|cluster")
+
+
 def _prep(cfg: BenchConfig, need: int):
+    _check_collective_mode(cfg)
     mesh = ch.make_net_mesh()
     n = mesh.shape[ch.AXIS]
     if n < need:
@@ -184,11 +195,12 @@ def _make_fabric(cfg: BenchConfig, spec: PayloadSpec, n_endpoints: int,
     from repro import rpc as rpclib
     from repro.core.payload import materialize
 
-    serialized = cfg.mode == "serialized"
+    serialized = cfg.resolved_wire_mode == "serialized"
     bufs = None
     per_endpoint = False
     endpoint_name = None
     if cfg.transport == "collective":
+        _check_collective_mode(cfg)
         mesh = ch.make_net_mesh()
         if mesh.shape[ch.AXIS] < n_endpoints:
             raise RuntimeError(
@@ -264,17 +276,16 @@ def _cluster_projection(st: BenchStats, cfg: BenchConfig, fabric,
         # the one-flight closed form no longer applies — publish no
         # number rather than one the run is not expected to match
         return
-    serialized = cfg.mode == "serialized"
+    mode = cfg.resolved_wire_mode
     sizes = list(spec.sizes)
     if st.name == "fully_connected":
-        t = cluster_lib.cluster_fc_round_time(cl, sizes,
-                                              serialized=serialized)
+        t = cluster_lib.cluster_fc_round_time(cl, sizes, mode=mode)
     elif st.name == "ring":
         t = cluster_lib.cluster_ring_round_time(
-            cl, sizes, n_chunks=n_chunks, serialized=serialized)
+            cl, sizes, n_chunks=n_chunks, mode=mode)
     else:
         t = cluster_lib.cluster_incast_round_time(
-            cl, sizes, n_chunks=n_chunks, serialized=serialized,
+            cl, sizes, n_chunks=n_chunks, mode=mode,
             fetch_ratio=cfg.fetch_ratio)
     st.model_projection["cluster"] = st.derived["rpcs_per_round"] / t
 
@@ -320,11 +331,11 @@ def fully_connected(cfg: BenchConfig) -> BenchStats:
     spec = generate_spec(cfg)
     fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers,
                                          "fully_connected")
-    serialized = cfg.mode == "serialized"
+    wire_mode = cfg.resolved_wire_mode
 
     def exchange():
         return rpclib.fully_connected_exchange(
-            fabric, list(spec.sizes), bufs=bufs, serialized=serialized)
+            fabric, list(spec.sizes), bufs=bufs, wire_mode=wire_mode)
 
     rpcs = ch.fc_rpcs_per_round(cfg.num_workers)
     with ResourceMonitor() as mon:
@@ -349,12 +360,12 @@ def ring(cfg: BenchConfig) -> BenchStats:
     n_chunks = max(1, cfg.stream_chunks)
     fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers,
                                          "ring")
-    serialized = cfg.mode == "serialized"
+    wire_mode = cfg.resolved_wire_mode
 
     def exchange():
         return rpclib.ring_exchange(fabric, list(spec.sizes),
                                     n_chunks=n_chunks, bufs=bufs,
-                                    serialized=serialized)
+                                    wire_mode=wire_mode)
 
     rpcs = ch.ring_rpcs_per_round(cfg.num_workers, n_chunks)
     with ResourceMonitor() as mon:
@@ -385,12 +396,12 @@ def incast(cfg: BenchConfig) -> BenchStats:
     # endpoint 0 is the server; workers are 1..num_workers
     fabric, bufs, metrics = _make_fabric(cfg, spec, cfg.num_workers + 1,
                                          "incast")
-    serialized = cfg.mode == "serialized"
+    wire_mode = cfg.resolved_wire_mode
 
     def exchange():
         return rpclib.incast_exchange(fabric, list(spec.sizes),
                                       n_chunks=n_chunks, bufs=bufs,
-                                      serialized=serialized,
+                                      wire_mode=wire_mode,
                                       fetch_ratio=cfg.fetch_ratio)
 
     rpcs = ch.incast_rpcs_per_round(cfg.num_workers, n_chunks)
@@ -432,7 +443,23 @@ def run(cfg: BenchConfig) -> BenchStats:
 # clock) — so a fresh run diffs clean against the committed file unless
 # the pricing model or the fabric's behavior actually changed.
 
-BASELINE_SCHEMA = 1
+BASELINE_SCHEMA = 2
+
+#: measured flush-loop hot-path numbers (dev container, PR 9): the
+#: zero-copy datapath work profiled and trimmed the numpy pack path
+#: (preallocated output instead of per-buffer np.pad + np.concatenate),
+#: the uint8 coercion fast path, and SimulatedTransport.deliver's
+#: per-message dict churn (one accumulator dict instead of four).
+#: Informational — check_baseline compares only families/wire_modes.
+PERF_NOTES = {
+    "encode_serialized_us_per_frame": {"before": 117.7, "after": 18.2},
+    "simulated_deliver_64msg_us_per_flight": {"before": 445.7,
+                                              "after": 112.0},
+    "loopback_fc_serialized_ms_per_round": {"before": 8.26,
+                                            "after": 5.4},
+    "loopback_fc_scatter_gather_ms_per_round": {"before": 6.49,
+                                                "after": 5.0},
+}
 
 
 def collect_baseline(network: str = "eth40g", num_ps: int = 2,
@@ -476,8 +503,37 @@ def collect_baseline(network: str = "eth40g", num_ps: int = 2,
         families[fam] = {"round_time_s": st.mean_s,
                          "throughput": st.derived["rpcs_per_s"],
                          "metric": "rpcs_per_s"}
+    # per-wire-mode coverage (schema 2): the paper's three-way
+    # Ethernet/IPoIB/RDMA analogue as serialized / scatter_gather /
+    # zero_copy — closed forms for the paper families, exact simulated
+    # runs for the fabric families
+    wire_modes: Dict[str, dict] = {}
+    for wm in WIRE_MODES:
+        mrtt = net.rtt(spec, mode=wm)
+        mbw = net.bandwidth(spec, mode=wm)
+        entry: Dict[str, dict] = {
+            "p2p_latency": {"round_time_s": mrtt,
+                            "throughput": 1.0 / mrtt,
+                            "metric": "rounds_per_s"},
+            "p2p_bandwidth": {
+                "round_time_s": spec.total_bytes / (mbw * 1e6),
+                "throughput": mbw, "metric": "MBps"},
+            "ps_throughput": {
+                "round_time_s": net.ps_round_time(spec, num_ps,
+                                                  num_workers, mode=wm),
+                "throughput": net.ps_throughput(spec, num_ps,
+                                                num_workers, mode=wm),
+                "metric": "rpcs_per_s"},
+        }
+        for fam in FABRIC_BENCHMARKS:
+            st = run(replace(base, benchmark=fam, wire_mode=wm))
+            entry[fam] = {"round_time_s": st.mean_s,
+                          "throughput": st.derived["rpcs_per_s"],
+                          "metric": "rpcs_per_s"}
+        wire_modes[wm] = entry
     return {"schema": BASELINE_SCHEMA, "config": config,
-            "families": families}
+            "families": families, "wire_modes": wire_modes,
+            "perf_notes": PERF_NOTES}
 
 
 def check_baseline(baseline: dict, rel_tol: float = 0.01) -> List[str]:
@@ -486,16 +542,23 @@ def check_baseline(baseline: dict, rel_tol: float = 0.01) -> List[str]:
     the run still matches within ``rel_tol`` relative tolerance)."""
     fresh = collect_baseline(**baseline.get("config", {}))
     problems: List[str] = []
-    for fam, want in baseline.get("families", {}).items():
-        got = fresh["families"].get(fam)
+
+    def diff(want: dict, got, label: str) -> None:
         if got is None:
-            problems.append(f"{fam}: family missing from fresh run")
-            continue
+            problems.append(f"{label}: family missing from fresh run")
+            return
         for key in ("round_time_s", "throughput"):
             a, b = float(want[key]), float(got[key])
             rel = abs(b - a) / max(abs(a), 1e-30)
             if rel > rel_tol:
                 problems.append(
-                    f"{fam}.{key}: baseline {a:.6g} vs fresh {b:.6g} "
+                    f"{label}.{key}: baseline {a:.6g} vs fresh {b:.6g} "
                     f"(rel drift {rel:.3%} > tol {rel_tol:.3%})")
+
+    for fam, want in baseline.get("families", {}).items():
+        diff(want, fresh["families"].get(fam), fam)
+    for wm, fams in baseline.get("wire_modes", {}).items():
+        fresh_wm = fresh["wire_modes"].get(wm, {})
+        for fam, want in fams.items():
+            diff(want, fresh_wm.get(fam), f"{wm}/{fam}")
     return problems

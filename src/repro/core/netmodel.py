@@ -27,6 +27,24 @@ from typing import Dict, Sequence, Tuple
 
 from repro.core.payload import PayloadSpec
 
+#: the three wire modes, in paper order (Ethernet/IPoIB/RDMA analogue).
+#: Must equal repro.rpc.framing.WIRE_MODES (pinned by tests) — defined
+#: here too so the model layer never imports the rpc fabric.
+WIRE_MODES = ("serialized", "scatter_gather", "zero_copy")
+
+
+def resolve_wire_mode(serialized: bool = False,
+                      mode: "str | None" = None) -> str:
+    """Resolve the (legacy ``serialized`` bool, explicit ``mode``) pair
+    every closed form accepts: an explicit mode wins, else the bool
+    picks serialized vs scatter-gather."""
+    if mode is None:
+        return "serialized" if serialized else "scatter_gather"
+    if mode not in WIRE_MODES:
+        raise ValueError(f"unknown wire mode {mode!r}; "
+                         f"expected one of {WIRE_MODES}")
+    return mode
+
 
 @dataclass(frozen=True)
 class NetworkModel:
@@ -41,59 +59,103 @@ class NetworkModel:
     # and the ~4x PS-throughput gap the paper measures.
     cpu_copy_Bps: float = float("inf")
     serialization_Bps: float = 1.2e9  # protobuf pack rate (CPU-bound)
+    # zero-copy mode: one-time registration (pinning) cost of a shared
+    # buffer-pool region, amortized over its steady-state reuse — the
+    # only copy-path cost a one-sided write pays per transfer
+    registration_s: float = 3e-4
+    pool_reuse: int = 64
 
     # ------------------------------------------------------------------
     def msg_time(self, nbytes: int) -> float:
         return self.alpha_s + nbytes / self.beta_Bps
 
-    def payload_time(self, spec: PayloadSpec, *, serialized: bool) -> float:
-        """One-way transfer time of one payload.
+    def copy_cost(self, spec: PayloadSpec, mode: str) -> float:
+        """The per-mode copy-path cost of one payload transfer, on top
+        of the shared wire term (alpha + bytes/beta + rpc overhead):
 
-        non-serialized: each iovec buffer is a separate wire message
-        (recvmsg/sendmsg scatter-gather still pays per-buffer alpha' —
-        modeled as one alpha per buffer batch of 4, measured behaviour of
-        iovec batching) plus the shared rpc overhead.
-        serialized: single packed message + serialization copy cost.
+        serialized      pack+unpack: every byte through the protobuf
+                        serializer at ``serialization_Bps``.
+        scatter_gather  per-iovec fixed cost: one extra alpha per
+                        4-buffer sendmsg/recvmsg batch beyond the first
+                        (measured iovec-batching behaviour).
+        zero_copy       registration only: the region pin cost
+                        amortized over ``pool_reuse`` placements —
+                        steady-state transfers touch no copy path.
         """
-        if serialized:
-            wire = self.msg_time(spec.total_bytes)
-            ser = spec.total_bytes / self.serialization_Bps
-            return wire + ser + self.rpc_overhead_s
-        n_batches = max(1, -(-spec.n_buffers // 4))
-        return (self.alpha_s * n_batches
-                + spec.total_bytes / self.beta_Bps
+        if mode == "serialized":
+            return spec.total_bytes / self.serialization_Bps
+        if mode == "scatter_gather":
+            n_batches = max(1, -(-spec.n_buffers // 4))
+            return self.alpha_s * (n_batches - 1)
+        if mode == "zero_copy":
+            return self.registration_s / self.pool_reuse
+        raise ValueError(f"unknown wire mode {mode!r}; "
+                         f"expected one of {WIRE_MODES}")
+
+    def _payload_time_raw(self, total_bytes: int, n_buffers: int,
+                          mode: str) -> float:
+        """:meth:`payload_time` on raw (total, n_buffers, mode) args —
+        the transport flush-loop hot path prices every message through
+        this, skipping PayloadSpec construction. Must stay arithmetic-
+        identical to msg_time + rpc_overhead + copy_cost (the closed
+        forms match the simulated transport bit-for-bit)."""
+        base = (self.alpha_s + total_bytes / self.beta_Bps
                 + self.rpc_overhead_s)
+        if mode == "scatter_gather":
+            n_batches = max(1, -(-n_buffers // 4))
+            return base + self.alpha_s * (n_batches - 1)
+        if mode == "serialized":
+            return base + total_bytes / self.serialization_Bps
+        if mode == "zero_copy":
+            return base + self.registration_s / self.pool_reuse
+        raise ValueError(f"unknown wire mode {mode!r}; "
+                         f"expected one of {WIRE_MODES}")
 
-    def rtt(self, spec: PayloadSpec, *, serialized: bool = False) -> float:
+    def payload_time(self, spec: PayloadSpec, *, serialized: bool = False,
+                     mode: "str | None" = None) -> float:
+        """One-way transfer time of one payload: the shared wire term
+        (one alpha + bytes/beta + rpc overhead) plus the per-mode
+        :meth:`copy_cost`. ``mode`` (a :data:`WIRE_MODES` name) wins
+        over the legacy ``serialized`` bool."""
+        mode = resolve_wire_mode(serialized, mode)
+        return self._payload_time_raw(spec.total_bytes, spec.n_buffers,
+                                      mode)
+
+    def rtt(self, spec: PayloadSpec, *, serialized: bool = False,
+            mode: "str | None" = None) -> float:
         """Echo RTT (paper's P2P latency benchmark: payload both ways)."""
-        return 2.0 * self.payload_time(spec, serialized=serialized)
+        return 2.0 * self.payload_time(spec, serialized=serialized,
+                                       mode=mode)
 
-    def bandwidth(self, spec: PayloadSpec, *, serialized: bool = False
-                  ) -> float:
+    def bandwidth(self, spec: PayloadSpec, *, serialized: bool = False,
+                  mode: "str | None" = None) -> float:
         """MB/s of the one-way bandwidth benchmark (payload + tiny ack)."""
-        t = self.payload_time(spec, serialized=serialized) \
+        t = self.payload_time(spec, serialized=serialized, mode=mode) \
             + self.msg_time(64)
         return spec.total_bytes / t / 1e6
 
     def ps_round_time(self, spec: PayloadSpec, n_ps: int, n_workers: int,
-                      *, serialized: bool = False) -> float:
+                      *, serialized: bool = False,
+                      mode: "str | None" = None) -> float:
         """One PS round: every worker pushes its update to every PS and
         gets the ack/fetch back. PS ingress is the bottleneck: each PS
         serves n_workers RPCs; PSes work in parallel; per-PS RPCs
         serialize on its NIC/stack, and their host-side copies contend
         on the PS CPU (quadratic queueing term; zero for RDMA)."""
-        per_rpc = (self.payload_time(spec, serialized=serialized)
+        per_rpc = (self.payload_time(spec, serialized=serialized,
+                                     mode=mode)
                    + self.msg_time(64))
         contention = (n_workers * (n_workers - 1)
                       * spec.total_bytes / self.cpu_copy_Bps)
         return per_rpc * n_workers + contention
 
     def ps_throughput(self, spec: PayloadSpec, n_ps: int, n_workers: int,
-                      *, serialized: bool = False) -> float:
+                      *, serialized: bool = False,
+                      mode: "str | None" = None) -> float:
         """Aggregate RPCs/s (paper fig 13/14)."""
         rpcs = n_ps * n_workers
         return rpcs / self.ps_round_time(spec, n_ps, n_workers,
-                                         serialized=serialized)
+                                         serialized=serialized, mode=mode)
 
     def egress_time(self, spec: PayloadSpec) -> float:
         """Sender-side cost of pumping one payload onto the wire (alpha
@@ -101,14 +163,16 @@ class NetworkModel:
         return spec.total_bytes / self.beta_Bps
 
     def fc_round_time(self, spec: PayloadSpec, n_workers: int, *,
-                      serialized: bool = False) -> float:
+                      serialized: bool = False,
+                      mode: "str | None" = None) -> float:
         """One fully-connected exchange: every endpoint sends the
         payload to every other (n*(n-1) RPCs). Receiver-bound like the
         PS round — each endpoint ingests n-1 RPCs serially on its
         NIC/stack, with the same quadratic host-copy contention term
         (zero for RDMA) — plus the endpoint's own n-1 payload egress.
         Matches rpc.SimulatedTransport pricing."""
-        per_rpc = (self.payload_time(spec, serialized=serialized)
+        per_rpc = (self.payload_time(spec, serialized=serialized,
+                                     mode=mode)
                    + self.msg_time(64))
         contention = ((n_workers - 1) * (n_workers - 2)
                       * spec.total_bytes / self.cpu_copy_Bps)
@@ -116,15 +180,17 @@ class NetworkModel:
         return per_rpc * (n_workers - 1) + contention + egress
 
     def fc_throughput(self, spec: PayloadSpec, n_workers: int, *,
-                      serialized: bool = False) -> float:
+                      serialized: bool = False,
+                      mode: "str | None" = None) -> float:
         """Aggregate RPCs/s of the fully-connected exchange."""
         rpcs = n_workers * (n_workers - 1)
         return rpcs / self.fc_round_time(spec, n_workers,
-                                         serialized=serialized)
+                                         serialized=serialized, mode=mode)
 
     def ring_round_time(self, spec: PayloadSpec, n_workers: int, *,
                         n_chunks: int = 1,
-                        serialized: bool = False) -> float:
+                        serialized: bool = False,
+                        mode: "str | None" = None) -> float:
         """One chunked ring pass: every worker streams n_chunks payload
         chunks to its successor, all workers concurrently. Each node
         ingests n_chunks messages from its predecessor (serial on its
@@ -134,7 +200,8 @@ class NetworkModel:
         Matches rpc.SimulatedTransport pricing of rpc.ring_exchange
         exactly (one flight, chunk-major)."""
         del n_workers  # rings pipeline perfectly; kept for API symmetry
-        per_rpc = (self.payload_time(spec, serialized=serialized)
+        per_rpc = (self.payload_time(spec, serialized=serialized,
+                                     mode=mode)
                    + self.msg_time(64))
         contention = (n_chunks * (n_chunks - 1)
                       * spec.total_bytes / self.cpu_copy_Bps)
@@ -143,16 +210,19 @@ class NetworkModel:
 
     def ring_throughput(self, spec: PayloadSpec, n_workers: int, *,
                         n_chunks: int = 1,
-                        serialized: bool = False) -> float:
+                        serialized: bool = False,
+                        mode: "str | None" = None) -> float:
         """Aggregate chunk-RPCs/s of the ring pass."""
         rpcs = n_workers * n_chunks
         return rpcs / self.ring_round_time(spec, n_workers,
                                            n_chunks=n_chunks,
-                                           serialized=serialized)
+                                           serialized=serialized,
+                                           mode=mode)
 
     def incast_round_time(self, spec: PayloadSpec, n_workers: int, *,
                           n_chunks: int = 1,
                           serialized: bool = False,
+                          mode: "str | None" = None,
                           fetch_ratio: float = 1.0) -> float:
         """The Cori-style PS hotspot: n_workers stream n_chunks payload
         chunks each into ONE server, which answers every stream with a
@@ -169,7 +239,8 @@ class NetworkModel:
         (push flight + fetch flight, asymmetric fetch sizes
         included)."""
         from repro.core.payload import classify, scale_sizes
-        per_rpc = (self.payload_time(spec, serialized=serialized)
+        per_rpc = (self.payload_time(spec, serialized=serialized,
+                                     mode=mode)
                    + self.msg_time(64))
         k = n_workers * n_chunks
         push = (per_rpc * k
@@ -181,7 +252,8 @@ class NetworkModel:
             fspec = PayloadSpec(sizes=fsizes, scheme=spec.scheme,
                                 categories=tuple(classify(s)
                                                  for s in fsizes))
-        per_fetch_rpc = (self.payload_time(fspec, serialized=serialized)
+        per_fetch_rpc = (self.payload_time(fspec, serialized=serialized,
+                                           mode=mode)
                          + self.msg_time(64))
         per_worker_fetch = (per_fetch_rpc * n_chunks
                             + n_chunks * (n_chunks - 1)
@@ -209,12 +281,14 @@ class NetworkModel:
     def incast_throughput(self, spec: PayloadSpec, n_workers: int, *,
                           n_chunks: int = 1,
                           serialized: bool = False,
+                          mode: "str | None" = None,
                           fetch_ratio: float = 1.0) -> float:
         """Aggregate pushed chunk-RPCs/s of the incast round."""
         rpcs = n_workers * n_chunks
         return rpcs / self.incast_round_time(spec, n_workers,
                                              n_chunks=n_chunks,
                                              serialized=serialized,
+                                             mode=mode,
                                              fetch_ratio=fetch_ratio)
 
 
@@ -249,13 +323,16 @@ class LinkLoad:
 
     ``model`` is the link's *resolved* NetworkModel (dst endpoint base +
     per-link overrides); host-side rates in it are the dst endpoint's
-    own. ``serialized`` applies to every message of the load — split a
-    link's messages into two loads when modes mix."""
+    own. ``serialized``/``mode`` apply to every message of the load —
+    split a link's messages into separate loads when modes mix. An
+    explicit ``mode`` (a :data:`WIRE_MODES` name) wins over the legacy
+    ``serialized`` bool."""
     src: int
     dst: int
     model: NetworkModel
     specs: Tuple[PayloadSpec, ...]
     serialized: bool = False
+    mode: "str | None" = None
 
     @property
     def n_msgs(self) -> int:
@@ -269,7 +346,8 @@ class LinkLoad:
 def link_time(load: LinkLoad) -> float:
     """Receiver-side serialization of one link's messages (payload +
     64B ack each) on the link's resolved model."""
-    return sum(load.model.payload_time(s, serialized=load.serialized)
+    return sum(load.model.payload_time(s, serialized=load.serialized,
+                                       mode=load.mode)
                + load.model.msg_time(64) for s in load.specs)
 
 

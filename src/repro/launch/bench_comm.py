@@ -34,9 +34,13 @@ over a multi-endpoint ClusterSpec — pass --cluster-spec with inline
 JSON or a file path, or get a homogeneous cluster on --network;
 cluster rows carry per-endpoint interceptor metrics). --fetch-ratio
 sizes the incast fetch payload relative to the push (gradient-push vs
-variable-pull asymmetry). --sweep takes a comma-separated list of axes
-(scheme,
-mode, transport, benchmark, network, workers, stream_chunks — the last
+variable-pull asymmetry). --wire-mode picks the rpc datapath encoding
+explicitly (serialized | scatter_gather | zero_copy; default derives
+from --mode) — zero_copy places payloads in a pre-registered shared
+BufferPool and ships (pool, offset, size) descriptors instead of
+bytes. --sweep takes a comma-separated list of axes (scheme,
+mode, wire_mode, payload, transport, benchmark, network, workers,
+stream_chunks — the last
 two generate scaling curves) and runs the full cross-product of their
 values in one invocation. Fabric-family rows carry per-method
 interceptor metrics (call counts + latency percentiles) under
@@ -85,6 +89,8 @@ TRANSPORT_CHOICES = ("collective", "loopback", "simulated", "cluster")
 SWEEP_AXES = {
     "scheme": ("uniform", "random", "skew"),
     "mode": ("non_serialized", "serialized"),
+    "wire_mode": ("serialized", "scatter_gather", "zero_copy"),
+    "payload": ("small", "medium", "large"),
     "transport": TRANSPORT_CHOICES,
     "benchmark": FABRIC_BENCHMARKS,
     "network": None,     # filled from netmodel.NETWORKS lazily
@@ -129,6 +135,7 @@ def _build_config(args, payload_spec, **overrides):
         categories=tuple(args.categories.split(",")),
         warmup_s=args.warmup, duration_s=args.duration, seed=args.seed,
         network=args.network, transport=args.transport,
+        wire_mode=args.wire_mode,
         stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
         deadline_s=args.deadline_s, admission_limit=args.admission_limit,
         cluster_spec=args.cluster_spec, payload_spec=payload_spec,
@@ -142,8 +149,10 @@ def _print_single(st, cfg, args) -> None:
     tail = "/" + cfg.skew_bias if scheme == "skew" else ""
     extra = f", {cfg.transport}" if cfg.benchmark in FABRIC_BENCHMARKS \
         else ""
+    wm = (f", wire={cfg.resolved_wire_mode}" if cfg.wire_mode is not None
+          else "")
     print(f"benchmark      : {st.name} [{scheme}{tail}, {cfg.mode}"
-          f"{extra}]")
+          f"{wm}{extra}]")
     print(f"payload        : {st.spec.n_buffers} iovecs, "
           f"{st.spec.total_bytes/1e6:.3f} MB")
     projected = (cfg.benchmark in FABRIC_BENCHMARKS
@@ -205,13 +214,21 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
             # benchmarks that read the chunk count — fully_connected
             # would repeat identical rows dressed up as a curve
             vals = tuple(b for b in vals if b in ("ring", "incast"))
+        if ax == "payload":
+            # the payload axis restricts the generator to ONE size
+            # category per cell — a per-category S/M/L curve
+            values.append([("categories", (v,)) for v in vals])
+            continue
         values.append([(AXIS_FIELD.get(ax, ax), v) for v in vals])
     rows = []
     for combo in itertools.product(*values):
         overrides = dict(combo)
         cfg = _build_config(args, payload_spec, **overrides)
         row = {"benchmark": cfg.benchmark, "scheme": cfg.scheme,
-               "mode": cfg.mode, "network": _effective_network(cfg)}
+               "mode": cfg.mode, "wire_mode": cfg.resolved_wire_mode,
+               "network": _effective_network(cfg)}
+        if "payload" in axes:
+            row["payload"] = cfg.categories[0]
         if "workers" in axes:
             row["workers"] = cfg.num_workers
         if "stream_chunks" in axes:
@@ -237,8 +254,9 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
 
 
 def _print_sweep(rows: List[dict]) -> None:
-    cols = ["benchmark", "scheme", "mode", "transport", "network"]
-    for extra in ("workers", "stream_chunks"):   # swept scaling axes
+    cols = ["benchmark", "scheme", "mode", "wire_mode", "transport",
+            "network"]
+    for extra in ("payload", "workers", "stream_chunks"):  # swept axes
         if any(extra in r for r in rows):
             cols.append(extra)
     n_id = len(cols)                             # identity columns
@@ -348,6 +366,15 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "(modeled seconds)")
     ap.add_argument("--mode", default="non_serialized",
                     choices=["non_serialized", "serialized"])
+    ap.add_argument("--wire-mode", default=None,
+                    choices=["serialized", "scatter_gather",
+                             "zero_copy"],
+                    help="rpc datapath encoding (default derives from "
+                         "--mode: serialized -> serialized, "
+                         "non_serialized -> scatter_gather); zero_copy "
+                         "ships pre-registered shared-pool descriptors "
+                         "instead of payload bytes (unsupported on "
+                         "--transport collective)")
     ap.add_argument("--scheme", default="uniform",
                     choices=["uniform", "random", "skew"])
     ap.add_argument("--skew-bias", default="large",
@@ -398,6 +425,11 @@ def main(argv: Optional[List[str]] = None) -> None:
                  f"{', '.join(repr(c) for c in unknown) or '(empty)'}; "
                  f"choose from {', '.join(CATEGORIES)}")
     args.categories = ",".join(cats)
+
+    if args.mode == "serialized" and args.wire_mode in (
+            "scatter_gather", "zero_copy"):
+        ap.error(f"--wire-mode {args.wire_mode} contradicts --mode "
+                 "serialized; drop one of the two flags")
 
     if args.fetch_ratio <= 0:
         ap.error(f"--fetch-ratio must be > 0, got {args.fetch_ratio}")
@@ -572,7 +604,9 @@ def main(argv: Optional[List[str]] = None) -> None:
             for p in problems:
                 print(f"BASELINE DRIFT: {p}")
             sys.exit(1)
-        print(f"baseline OK: {len(data.get('families', {}))} families "
+        n_wm = len(data.get("wire_modes", {}))
+        print(f"baseline OK: {len(data.get('families', {}))} families"
+              f"{f' x {n_wm} wire modes' if n_wm else ''} "
               f"within {args.baseline_tolerance:.2%}")
         return
     if args.baseline is not None:

@@ -65,10 +65,13 @@ from repro.rpc.service import (CONFORMANCE_SERVICE, EXCHANGE_SERVICE,
                                INCAST_SERVICE, RING_SERVICE, Codec,
                                MethodSpec, ServiceDef, Stub, StubMethod,
                                UnaryCall, conformance_handlers)
+from repro.rpc.bufpool import BufferPool, get_pool, reset_pools
 from repro.rpc.framing import (FLAG_ERROR, FLAG_FAULT, FLAG_ONE_WAY,
                                FLAG_REPLY, FLAG_SERIALIZED, FLAG_STREAM,
-                               FLAG_STREAM_END, Frame, decode, encode,
-                               make_frame, method_id, stream_chunk)
+                               FLAG_STREAM_END, FLAG_ZERO_COPY,
+                               WIRE_MODES, Frame, FramingError, decode,
+                               encode, make_frame, method_id,
+                               resolve_wire_mode, stream_chunk)
 from repro.rpc.telemetry import BoundedHistogram, HistogramRegistry
 from repro.rpc.tracing import PHASES, Span, Tracer
 from repro.rpc.transport import (Delivery, FaultInjectionTransport,
@@ -79,13 +82,14 @@ from repro.rpc.transport import (Delivery, FaultInjectionTransport,
 
 __all__ = [
     "AdmissionInterceptor", "BIDI", "BidiStream", "BoundedHistogram",
-    "Call", "CallContext",
+    "BufferPool", "Call", "CallContext",
     "Channel", "ChunkGate", "CLIENT_STREAM", "CONFORMANCE_SERVICE",
     "ClientInterceptor", "ClusterSpec", "ClusterTransport", "Codec",
     "CompletionQueue", "CreditWindow", "DEADLINE_EXCEEDED",
     "DeadlineInterceptor", "Delivery", "EXCHANGE_SERVICE",
     "EndpointSpec", "Event", "FaultInjectionTransport", "FlightReport",
-    "FlowStats", "Frame", "HANDLER_FAULTS", "HistogramRegistry",
+    "FlowStats", "Frame", "FramingError", "HANDLER_FAULTS",
+    "HistogramRegistry",
     "INCAST_SERVICE", "LINK_FAULT", "LinkSpec", "LoopbackTransport",
     "Message", "MethodSpec", "MetricsInterceptor", "PHASES",
     "RING_SERVICE", "ResourceExhausted", "RetryInterceptor", "RpcError",
@@ -94,15 +98,17 @@ __all__ = [
     "SimulatedTransport", "Span", "StreamHandle", "StreamPump", "Stub",
     "StubMethod",
     "Tracer", "Transport", "TransientError", "UNARY",
-    "UnaryCall", "WindowConfig", "as_cluster_spec",
+    "UnaryCall", "WIRE_MODES", "WindowConfig", "as_cluster_spec",
     "cluster_fc_round_time", "cluster_incast_round_time",
     "cluster_ring_round_time", "conformance_handlers", "decode",
-    "encode", "fully_connected_exchange", "homogeneous",
+    "encode", "fully_connected_exchange", "get_pool", "homogeneous",
     "incast_exchange", "is_resource_exhausted", "is_transient",
     "make_frame", "make_transport", "method_id", "ps_worker_cluster",
-    "ring_exchange", "schedule_rounds", "spec_of", "stream_chunk",
+    "reset_pools", "resolve_wire_mode", "ring_exchange",
+    "schedule_rounds", "spec_of", "stream_chunk",
     "FLAG_ERROR", "FLAG_FAULT", "FLAG_ONE_WAY", "FLAG_REPLY",
     "FLAG_SERIALIZED", "FLAG_STREAM", "FLAG_STREAM_END",
+    "FLAG_ZERO_COPY",
 ]
 
 

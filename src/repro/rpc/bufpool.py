@@ -1,0 +1,113 @@
+"""Pre-registered shared buffer pools for the ``zero_copy`` wire mode.
+
+The one-sided-RDMA-write analogue ("RPC Considered Harmful", PAPERS.md):
+both ends of a channel share a pinned, pre-registered memory region. The
+*sender* manages placement — it copies each payload buffer into the next
+free slot of the region and puts only a ``(pool_id, offset, size)``
+descriptor on the wire; the receiver reads the bytes straight out of the
+shared region. Steady-state tensor transfer therefore skips the
+pack/unpack copies entirely — the only residual cost is the one-time
+registration (pinning) of the region, amortized over its reuse, which is
+exactly the ``zero_copy`` branch of
+:meth:`repro.core.netmodel.NetworkModel.copy_cost`.
+
+Placement is a lane-aligned bump allocator that wraps at capacity
+(steady-state reuse): a region stays valid until the write cursor laps
+it, so the pool capacity sets the reuse distance. Receivers get *views*
+into the region — true zero-copy semantics — and must consume a
+descriptor before the sender recycles its slot, the same contract a
+real one-sided write protocol imposes.
+
+Pools are process-global, keyed by ``pool_id``, and resolved through
+:func:`get_pool` — the registration step. Constructing ``BufferPool``
+directly outside ``src/repro/rpc/`` is forbidden (CI grep gate mirrored
+in ``tests/test_service_api.py``): everything goes through the registry
+so decode can resolve any descriptor it sees on the wire.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+# Placement alignment in bytes. Must equal repro.rpc.framing.LANE
+# (pinned by tests) — not imported from there to keep this module
+# dependency-free so framing can import it without a cycle.
+LANE = 128
+
+DEFAULT_POOL_ID = 0
+
+#: default region capacity (16 MiB) — large enough that the benchmark
+#: families' steady-state flights reuse slots long after the receiver
+#: consumed them
+DEFAULT_CAPACITY = 16 << 20
+
+
+class BufferPool:
+    """One pre-registered shared region with a wrapping bump allocator."""
+
+    def __init__(self, pool_id: int, capacity: int = DEFAULT_CAPACITY):
+        capacity = int(capacity)
+        assert capacity >= LANE and capacity % LANE == 0, capacity
+        self.pool_id = int(pool_id)
+        self.capacity = capacity
+        self.region = np.zeros(capacity, dtype=np.uint8)
+        self._cursor = 0
+        # telemetry: how much reuse the registration cost amortizes over
+        self.placements = 0
+        self.placed_bytes = 0
+        self.wraps = 0
+
+    def place(self, buf: np.ndarray) -> Tuple[int, int]:
+        """Copy ``buf`` into the next lane-aligned slot (sender-managed
+        placement) and return its ``(offset, size)`` descriptor half.
+        Wraps to offset 0 when the tail can't fit the buffer."""
+        b = np.ascontiguousarray(buf, dtype=np.uint8).reshape(-1)
+        size = int(b.size)
+        need = max(LANE, -(-size // LANE) * LANE)
+        if need > self.capacity:
+            raise ValueError(
+                f"buffer of {size} bytes exceeds pool {self.pool_id} "
+                f"capacity {self.capacity}")
+        if self._cursor + need > self.capacity:
+            self._cursor = 0
+            self.wraps += 1
+        offset = self._cursor
+        if size:
+            self.region[offset:offset + size] = b
+        self._cursor += need
+        self.placements += 1
+        self.placed_bytes += size
+        return offset, size
+
+    def read(self, offset: int, size: int) -> np.ndarray:
+        """A zero-copy *view* of ``size`` bytes at ``offset`` — valid
+        until the write cursor laps the slot."""
+        if not (0 <= offset and offset + size <= self.capacity):
+            raise ValueError(
+                f"descriptor ({offset}, {size}) outside pool "
+                f"{self.pool_id} capacity {self.capacity}")
+        return self.region[offset:offset + size]
+
+    def reset(self) -> None:
+        """Rewind the allocator (telemetry counters are kept)."""
+        self._cursor = 0
+
+
+_POOLS: Dict[int, BufferPool] = {}
+
+
+def get_pool(pool_id: int = DEFAULT_POOL_ID, *,
+             capacity: int = DEFAULT_CAPACITY) -> BufferPool:
+    """Resolve (registering on first use) the shared pool ``pool_id``.
+    This is the registration step every zero-copy endpoint goes
+    through; ``capacity`` only applies when the pool is first created."""
+    pool = _POOLS.get(pool_id)
+    if pool is None:
+        pool = _POOLS[pool_id] = BufferPool(pool_id, capacity)
+    return pool
+
+
+def reset_pools() -> None:
+    """Drop every registered pool (tests)."""
+    _POOLS.clear()

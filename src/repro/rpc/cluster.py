@@ -318,7 +318,7 @@ class ClusterTransport(Transport):
     def price(model: NetworkModel, frame) -> float:
         """One message at the link's receiver: payload + 64B ack."""
         return (model.payload_time(spec_of(frame),
-                                   serialized=frame.serialized)
+                                   mode=frame.wire_mode)
                 + model.msg_time(64))
 
     @staticmethod
@@ -388,32 +388,36 @@ def _payload_spec(sizes: Sequence[int]) -> PayloadSpec:
 
 
 def _load(cluster: ClusterSpec, src: int, dst: int, spec: PayloadSpec,
-          n_msgs: int, serialized: bool) -> LinkLoad:
+          n_msgs: int, serialized: bool,
+          mode: Optional[str] = None) -> LinkLoad:
     return LinkLoad(src, dst, cluster.link_model(src, dst),
-                    (spec,) * n_msgs, serialized=serialized)
+                    (spec,) * n_msgs, serialized=serialized, mode=mode)
 
 
 def cluster_fc_round_time(cluster: ClusterSpec, sizes: Sequence[int], *,
-                          serialized: bool = False) -> float:
+                          serialized: bool = False,
+                          mode: Optional[str] = None) -> float:
     """One fully-connected exchange on the cluster: every endpoint one
     payload to every other, all in one flight."""
     n = cluster.n_endpoints
     assert n >= 2, n
     spec = _payload_spec(sizes)
-    loads = [_load(cluster, i, j, spec, 1, serialized)
+    loads = [_load(cluster, i, j, spec, 1, serialized, mode)
              for i in range(n) for j in range(n) if i != j]
     return cluster_flight_time(loads)
 
 
 def cluster_ring_round_time(cluster: ClusterSpec, sizes: Sequence[int],
                             *, n_chunks: int = 1,
-                            serialized: bool = False) -> float:
+                            serialized: bool = False,
+                            mode: Optional[str] = None) -> float:
     """One chunked ring pass: every endpoint streams n_chunks to its
     successor (i -> (i+1) % n), one flight."""
     n = cluster.n_endpoints
     assert n >= 2, n
     spec = _payload_spec(sizes)
-    loads = [_load(cluster, i, (i + 1) % n, spec, n_chunks, serialized)
+    loads = [_load(cluster, i, (i + 1) % n, spec, n_chunks, serialized,
+                   mode)
              for i in range(n)]
     return cluster_flight_time(loads)
 
@@ -422,6 +426,7 @@ def cluster_incast_round_time(cluster: ClusterSpec,
                               sizes: Sequence[int], *,
                               n_chunks: int = 1,
                               serialized: bool = False,
+                              mode: Optional[str] = None,
                               fetch_ratio: float = 1.0,
                               server: int = 0) -> float:
     """One incast round: every non-server endpoint streams n_chunks
@@ -432,9 +437,10 @@ def cluster_incast_round_time(cluster: ClusterSpec,
     spec = _payload_spec(sizes)
     fspec = _payload_spec(scale_sizes(sizes, fetch_ratio))
     workers = [w for w in range(n) if w != server]
-    push = [_load(cluster, w, server, spec, n_chunks, serialized)
+    push = [_load(cluster, w, server, spec, n_chunks, serialized, mode)
             for w in workers]
-    fetch = [_load(cluster, server, w, fspec, n_chunks, serialized)
+    fetch = [_load(cluster, server, w, fspec, n_chunks, serialized,
+                   mode)
              for w in workers]
     return cluster_flight_time(push) + cluster_flight_time(fetch)
 

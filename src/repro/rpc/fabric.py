@@ -170,7 +170,7 @@ class StreamPump:
         self.seq = 0                   # next server->client chunk seq
         # (src, dst, serialized) of the owning channel — bound by the
         # flush loop at dispatch so pumped chunks ride the right gate
-        self.channel_key: Optional[Tuple[int, int, bool]] = None
+        self.channel_key: Optional[Tuple[int, int, str]] = None
 
     def close(self) -> None:
         close = getattr(self.chunks, "close", None)
@@ -600,7 +600,7 @@ class BidiStream(StreamHandle):
         assert not self.closed, "bidi stream already closed"
         frame = framing.stream_chunk(
             self.call_id, self.method, bufs, seq=self._seq, end=end,
-            serialized=self.channel.serialized, sizes=sizes)
+            wire_mode=self.channel.wire_mode, sizes=sizes)
         self._seq += 1
         self.closed = end
         fabric = self.channel.fabric
@@ -623,11 +623,15 @@ class Channel:
 
     def __init__(self, fabric: "RpcFabric", src: int, dst: int, *,
                  serialized: bool = False,
+                 wire_mode: Optional[str] = None,
                  window: Optional[CreditWindow] = None,
                  rwindow: Optional[CreditWindow] = None):
         self.fabric = fabric
         self.src, self.dst = src, dst
-        self.serialized = serialized
+        # explicit wire_mode wins over the legacy serialized bool; the
+        # bool is kept as a derived attribute for existing readers
+        self.wire_mode = framing.resolve_wire_mode(serialized, wire_mode)
+        self.serialized = self.wire_mode == "serialized"
         self.window = window or CreditWindow()
         self.rwindow = rwindow or CreditWindow()
         self.rx_gate = ChunkGate(self.rwindow)
@@ -639,7 +643,7 @@ class Channel:
              deadline_s: Optional[float] = None) -> Call:
         frame = framing.make_frame(
             self.fabric.next_call_id(), method, bufs, sizes=sizes,
-            serialized=self.serialized, one_way=one_way)
+            wire_mode=self.wire_mode, one_way=one_way)
         return self.fabric.submit(self, frame, method, kind=UNARY,
                                   deadline_s=deadline_s, retryable=True)
 
@@ -661,7 +665,7 @@ class Channel:
             bufs = chunks[i] if chunks else None
             frame = framing.stream_chunk(
                 cid, method, bufs, seq=i, end=(i == n - 1),
-                serialized=self.serialized, one_way=one_way,
+                wire_mode=self.wire_mode, one_way=one_way,
                 sizes=sizes if bufs is None else None)
             c = self.fabric.submit(self, frame, method,
                                    kind=CLIENT_STREAM,
@@ -681,7 +685,7 @@ class Channel:
         response chunks have been delivered."""
         cid = self.fabric.next_call_id()
         frame = framing.make_frame(cid, method, bufs, sizes=sizes,
-                                   serialized=self.serialized)
+                                   wire_mode=self.wire_mode)
         handle = ServerStream(self, cid, method)
         self.fabric.register_handle(handle, kind=SERVER_STREAM,
                                     deadline_s=deadline_s,
@@ -795,9 +799,11 @@ class RpcFabric:
             return resolve(endpoint)
         return int(endpoint)
 
-    def channel(self, src, dst, *, serialized: bool = False) -> Channel:
+    def channel(self, src, dst, *, serialized: bool = False,
+                wire_mode: Optional[str] = None) -> Channel:
         src, dst = self.resolve_endpoint(src), self.resolve_endpoint(dst)
-        key = (src, dst, serialized)
+        mode = framing.resolve_wire_mode(serialized, wire_mode)
+        key = (src, dst, mode)
         if key not in self._channels:
             # window sizing: fabric default unless the transport's
             # endpoints advertise their own (gRPC's receiver-set
@@ -809,21 +815,23 @@ class RpcFabric:
                 f, r = hook(src, dst)
                 fwd, rev = f or fwd, r or rev
             self._channels[key] = Channel(
-                self, src, dst, serialized=serialized,
+                self, src, dst, wire_mode=mode,
                 window=fwd.make(), rwindow=rev.make())
         return self._channels[key]
 
-    def stub(self, service, src, dst, *, serialized: bool = False):
+    def stub(self, service, src, dst, *, serialized: bool = False,
+             wire_mode: Optional[str] = None):
         """The generated client for ``service`` over the (src -> dst)
         channel; cached per (service, channel). Keyed by service
         *identity* — the cached Stub keeps its ServiceDef alive, so two
         live definitions sharing a name never alias."""
         from repro.rpc.service import Stub
         src, dst = self.resolve_endpoint(src), self.resolve_endpoint(dst)
-        key = (id(service), src, dst, serialized)
+        mode = framing.resolve_wire_mode(serialized, wire_mode)
+        key = (id(service), src, dst, mode)
         st = self._stubs.get(key)
         if st is None:
-            st = Stub(self.channel(src, dst, serialized=serialized),
+            st = Stub(self.channel(src, dst, wire_mode=mode),
                       service)
             self._stubs[key] = st
         return st
@@ -1050,7 +1058,7 @@ class RpcFabric:
         self._ctx.pop(handle.call_id, None)
 
     def _grant(self, msg: Message) -> None:
-        ch = self._channels.get((msg.src, msg.dst, msg.frame.serialized))
+        ch = self._channels.get((msg.src, msg.dst, msg.frame.wire_mode))
         if ch is not None:
             ch.window.grant(msg.frame.total_bytes)
 
@@ -1068,7 +1076,7 @@ class RpcFabric:
         """A server->client stream chunk was delivered: hand it to the
         handle, return the reverse-window credits (the client consumed
         it), and complete the handle on END."""
-        ch = self._channels.get((m.dst, m.src, m.frame.serialized))
+        ch = self._channels.get((m.dst, m.src, m.frame.wire_mode))
         if ch is not None:
             ch.rx_gate.grant(m.frame.total_bytes)
         handle = self._handles.get(m.frame.call_id)
@@ -1186,7 +1194,7 @@ class RpcFabric:
         ONE refund path for faulted messages and their same-flight
         stragglers — the credit invariant the fault tier asserts."""
         if m.frame.is_reply:
-            ch = self._channels.get((m.dst, m.src, m.frame.serialized))
+            ch = self._channels.get((m.dst, m.src, m.frame.wire_mode))
             if ch is not None:
                 ch.rx_gate.grant(m.frame.total_bytes)
         else:
@@ -1357,7 +1365,7 @@ class RpcFabric:
                 pump = srv._pumps.get(cid)
                 if pump is not None and pump.channel_key is None:
                     pump.channel_key = (m.src, m.dst,
-                                        m.frame.serialized)
+                                        m.frame.wire_mode)
                 if self.tracer is not None:
                     self.tracer.on_dispatched(
                         cid, self.now(),
@@ -1383,7 +1391,7 @@ class RpcFabric:
                         self._complete(call, None, "sent")
                 for o in chunks:
                     ch = self._channels.get((m.src, m.dst,
-                                             m.frame.serialized))
+                                             m.frame.wire_mode))
                     assert ch is not None
                     self._offer_chunk(ch, o)
             if replies:
@@ -1530,7 +1538,9 @@ class RpcFabric:
 
 def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                              bufs: Optional[List[np.ndarray]] = None,
-                             serialized: bool = False) -> FlightReport:
+                             serialized: bool = False,
+                             wire_mode: Optional[str] = None
+                             ) -> FlightReport:
     """Every endpoint sends one payload to every other endpoint
     (n * (n-1) one-way unary RPCs through ``Exchange/exchange`` stubs),
     generated in the shift order of ``channels.all_to_all_schedule`` so
@@ -1547,7 +1557,8 @@ def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
     for r in range(1, n):
         for i in range(n):
             stub = fabric.stub(EXCHANGE_SERVICE, i, (i + r) % n,
-                               serialized=serialized)
+                               serialized=serialized,
+                               wire_mode=wire_mode)
             stub.exchange(bufs, sizes=sizes if bufs is None else None,
                           one_way=True)
     return fabric.flush()
@@ -1556,7 +1567,8 @@ def fully_connected_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
 def ring_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                   n_chunks: int = 1,
                   bufs: Optional[List[np.ndarray]] = None,
-                  serialized: bool = False) -> FlightReport:
+                  serialized: bool = False,
+                  wire_mode: Optional[str] = None) -> FlightReport:
     """Every worker client-streams ``n_chunks`` payload chunks to its
     successor (i -> (i+1) % n) through ``Ring/ring`` stubs: n one-way
     streams whose chunks the transport edge-colors back into exactly
@@ -1573,7 +1585,7 @@ def ring_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                 fabric.add_server(e).add_service(RING_SERVICE, handlers)
     for i in range(n):
         stub = fabric.stub(RING_SERVICE, i, (i + 1) % n,
-                           serialized=serialized)
+                           serialized=serialized, wire_mode=wire_mode)
         stub.ring([bufs] * n_chunks if bufs is not None else None,
                   sizes=sizes if bufs is None else None,
                   n_chunks=n_chunks, one_way=True)
@@ -1584,6 +1596,7 @@ def incast_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
                     n_chunks: int = 1,
                     bufs: Optional[List[np.ndarray]] = None,
                     serialized: bool = False,
+                    wire_mode: Optional[str] = None,
                     fetch_ratio: float = 1.0) -> FlightReport:
     """The Cori-style parameter-server hotspot: every worker
     (endpoints 1..n-1) bidi-streams ``n_chunks`` payload chunks into
@@ -1625,7 +1638,8 @@ def incast_exchange(fabric: RpcFabric, sizes: Sequence[int], *,
 
         fabric.add_server(0).add_service(INCAST_SERVICE,
                                          {"push_fetch": push_fetch})
-    handles = [fabric.stub(INCAST_SERVICE, w, 0, serialized=serialized)
+    handles = [fabric.stub(INCAST_SERVICE, w, 0,
+                           serialized=serialized, wire_mode=wire_mode)
                .push_fetch() for w in range(1, n)]
     for c in range(n_chunks):
         for h in handles:

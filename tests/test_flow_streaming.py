@@ -265,7 +265,7 @@ def test_incast_fetch_respects_reverse_window():
     fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
                         window_bytes=600, window_msgs=4)
     rep = rpc.incast_exchange(fab, [512], n_chunks=3, bufs=_bufs([512]))
-    ch = fab._channels[(1, 0, False)]
+    ch = fab._channels[(1, 0, "scatter_gather")]
     assert rep.messages == 6
     assert ch.rwindow.stats.stalled >= 2
     assert ch.rwindow.bytes_avail == 600

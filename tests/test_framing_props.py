@@ -1,14 +1,19 @@
 """Property-based framing tests: encode -> decode must round-trip
 byte-identically for ARBITRARY iovec lists — zero-length and max-size
-buffers included — in both wire modes, for unary and stream-chunk
-frames. Runs under the numpy backend (the kernel path is pinned
-byte-identical to it by tests/test_rpc.py); skips cleanly when
-hypothesis is absent and runs with --hypothesis-profile=ci in CI."""
+buffers included — in all three wire modes (serialized /
+scatter_gather / zero_copy), for unary and stream-chunk frames. Runs
+under the numpy backend (the kernel path is pinned byte-identical to
+it by tests/test_rpc.py); skips cleanly when hypothesis is absent and
+runs with --hypothesis-profile=ci in CI."""
 import numpy as np
 import pytest
 from _hypothesis_support import given, settings, st
 
-from repro.rpc import framing
+from repro.rpc import bufpool, framing
+
+# the 128-byte pack-lane boundaries: where off-by-one padding bugs in
+# _pack_numpy/_unpack_numpy and descriptor placement live
+_LANE_EDGES = [0, 1, 127, 128, 129]
 
 # size strategy: bias toward the interesting boundaries of the 128-byte
 # lane besides arbitrary sizes; 0 is legal (empty iovec / END trailer)
@@ -81,6 +86,45 @@ def test_max_size_chunk_roundtrip(serialized, stream):
     else:
         f = framing.make_frame(1, "big", [big], serialized=serialized)
     _assert_roundtrip(f)
+
+
+@given(sizes=st.lists(st.sampled_from(_LANE_EDGES), min_size=0,
+                      max_size=8),
+       wire_mode=st.sampled_from(framing.WIRE_MODES),
+       seed=st.integers(0, 999))
+@settings(max_examples=60, deadline=None)
+def test_lane_boundary_roundtrip_all_modes(sizes, wire_mode, seed):
+    """Pack/unpack and descriptor placement at the exact lane edges
+    (0/1/127/128/129 bytes), for every wire mode — the zero_copy path
+    must hand back byte-identical views out of the shared pool."""
+    f = framing.make_frame(7, "edge", _bufs(sizes, seed),
+                           wire_mode=wire_mode)
+    assert f.wire_mode == wire_mode
+    _assert_roundtrip(f)
+
+
+@given(sizes=st.lists(st.sampled_from(_LANE_EDGES), min_size=1,
+                      max_size=6),
+       seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_zero_copy_descriptor_roundtrip(sizes, seed):
+    """The zero_copy wire carries (pool, offset, size) descriptors, not
+    payload bytes: the encoded descriptor block is one lane-aligned
+    message of 3 little-endian u64s per iovec, and resolving it reads
+    the exact placed bytes back out of the pool."""
+    bufs = _bufs(sizes, seed)
+    f = framing.make_frame(9, "desc", bufs, wire_mode="zero_copy")
+    msgs = framing.encode(f)
+    assert len(msgs) == 2                     # header + descriptor block
+    desc = msgs[1].view("<u8").reshape(-1, 3)
+    assert desc.shape[0] == len(sizes)
+    pool = bufpool.get_pool()
+    for (pid, off, size), buf in zip(desc, bufs):
+        assert pid == pool.pool_id and size == buf.size
+        assert np.array_equal(pool.read(int(off), int(size)), buf)
+    g = framing.decode(msgs)
+    for a, b in zip(bufs, g.bufs):
+        assert np.array_equal(a, b)
 
 
 @pytest.mark.parametrize("serialized", [False, True])

@@ -806,3 +806,24 @@ def test_no_rpc_generate_callers_outside_shim():
             if pat.search(line):
                 offenders.append(f"{rel}:{i}: {line.strip()}")
     assert not offenders, offenders
+
+
+def test_no_direct_bufpool_construction_outside_rpc():
+    """The zero-copy pool gate the CI step enforces, as a test: the
+    shared BufferPool is registry-owned — every consumer outside
+    src/repro/rpc/ goes through ``rpc.get_pool`` so pool ids stay
+    process-unique and pre-registered regions are actually shared
+    (a privately constructed pool would silently break the zero-copy
+    descriptor contract: senders and receivers must resolve the same
+    pool id to the same memory)."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src"
+    pat = re.compile(r"\bBufferPool\s*\(")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        rel = p.relative_to(root)
+        if rel.parts[:2] == ("repro", "rpc"):
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, offenders

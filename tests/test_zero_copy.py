@@ -1,0 +1,356 @@
+"""Zero-copy datapath tier: the shared BufferPool, descriptor framing,
+per-mode copy-cost pricing, credit accounting by described bytes, the
+--wire-mode CLI surface, and the framing/encode bugfix sweep that rode
+along (reply coercion, backend validation on every path, corrupt-header
+hardening)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import rpc
+from repro.configs.tfgrpc_bench import BenchConfig
+from repro.core import bench, netmodel
+from repro.core.netmodel import NETWORKS
+from repro.core.payload import PayloadSpec
+from repro.rpc import bufpool, framing
+
+
+def _bufs(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 255, s, dtype=np.uint8) for s in sizes]
+
+
+SIZES = (10, 300, 1024, 7, 128, 4096)
+
+
+# ---------------------------------------------------------------------------
+# wire-mode vocabulary
+# ---------------------------------------------------------------------------
+
+def test_wire_modes_pinned_equal():
+    """framing and netmodel each define WIRE_MODES (rpc must stay
+    importable without pulling the model and vice versa) — pinned
+    identical here, like LANE is pinned to the kernel lane."""
+    assert framing.WIRE_MODES == netmodel.WIRE_MODES
+    assert framing.WIRE_MODES == ("serialized", "scatter_gather",
+                                  "zero_copy")
+
+
+def test_resolve_wire_mode():
+    assert framing.resolve_wire_mode() == "scatter_gather"
+    assert framing.resolve_wire_mode(serialized=True) == "serialized"
+    for wm in framing.WIRE_MODES:
+        assert framing.resolve_wire_mode(wire_mode=wm) == wm
+    assert framing.resolve_wire_mode(
+        serialized=True, wire_mode="serialized") == "serialized"
+    with pytest.raises(ValueError, match="conflicts"):
+        framing.resolve_wire_mode(serialized=True, wire_mode="zero_copy")
+    with pytest.raises(ValueError, match="unknown wire mode"):
+        framing.resolve_wire_mode(wire_mode="rdma")
+
+
+def test_resolved_wire_mode_config():
+    assert BenchConfig().resolved_wire_mode == "scatter_gather"
+    assert BenchConfig(mode="serialized").resolved_wire_mode \
+        == "serialized"
+    # explicit wins over the paper's two-valued mode field
+    assert BenchConfig(wire_mode="zero_copy").resolved_wire_mode \
+        == "zero_copy"
+
+
+# ---------------------------------------------------------------------------
+# BufferPool
+# ---------------------------------------------------------------------------
+
+def test_pool_place_read_roundtrip():
+    pool = bufpool.BufferPool(pool_id=91, capacity=1 << 16)
+    b = _bufs([300])[0]
+    off, size = pool.place(b)
+    assert size == 300 and off % framing.LANE == 0
+    assert np.array_equal(pool.read(off, size), b)
+
+
+def test_pool_lane_aligned_and_zero_size():
+    pool = bufpool.BufferPool(pool_id=92, capacity=1 << 12)
+    offs = [pool.place(b)[0] for b in _bufs([1, 0, 127, 129])]
+    assert all(o % framing.LANE == 0 for o in offs)
+    assert len(set(offs)) == 4    # a zero-size buffer still gets a slot
+    assert pool.read(offs[1], 0).size == 0
+
+
+def test_pool_wraps_and_rejects_oversize():
+    pool = bufpool.BufferPool(pool_id=93, capacity=4 * framing.LANE)
+    for _ in range(3):
+        pool.place(np.zeros(framing.LANE, np.uint8))
+    assert pool.wraps == 0
+    off, _ = pool.place(np.arange(200, dtype=np.uint8))  # tail too small
+    assert off == 0 and pool.wraps == 1
+    with pytest.raises(ValueError, match="capacity"):
+        pool.place(np.zeros(5 * framing.LANE, np.uint8))
+    with pytest.raises(ValueError):
+        pool.read(3 * framing.LANE, 2 * framing.LANE)  # out of range
+
+
+def test_pool_registry():
+    p = rpc.get_pool(77)
+    assert rpc.get_pool(77) is p and p.pool_id == 77
+    assert rpc.get_pool() is rpc.get_pool(0)
+    rpc.reset_pools()
+    assert rpc.get_pool(77) is not p
+
+
+# ---------------------------------------------------------------------------
+# framing: three-mode round trips + the bugfix sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_frame_roundtrip_byte_identical(wire_mode):
+    f = framing.make_frame(3, "m", _bufs(SIZES), wire_mode=wire_mode)
+    assert f.wire_mode == wire_mode
+    g = framing.decode(framing.encode(f))
+    assert g.sizes == f.sizes
+    for a, b in zip(f.bufs, g.bufs):
+        assert np.array_equal(a, b)
+
+
+def test_zero_copy_wire_is_descriptors_not_bytes():
+    f = framing.make_frame(1, "zc", _bufs([1 << 20, 1 << 19]),
+                           wire_mode="zero_copy")
+    msgs = framing.encode(f)
+    wire = sum(int(m.size) for m in msgs)
+    assert f.total_bytes == (1 << 20) + (1 << 19)
+    assert wire < 1024                 # header + 2 descriptor triples
+    g = framing.decode(msgs)
+    # decoded bufs are VIEWS into the shared pool region — zero copies
+    assert np.shares_memory(g.bufs[0], rpc.get_pool().region)
+    assert np.array_equal(g.bufs[0], f.bufs[0])
+
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_reply_coerces_bufs(wire_mode):
+    """Bugfix: Frame.reply() must coerce handler outputs (lists,
+    non-uint8 dtypes, non-contiguous arrays) exactly like make_frame
+    does — a handler returning a plain list used to blow up encode."""
+    f = framing.make_frame(5, "r", _bufs([64]), wire_mode=wire_mode)
+    r = f.reply([[1, 2, 3], np.arange(4, dtype=np.int64).view(np.uint8),
+                 np.arange(256, dtype=np.uint8)[::2]])
+    assert r.wire_mode == wire_mode    # mode bits survive the reply
+    assert all(b.dtype == np.uint8 and b.flags.c_contiguous
+               for b in r.bufs)
+    g = framing.decode(framing.encode(r))
+    assert g.is_reply and g.sizes == (3, 32, 128)
+    assert np.array_equal(g.bufs[0], np.array([1, 2, 3], np.uint8))
+
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_encode_decode_validate_backend(wire_mode):
+    """Bugfix: encode() used to validate ``backend`` only on the
+    serialized path — an unknown backend silently fell through on the
+    scatter-gather path. Now every path rejects it, decode too."""
+    f = framing.make_frame(2, "b", _bufs([32]), wire_mode=wire_mode)
+    with pytest.raises(ValueError, match="backend"):
+        framing.encode(f, backend="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        framing.decode(framing.encode(f), backend="bogus")
+
+
+def test_parse_header_truncated():
+    with pytest.raises(framing.FramingError, match="truncated"):
+        framing.parse_header(np.zeros(16, dtype=np.uint8))
+
+
+def test_parse_header_corrupt_n_buffers():
+    """Bugfix: a corrupt n_buffers word used to index past the wire
+    buffer (IndexError deep in numpy); now a clear framing error."""
+    f = framing.make_frame(4, "c", _bufs([8, 8]))
+    wire = framing.header_bytes(f).copy()
+    wire.view("<u4")[7] = 1 << 30              # the n_buffers word
+    with pytest.raises(framing.FramingError, match="n_buffers"):
+        framing.parse_header(wire)
+
+
+# ---------------------------------------------------------------------------
+# copy-cost model: closed forms == transports, per mode
+# ---------------------------------------------------------------------------
+
+def _spec(sizes):
+    return PayloadSpec(sizes=tuple(sizes), scheme="t",
+                       categories=("medium",) * len(sizes))
+
+
+def test_copy_cost_ordering():
+    """At large payloads the three tiers must separate: serialized pays
+    pack+unpack on every byte, scatter-gather a per-iovec fixed cost,
+    zero-copy only registration amortized over pool reuse."""
+    spec = _spec([1 << 20] * 8)
+    for name, net in NETWORKS.items():
+        zc = net.copy_cost(spec, "zero_copy")
+        sg = net.copy_cost(spec, "scatter_gather")
+        ser = net.copy_cost(spec, "serialized")
+        assert zc < ser, name
+        assert net.payload_time(spec, mode="zero_copy") \
+            < net.payload_time(spec, mode="serialized"), name
+        if not name.startswith("tpu"):
+            # the paper's NIC-class networks: per-iovec alpha dominates
+            # the amortized registration, and per-byte pack/unpack
+            # dominates both. The tpu models price serialization near
+            # memory bandwidth and sub-us launches, so only the
+            # zero-copy-vs-serialized ordering is universal.
+            assert zc < sg < ser, name
+
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_simulated_fc_matches_closed_form(wire_mode):
+    spec = _spec([65536] * 4)
+    for name in ("eth40g", "rdma_edr"):
+        net = NETWORKS[name]
+        fab = rpc.RpcFabric(rpc.SimulatedTransport(8, net))
+        rep = rpc.fully_connected_exchange(fab, list(spec.sizes),
+                                           wire_mode=wire_mode)
+        # 1e-12: bit-exact up to summation order (the transport folds
+        # k equal ingress terms by addition, the closed form by k*t)
+        assert rep.elapsed_s == pytest.approx(
+            net.fc_round_time(spec, 8, mode=wire_mode), rel=1e-12), name
+
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_cluster_fc_matches_closed_form(wire_mode):
+    cluster = rpc.homogeneous(4, "eth40g")
+    fab = rpc.RpcFabric(rpc.make_transport("cluster", cluster=cluster),
+                        window_bytes=64 << 20, window_msgs=256)
+    sizes = [65536] * 4
+    rep = rpc.fully_connected_exchange(fab, sizes, wire_mode=wire_mode)
+    assert rep.elapsed_s == rpc.cluster_fc_round_time(cluster, sizes,
+                                                      mode=wire_mode)
+
+
+def test_zero_copy_beats_serialized_at_large_payloads():
+    net = NETWORKS["eth40g"]
+    sizes = [1 << 20] * 4
+    elapsed = {}
+    for wm in ("serialized", "zero_copy"):
+        fab = rpc.RpcFabric(rpc.SimulatedTransport(4, net))
+        elapsed[wm] = rpc.fully_connected_exchange(
+            fab, sizes, wire_mode=wm).elapsed_s
+    assert elapsed["zero_copy"] < elapsed["serialized"]
+
+
+# ---------------------------------------------------------------------------
+# fabric: byte-identical delivery + credits by described bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_mode", framing.WIRE_MODES)
+def test_fabric_echo_byte_identical(wire_mode):
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    stub = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1,
+                    wire_mode=wire_mode)
+    payload = _bufs(SIZES, seed=3)
+    out = stub.echo(payload).result()
+    assert [b.tolist() for b in out] == [b.tolist() for b in payload]
+
+
+def test_wire_mode_channels_cached_separately():
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    chans = {wm: fab.channel(0, 1, wire_mode=wm)
+             for wm in framing.WIRE_MODES}
+    assert len({id(c) for c in chans.values()}) == 3
+    assert fab.channel(0, 1) is chans["scatter_gather"]
+    assert fab.channel(0, 1, serialized=True) is chans["serialized"]
+
+
+def test_zero_copy_credits_charged_by_described_bytes():
+    """Flow control must price a descriptor frame by the bytes it
+    DESCRIBES, not the ~100 wire bytes it ships — otherwise zero-copy
+    sidesteps backpressure entirely."""
+    f = framing.make_frame(1, "fc", _bufs([600_000]),
+                           wire_mode="zero_copy")
+    assert f.total_bytes == 600_000
+    assert sum(int(m.size) for m in framing.encode(f)) < 1024
+
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=1 << 20, window_msgs=4)
+    fab.add_server(1).register("tiny",
+                               lambda req: [np.zeros(1, np.uint8)])
+    ch = fab.channel(0, 1, wire_mode="zero_copy")
+    for i in range(6):
+        c = ch.call("tiny", _bufs([600_000], seed=i))
+        fab.flush()
+        assert c.done and c.error is None
+    # request credits restored in full after each flight: no leak, and
+    # two 600 kB described requests can never be in flight on a 1 MB
+    # window even though their wire footprint is tiny
+    assert ch.window.bytes_avail == 1 << 20
+    assert ch.window.msgs_avail == 4
+
+
+# ---------------------------------------------------------------------------
+# bench + CLI surface
+# ---------------------------------------------------------------------------
+
+def test_collective_zero_copy_rejected():
+    cfg = BenchConfig(benchmark="fully_connected", num_workers=2,
+                      transport="collective", wire_mode="zero_copy")
+    with pytest.raises(RuntimeError, match="collective"):
+        bench.run(cfg)
+    # the paper's three benchmarks run the collective datapath too
+    cfg = BenchConfig(benchmark="p2p_latency", wire_mode="zero_copy")
+    with pytest.raises(RuntimeError, match="collective"):
+        bench.run(cfg)
+
+
+def test_bench_comm_wire_mode_conflicts_with_serialized_mode():
+    from repro.launch import bench_comm
+    with pytest.raises(SystemExit):
+        bench_comm.main(["--mode", "serialized",
+                         "--wire-mode", "zero_copy"])
+
+
+def test_bench_comm_wire_mode_payload_sweep(tmp_path):
+    """The acceptance sweep: wire_mode x payload on one table, all
+    three modes, zero_copy strictly below serialized at large."""
+    from repro.launch import bench_comm
+    out = tmp_path / "rows.json"
+    bench_comm.main(["--sweep", "wire_mode,payload",
+                     "--benchmark", "fully_connected",
+                     "--transport", "simulated", "--network", "eth40g",
+                     "--num-workers", "3", "--warmup", "0.05",
+                     "--duration", "0.2", "--json", str(out)])
+    rows = json.loads(out.read_text())["rows"]
+    assert len(rows) == 3 * 3
+    combos = {(r["wire_mode"], r["payload"]) for r in rows}
+    assert combos == {(w, p) for w in framing.WIRE_MODES
+                      for p in ("small", "medium", "large")}
+    mean = {(r["wire_mode"], r["payload"]): r["mean_us"] for r in rows}
+    assert mean[("zero_copy", "large")] < mean[("serialized", "large")]
+    assert all(r["value"] > 0 for r in rows)
+
+
+def test_bench_comm_collective_zero_copy_cell_skipped(capsys):
+    from repro.launch import bench_comm
+    bench_comm.main(["--sweep", "wire_mode", "--benchmark",
+                     "fully_connected", "--transport", "collective",
+                     "--num-workers", "2", "--warmup", "0.05",
+                     "--duration", "0.2"])
+    table = capsys.readouterr().out
+    assert "SKIPPED" in table and "zero_copy" in table
+
+
+def test_baseline_schema2_covers_wire_modes():
+    b = bench.collect_baseline(num_workers=2)
+    assert b["schema"] == bench.BASELINE_SCHEMA == 2
+    assert set(b["wire_modes"]) == set(framing.WIRE_MODES)
+    fams = {"p2p_latency", "p2p_bandwidth", "ps_throughput",
+            "fully_connected", "ring", "incast"}
+    for wm, entry in b["wire_modes"].items():
+        assert set(entry) == fams, wm
+        assert all(v["round_time_s"] > 0 for v in entry.values())
+    # the legacy families block is schema-1-compatible and must match
+    # the scatter_gather tier (the seed's non_serialized default)
+    sg = b["wire_modes"]["scatter_gather"]
+    for fam in fams:
+        assert b["families"][fam]["round_time_s"] \
+            == sg[fam]["round_time_s"], fam
+    assert not bench.check_baseline(b)         # self-diff is clean
