@@ -32,7 +32,7 @@ class BenchConfig:
     the rpc-fabric benchmark families (fully_connected / ring / incast
     + transport)."""
     # p2p_latency | p2p_bandwidth | ps_throughput | fully_connected
-    # | ring | incast
+    # | ring | incast | allreduce | train_step
     benchmark: str = "p2p_latency"
     num_ps: int = 1
     num_workers: int = 1
@@ -68,6 +68,12 @@ class BenchConfig:
     # the push payload (1.0 = symmetric; 0.25 models a small variable
     # pull against a large gradient push)
     fetch_ratio: float = 1.0
+    # allreduce/train_step families: the collective schedule
+    # (ring | tree | rsag, keys of netmodel.ALLREDUCE_ALGOS)
+    algo: str = "ring"
+    # train_step family: gradient-synchronization layout
+    # (ps = sharded parameter servers; allreduce = cfg.algo collective)
+    train_mode: str = "allreduce"
     # failure-semantics axes (fabric families only): a default per-call
     # deadline (relative seconds, propagated to servers in the frame
     # header) and a per-endpoint admission limit — both surface their

@@ -9,10 +9,17 @@ the measured host numbers.
   fully_connected        -> fully_connected()   (rpc fabric; transport =
   ring                   -> ring()               collective | loopback |
   incast                 -> incast()             simulated)
+  allreduce              -> allreduce()          (cfg.algo schedule)
+  train_step             -> train_step()         (cfg.train_mode layout)
 
 ring/incast are streaming families: each worker moves
 ``cfg.stream_chunks`` chunk frames per stream (ring: to its successor;
-incast: bidi into one server that streams the fetch back).
+incast: bidi into one server that streams the fetch back). allreduce
+runs one ``rpc.collectives`` schedule (ring | tree | rsag) over the
+payload; train_step runs one ``train.fabric_train.FabricTrainStep``
+data-parallel SGD step, either through sharded parameter servers
+(``cfg.train_mode = "ps"``) or a cfg.algo allreduce — sweeping workers
+across the two train modes locates the PS -> allreduce crossover.
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ import numpy as np
 
 from repro.configs.tfgrpc_bench import BenchConfig
 from repro.core import channels as ch
-from repro.core.netmodel import NETWORKS, WIRE_MODES
+from repro.core.netmodel import ALLREDUCE_ALGOS, NETWORKS, WIRE_MODES
 from repro.core.payload import PayloadSpec, generate_spec
 from repro.core.resource import ResourceMonitor, ResourceReport
 
@@ -101,6 +108,17 @@ def _stats(name, cfg, spec, times, derived, res=None) -> BenchStats:
             st.model_projection[net_name] = net.incast_throughput(
                 spec, cfg.num_workers, n_chunks=cfg.stream_chunks,
                 mode=mode, fetch_ratio=cfg.fetch_ratio)
+        elif name == "allreduce":
+            t = net.allreduce_time(cfg.algo, spec.total_bytes,
+                                   cfg.num_workers, mode=mode)
+            st.model_projection[net_name] = \
+                allreduce_rpcs_per_round(cfg.algo, cfg.num_workers) / t
+        elif name == "train_step":
+            from repro.train.fabric_train import train_step_time
+            st.model_projection[net_name] = 1.0 / train_step_time(
+                net, cfg.train_mode, _grad_params(cfg, spec) * 4,
+                cfg.num_workers, n_ps=cfg.num_ps, algo=cfg.algo,
+                mode=mode)
         else:
             st.model_projection[net_name] = net.ps_throughput(
                 spec, cfg.num_ps, cfg.num_workers, mode=mode)
@@ -283,6 +301,20 @@ def _cluster_projection(st: BenchStats, cfg: BenchConfig, fabric,
     elif st.name == "ring":
         t = cluster_lib.cluster_ring_round_time(
             cl, sizes, n_chunks=n_chunks, mode=mode)
+    elif st.name == "allreduce":
+        t = cluster_lib.cluster_allreduce_time(cl, cfg.algo,
+                                               spec.total_bytes,
+                                               mode=mode)
+    elif st.name == "train_step":
+        if cfg.train_mode != "allreduce":
+            # no per-link closed form for the sharded-PS step yet —
+            # publish no number rather than one the run won't match
+            return
+        t = cluster_lib.cluster_allreduce_time(
+            cl, cfg.algo, _grad_params(cfg, spec) * 4, itemsize=4,
+            mode=mode)
+        st.model_projection["cluster"] = 1.0 / t
+        return
     else:
         t = cluster_lib.cluster_incast_round_time(
             cl, sizes, n_chunks=n_chunks, mode=mode,
@@ -418,6 +450,132 @@ def incast(cfg: BenchConfig) -> BenchStats:
     return st
 
 
+def allreduce_rpcs_per_round(algo: str, n_workers: int) -> int:
+    """Messages one full allreduce moves: ring rotates one chunk per
+    worker for 2(n-1) steps, tree sends n-1 reduce + n-1 broadcast
+    full payloads, rsag is two (n-1)-wide all-to-all flights."""
+    n = n_workers
+    if algo == "ring":
+        return 2 * n * (n - 1)
+    if algo == "tree":
+        return 2 * (n - 1)
+    if algo == "rsag":
+        return 2 * n * (n - 1)
+    raise ValueError(f"unknown allreduce algo {algo!r}")
+
+
+def _grad_params(cfg: BenchConfig, spec: PayloadSpec) -> int:
+    """train_step: the synthetic gradient's float32 element count —
+    the benchmark payload reinterpreted as a gradient, floored so
+    every worker/PS shard holds at least one element."""
+    return max(cfg.num_workers, cfg.num_ps, 1, spec.total_bytes // 4)
+
+
+def _reject_collective(cfg: BenchConfig, family: str) -> None:
+    """The collective transport lowers the fixed exchange schedules
+    onto device ppermute programs; the collective/train families build
+    their own per-step schedules over real host buffers, which has no
+    lowering there. Loud error (a SKIPPED sweep cell), like the
+    zero-copy gate."""
+    if cfg.transport == "collective":
+        raise RuntimeError(
+            f"{family} does not run on the collective transport; use "
+            f"--transport loopback|simulated|cluster")
+
+
+def allreduce(cfg: BenchConfig) -> BenchStats:
+    """One cfg.algo allreduce of the payload across cfg.num_workers
+    fabric endpoints (rpc.collectives): modeled transports match the
+    netmodel/cluster closed forms exactly; loopback reduces real
+    float32 gradients through the measured datapath."""
+    if cfg.num_workers < 2:
+        raise RuntimeError("allreduce needs --num-workers >= 2")
+    _reject_collective(cfg, "allreduce")
+    from repro import rpc as rpclib
+    if cfg.algo not in rpclib.ALLREDUCE_ALGOS:
+        raise RuntimeError(f"unknown --algo {cfg.algo!r}; choose from "
+                           f"{', '.join(rpclib.ALLREDUCE_ALGOS)}")
+    spec = generate_spec(cfg)
+    fabric, _, metrics = _make_fabric(cfg, spec, cfg.num_workers,
+                                      "allreduce")
+    wire_mode = cfg.resolved_wire_mode
+    if cfg.transport == "loopback":
+        # measured path: reduce real seeded gradients
+        rng = np.random.default_rng(cfg.seed)
+        elems = _grad_params(cfg, spec)
+        data = [rng.standard_normal(elems).astype(np.float32)
+                for _ in range(cfg.num_workers)]
+
+        def exchange():
+            return rpclib.allreduce(fabric, cfg.algo,
+                                    data=[d.copy() for d in data],
+                                    itemsize=4, wire_mode=wire_mode)
+    else:
+        def exchange():
+            return rpclib.allreduce(fabric, cfg.algo, spec.total_bytes,
+                                    wire_mode=wire_mode)
+
+    rpcs = allreduce_rpcs_per_round(cfg.algo, cfg.num_workers)
+    with ResourceMonitor() as mon:
+        times = _fabric_bench(cfg, exchange, fabric, metrics)
+    st = _stats("allreduce", cfg, spec, times,
+                {"rpcs_per_s": rpcs / float(np.mean(times)),
+                 "rpcs_per_round": float(rpcs),
+                 "algo_steps": float(2 * (cfg.num_workers - 1)
+                                     if cfg.algo == "ring" else
+                                     2 * max(1, (cfg.num_workers - 1)
+                                             .bit_length())
+                                     if cfg.algo == "tree" else 2)},
+                mon.report)
+    st.rpc_metrics = metrics.snapshot()
+    _attach_trace(st, fabric)
+    _cluster_projection(st, cfg, fabric, spec)
+    return st
+
+
+def train_step(cfg: BenchConfig) -> BenchStats:
+    """One data-parallel SGD step per iteration
+    (train.fabric_train.FabricTrainStep): the payload reinterpreted as
+    a float32 gradient, synchronized through sharded parameter servers
+    (cfg.train_mode = "ps": endpoints = num_ps + num_workers) or a
+    cfg.algo allreduce (endpoints = num_workers). Sweeping workers
+    across both train modes locates the PS -> allreduce crossover."""
+    _reject_collective(cfg, "train_step")
+    if cfg.train_mode not in ("ps", "allreduce"):
+        raise RuntimeError(f"unknown --train-mode {cfg.train_mode!r}; "
+                           f"choose from ps, allreduce")
+    if cfg.train_mode == "ps":
+        if cfg.num_ps < 1 or cfg.num_workers < 1:
+            raise RuntimeError("train_step/ps needs --num-ps >= 1 and "
+                               "--num-workers >= 1")
+        n_endpoints = cfg.num_ps + cfg.num_workers
+    else:
+        if cfg.num_workers < 2:
+            raise RuntimeError(
+                "train_step/allreduce needs --num-workers >= 2")
+        n_endpoints = cfg.num_workers
+    from repro.train.fabric_train import (FabricTrainConfig,
+                                          FabricTrainStep)
+    spec = generate_spec(cfg)
+    fabric, _, metrics = _make_fabric(cfg, spec, n_endpoints,
+                                      "train_step")
+    n_params = _grad_params(cfg, spec)
+    trainer = FabricTrainStep(fabric, FabricTrainConfig(
+        mode=cfg.train_mode, algo=cfg.algo, n_ps=cfg.num_ps,
+        n_params=n_params, seed=cfg.seed,
+        wire_mode=cfg.resolved_wire_mode))
+    with ResourceMonitor() as mon:
+        times = _fabric_bench(cfg, trainer.step, fabric, metrics)
+    st = _stats("train_step", cfg, spec, times,
+                {"steps_per_s": 1.0 / float(np.mean(times)),
+                 "grad_MB": n_params * 4 / 1e6,
+                 "steps_run": float(trainer.step_count)}, mon.report)
+    st.rpc_metrics = metrics.snapshot()
+    _attach_trace(st, fabric)
+    _cluster_projection(st, cfg, fabric, spec)
+    return st
+
+
 BENCHMARKS: Dict[str, Callable[[BenchConfig], BenchStats]] = {
     "p2p_latency": p2p_latency,
     "p2p_bandwidth": p2p_bandwidth,
@@ -425,10 +583,13 @@ BENCHMARKS: Dict[str, Callable[[BenchConfig], BenchStats]] = {
     "fully_connected": fully_connected,
     "ring": ring,
     "incast": incast,
+    "allreduce": allreduce,
+    "train_step": train_step,
 }
 
 #: benchmarks that run over the rpc fabric (honor cfg.transport)
-FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
+FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast", "allreduce",
+                     "train_step")
 
 
 def run(cfg: BenchConfig) -> BenchStats:
@@ -443,7 +604,43 @@ def run(cfg: BenchConfig) -> BenchStats:
 # clock) — so a fresh run diffs clean against the committed file unless
 # the pricing model or the fabric's behavior actually changed.
 
-BASELINE_SCHEMA = 2
+BASELINE_SCHEMA = 3
+
+#: the original three fabric exchange families — the generic baseline
+#: rows; allreduce/train_step get per-algo / per-train-mode rows
+_BASELINE_EXCHANGES = ("fully_connected", "ring", "incast")
+
+#: the committed PS -> allreduce crossover sweep (train_step family):
+#: one 64 KiB gradient, 2 PS, ring allreduce, eth40g — the worker
+#: band where the paper's PS layout wins and the point where the
+#: collective takes over for good
+CROSSOVER_GRAD_BYTES = 65536
+CROSSOVER_WORKERS = (8, 16, 32, 64, 128)
+
+
+def collect_train_crossover(network: str = "eth40g",
+                            num_ps: int = 2) -> dict:
+    """Modeled train_step round times, PS vs ring allreduce, along the
+    workers axis (exact closed forms; the simulated transport matches
+    them bit-for-bit, held by tests/test_fabric_train.py)."""
+    from repro.train.fabric_train import train_step_time
+    net = NETWORKS[network]
+    points = []
+    for w in CROSSOVER_WORKERS:
+        ps = train_step_time(net, "ps", CROSSOVER_GRAD_BYTES, w,
+                             n_ps=num_ps)
+        ar = train_step_time(net, "allreduce", CROSSOVER_GRAD_BYTES, w,
+                             algo="ring")
+        points.append({"workers": w, "ps_s": ps, "allreduce_s": ar,
+                       "winner": "ps" if ps < ar else "allreduce"})
+    wins_from = None
+    for p in reversed(points):
+        if p["winner"] != "allreduce":
+            break
+        wins_from = p["workers"]
+    return {"network": network, "num_ps": num_ps, "algo": "ring",
+            "grad_bytes": CROSSOVER_GRAD_BYTES, "points": points,
+            "allreduce_wins_from": wins_from}
 
 #: measured flush-loop hot-path numbers (dev container, PR 9): the
 #: zero-copy datapath work profiled and trimmed the numpy pack path
@@ -498,11 +695,23 @@ def collect_baseline(network: str = "eth40g", num_ps: int = 2,
                                             serialized=serialized),
             "metric": "rpcs_per_s"},
     }
-    for fam in FABRIC_BENCHMARKS:
+    for fam in _BASELINE_EXCHANGES:
         st = run(replace(base, benchmark=fam))
         families[fam] = {"round_time_s": st.mean_s,
                          "throughput": st.derived["rpcs_per_s"],
                          "metric": "rpcs_per_s"}
+    for algo in ALLREDUCE_ALGOS:
+        st = run(replace(base, benchmark="allreduce", algo=algo))
+        families[f"allreduce_{algo}"] = {
+            "round_time_s": st.mean_s,
+            "throughput": st.derived["rpcs_per_s"],
+            "metric": "rpcs_per_s"}
+    for tm in ("ps", "allreduce"):
+        st = run(replace(base, benchmark="train_step", train_mode=tm))
+        families[f"train_step_{tm}"] = {
+            "round_time_s": st.mean_s,
+            "throughput": st.derived["steps_per_s"],
+            "metric": "steps_per_s"}
     # per-wire-mode coverage (schema 2): the paper's three-way
     # Ethernet/IPoIB/RDMA analogue as serialized / scatter_gather /
     # zero_copy — closed forms for the paper families, exact simulated
@@ -525,14 +734,30 @@ def collect_baseline(network: str = "eth40g", num_ps: int = 2,
                                                 num_workers, mode=wm),
                 "metric": "rpcs_per_s"},
         }
-        for fam in FABRIC_BENCHMARKS:
+        for fam in _BASELINE_EXCHANGES:
             st = run(replace(base, benchmark=fam, wire_mode=wm))
             entry[fam] = {"round_time_s": st.mean_s,
                           "throughput": st.derived["rpcs_per_s"],
                           "metric": "rpcs_per_s"}
+        for algo in ALLREDUCE_ALGOS:
+            st = run(replace(base, benchmark="allreduce", algo=algo,
+                             wire_mode=wm))
+            entry[f"allreduce_{algo}"] = {
+                "round_time_s": st.mean_s,
+                "throughput": st.derived["rpcs_per_s"],
+                "metric": "rpcs_per_s"}
+        for tm in ("ps", "allreduce"):
+            st = run(replace(base, benchmark="train_step",
+                             train_mode=tm, wire_mode=wm))
+            entry[f"train_step_{tm}"] = {
+                "round_time_s": st.mean_s,
+                "throughput": st.derived["steps_per_s"],
+                "metric": "steps_per_s"}
         wire_modes[wm] = entry
     return {"schema": BASELINE_SCHEMA, "config": config,
             "families": families, "wire_modes": wire_modes,
+            "train_crossover": collect_train_crossover(network=network,
+                                                       num_ps=num_ps),
             "perf_notes": PERF_NOTES}
 
 
@@ -561,4 +786,31 @@ def check_baseline(baseline: dict, rel_tol: float = 0.01) -> List[str]:
         fresh_wm = fresh["wire_modes"].get(wm, {})
         for fam, want in fams.items():
             diff(want, fresh_wm.get(fam), f"{wm}/{fam}")
+    cross = baseline.get("train_crossover")
+    if cross is not None:
+        got = collect_train_crossover(network=cross["network"],
+                                      num_ps=cross["num_ps"])
+        if got["allreduce_wins_from"] != cross["allreduce_wins_from"]:
+            problems.append(
+                f"train_crossover.allreduce_wins_from: baseline "
+                f"{cross['allreduce_wins_from']} vs fresh "
+                f"{got['allreduce_wins_from']}")
+        fresh_pts = {p["workers"]: p for p in got["points"]}
+        for p in cross["points"]:
+            q = fresh_pts.get(p["workers"])
+            label = f"train_crossover.w{p['workers']}"
+            if q is None:
+                problems.append(f"{label}: missing from fresh run")
+                continue
+            if q["winner"] != p["winner"]:
+                problems.append(f"{label}.winner: baseline "
+                                f"{p['winner']} vs fresh {q['winner']}")
+            for key in ("ps_s", "allreduce_s"):
+                a, b = float(p[key]), float(q[key])
+                rel = abs(b - a) / max(abs(a), 1e-30)
+                if rel > rel_tol:
+                    problems.append(
+                        f"{label}.{key}: baseline {a:.6g} vs fresh "
+                        f"{b:.6g} (rel drift {rel:.3%} > tol "
+                        f"{rel_tol:.3%})")
     return problems

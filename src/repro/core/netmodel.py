@@ -33,6 +33,66 @@ from repro.core.payload import PayloadSpec
 WIRE_MODES = ("serialized", "scatter_gather", "zero_copy")
 
 
+#: bytes of the little-endian int64 source tag prepended to every
+#: reduce-scatter/allgather message (rsag needs source attribution for
+#: a deterministic summation order; ring/tree infer it from topology)
+ALLREDUCE_TAG_BYTES = 8
+
+#: the allreduce algorithms, CLI order (``bench_comm --algo``)
+ALLREDUCE_ALGOS = ("ring", "tree", "rsag")
+
+
+def allreduce_chunk_sizes(total_bytes: int, n_workers: int, *,
+                          itemsize: int = 1) -> Tuple[int, ...]:
+    """Balanced contiguous partition of a ``total_bytes`` gradient into
+    ``n_workers`` chunks on element (``itemsize``) boundaries: the first
+    ``elems % n`` chunks get one extra element. Shared by the collective
+    drivers and the closed forms below — exactness by construction."""
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    if itemsize < 1:
+        raise ValueError(f"itemsize must be >= 1, got {itemsize}")
+    if total_bytes < 0 or total_bytes % itemsize:
+        raise ValueError(
+            f"total_bytes ({total_bytes}) must be a non-negative "
+            f"multiple of itemsize ({itemsize})")
+    elems = total_bytes // itemsize
+    base, rem = divmod(elems, n_workers)
+    return tuple((base + (1 if c < rem else 0)) * itemsize
+                 for c in range(n_workers))
+
+
+def ring_allreduce_send_chunk(worker: int, step: int, n_workers: int
+                              ) -> int:
+    """The chunk index worker ``worker`` sends to its successor at ring
+    step ``step``: steps ``0..n-2`` are the reduce-scatter rotation
+    (chunk ``(i - s) % n``), steps ``n-1..2n-3`` the allgather rotation
+    of the fully reduced chunks (chunk ``(i + 1 - t) % n``)."""
+    n = n_workers
+    if not 0 <= step < 2 * (n - 1):
+        raise ValueError(f"step {step} outside ring schedule "
+                         f"0..{2 * (n - 1) - 1}")
+    if step < n - 1:
+        return (worker - step) % n
+    return (worker + 1 - (step - (n - 1))) % n
+
+
+def tree_reduce_rounds(n_workers: int
+                       ) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """Binomial-tree reduce schedule: ``ceil(log2 n)`` rounds of
+    disjoint (sender, receiver) pairs; round ``r`` pairs ``i + 2^r ->
+    i`` for every ``i`` divisible by ``2^(r+1)`` with the sender in
+    range. The broadcast half replays these rounds reversed with the
+    pairs flipped."""
+    rounds = []
+    r = 1
+    while r < n_workers:
+        rounds.append(tuple((i + r, i) for i in range(0, n_workers, 2 * r)
+                            if i + r < n_workers))
+        r *= 2
+    return tuple(rounds)
+
+
 def resolve_wire_mode(serialized: bool = False,
                       mode: "str | None" = None) -> str:
     """Resolve the (legacy ``serialized`` bool, explicit ``mode``) pair
@@ -290,6 +350,140 @@ class NetworkModel:
                                              serialized=serialized,
                                              mode=mode,
                                              fetch_ratio=fetch_ratio)
+
+    # -- allreduce collectives (rpc.collectives drives these flights) --
+    def _flight_elapsed(self, msgs, mode: str) -> float:
+        """Elapsed time of one flight of ``(src, dst, sizes)`` messages
+        — the exact accumulator arithmetic of
+        ``rpc.SimulatedTransport.deliver`` (same per-endpoint rows,
+        same accumulation order), so a closed form built on per-step
+        message lists matches the transport bit-for-bit."""
+        acc: Dict[int, list] = {}
+        beta = self.beta_Bps
+        ack = self.msg_time(64)
+        for src, dst, sizes in msgs:
+            row = acc.get(dst)
+            if row is None:
+                row = acc[dst] = [0.0, 0, 0, 0.0]
+            nbytes = int(sum(sizes))
+            row[0] += self._payload_time_raw(nbytes, len(sizes),
+                                             mode) + ack
+            row[1] += 1
+            row[2] += nbytes
+            row = acc.get(src)
+            if row is None:
+                row = acc[src] = [0.0, 0, 0, 0.0]
+            row[3] += nbytes / beta
+        elapsed = 0.0
+        cpu_copy = self.cpu_copy_Bps
+        for ingress, k, nbytes, egress in acc.values():
+            t = ingress
+            if k > 1:
+                t += (k - 1) * nbytes / cpu_copy
+            t += egress
+            if t > elapsed:
+                elapsed = t
+        return elapsed
+
+    def ring_allreduce_time(self, total_bytes: int, n_workers: int, *,
+                            itemsize: int = 1, serialized: bool = False,
+                            mode: "str | None" = None) -> float:
+        """Ring allreduce of a ``total_bytes`` gradient across
+        ``n_workers``: 2(n-1) rotation steps (reduce-scatter then
+        allgather), each one flight in which every worker sends one
+        balanced chunk to its successor. Per step every endpoint
+        ingests exactly one chunk (no contention term) while pumping
+        its own chunk out. Matches rpc.collectives.ring_allreduce on
+        the simulated transport exactly."""
+        n = n_workers
+        if n < 2:
+            return 0.0
+        mode = resolve_wire_mode(serialized, mode)
+        chunks = allreduce_chunk_sizes(total_bytes, n, itemsize=itemsize)
+        total = 0.0
+        for step in range(2 * (n - 1)):
+            msgs = [(i, (i + 1) % n,
+                     (chunks[ring_allreduce_send_chunk(i, step, n)],))
+                    for i in range(n)]
+            total += self._flight_elapsed(msgs, mode)
+        return total
+
+    def tree_allreduce_time(self, total_bytes: int, n_workers: int, *,
+                            serialized: bool = False,
+                            mode: "str | None" = None) -> float:
+        """Binomial-tree allreduce: ``ceil(log2 n)`` reduce rounds
+        (each a flight of disjoint full-payload pair sends toward
+        worker 0) mirrored by the broadcast rounds back out. Latency-
+        optimal at small payloads — 2 log n full-payload hops versus
+        the ring's 2(n-1) chunk hops. Matches
+        rpc.collectives.tree_allreduce on the simulated transport
+        exactly."""
+        if n_workers < 2:
+            return 0.0
+        mode = resolve_wire_mode(serialized, mode)
+        rounds = tree_reduce_rounds(n_workers)
+        sizes = (int(total_bytes),)
+        total = 0.0
+        for pairs in rounds:
+            total += self._flight_elapsed(
+                [(s, d, sizes) for s, d in pairs], mode)
+        for pairs in reversed(rounds):
+            total += self._flight_elapsed(
+                [(d, s, sizes) for s, d in pairs], mode)
+        return total
+
+    def rsag_allreduce_time(self, total_bytes: int, n_workers: int, *,
+                            itemsize: int = 1, serialized: bool = False,
+                            mode: "str | None" = None) -> float:
+        """Reduce-scatter + allgather in two all-to-all flights: every
+        worker first sends chunk j (plus the int64 source tag) to
+        worker j, which ingests n-1 tagged chunks — the quadratic
+        host-copy contention the one-shot exchange pays and the ring
+        amortizes — then every worker broadcasts its reduced chunk.
+        Matches rpc.collectives.rsag_allreduce on the simulated
+        transport exactly."""
+        n = n_workers
+        if n < 2:
+            return 0.0
+        mode = resolve_wire_mode(serialized, mode)
+        chunks = allreduce_chunk_sizes(total_bytes, n, itemsize=itemsize)
+        tag = ALLREDUCE_TAG_BYTES
+        scatter = [(i, j, (tag, chunks[j]))
+                   for i in range(n) for j in range(n) if j != i]
+        gather = [(j, i, (tag, chunks[j]))
+                  for j in range(n) for i in range(n) if i != j]
+        return (self._flight_elapsed(scatter, mode)
+                + self._flight_elapsed(gather, mode))
+
+    def allreduce_time(self, algo: str, total_bytes: int,
+                       n_workers: int, *, itemsize: int = 1,
+                       serialized: bool = False,
+                       mode: "str | None" = None) -> float:
+        """Dispatch on the :data:`ALLREDUCE_ALGOS` name."""
+        if algo == "ring":
+            return self.ring_allreduce_time(
+                total_bytes, n_workers, itemsize=itemsize,
+                serialized=serialized, mode=mode)
+        if algo == "tree":
+            return self.tree_allreduce_time(
+                total_bytes, n_workers, serialized=serialized, mode=mode)
+        if algo == "rsag":
+            return self.rsag_allreduce_time(
+                total_bytes, n_workers, itemsize=itemsize,
+                serialized=serialized, mode=mode)
+        raise ValueError(f"unknown allreduce algo {algo!r}; "
+                         f"expected one of {ALLREDUCE_ALGOS}")
+
+    def allreduce_throughput(self, algo: str, total_bytes: int,
+                             n_workers: int, *, itemsize: int = 1,
+                             serialized: bool = False,
+                             mode: "str | None" = None) -> float:
+        """Algorithm bandwidth (reduced bytes/s): ``total_bytes`` over
+        the closed-form allreduce time."""
+        t = self.allreduce_time(algo, total_bytes, n_workers,
+                                itemsize=itemsize, serialized=serialized,
+                                mode=mode)
+        return total_bytes / t if t > 0 else float("inf")
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,15 @@ rpc-fabric families (fully_connected / ring / incast).
   PYTHONPATH=src python -m repro.launch.bench_comm \
       --benchmark incast --num-workers 64 --transport simulated
 
+  # collectives + the PS -> allreduce training crossover
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --benchmark allreduce --algo ring --num-workers 8 \
+      --transport simulated
+  PYTHONPATH=src python -m repro.launch.bench_comm \
+      --benchmark train_step --train-mode ps --num-ps 2 \
+      --num-workers 16 --transport simulated \
+      --sweep workers,train_mode
+
   # cross-product sweep, one table (+ --json for machine-readable rows)
   PYTHONPATH=src python -m repro.launch.bench_comm \
       --sweep scheme,transport --benchmark incast --num-workers 4 \
@@ -40,9 +49,12 @@ from --mode) — zero_copy places payloads in a pre-registered shared
 BufferPool and ships (pool, offset, size) descriptors instead of
 bytes. --sweep takes a comma-separated list of axes (scheme,
 mode, wire_mode, payload, transport, benchmark, network, workers,
-stream_chunks — the last
-two generate scaling curves) and runs the full cross-product of their
-values in one invocation. Fabric-family rows carry per-method
+stream_chunks, algo, train_mode — workers and stream_chunks
+generate scaling curves) and runs the full cross-product of their
+values in one invocation; algo and train_mode sweep the collective
+schedule and the train_step layout (PS vs allreduce — crossed with
+workers, the PS -> allreduce crossover curve). Fabric-family rows
+carry per-method
 interceptor metrics (call counts + latency percentiles) under
 "rpc_metrics" and the tracer's per-phase latency breakdown under
 "rpc_phases" in the --json output; --json writes a versioned envelope
@@ -75,10 +87,14 @@ import json
 import sys
 from typing import List, Optional
 
-FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast")
+FABRIC_BENCHMARKS = ("fully_connected", "ring", "incast", "allreduce",
+                     "train_step")
+#: fabric families that read --algo (the collective schedule)
+ALGO_BENCHMARKS = ("allreduce", "train_step")
 WORKLOAD_CHOICES = ("poisson", "bursty", "diurnal", "trace")
 BENCHMARK_CHOICES = ("p2p_latency", "p2p_bandwidth", "ps_throughput",
-                     "fully_connected", "ring", "incast")
+                     "fully_connected", "ring", "incast", "allreduce",
+                     "train_step")
 TRANSPORT_CHOICES = ("collective", "loopback", "simulated", "cluster")
 
 #: values an axis takes when swept (benchmark sweeps over the fabric
@@ -96,6 +112,8 @@ SWEEP_AXES = {
     "network": None,     # filled from netmodel.NETWORKS lazily
     "workers": (2, 4, 8, 16),
     "stream_chunks": (1, 2, 4, 8),
+    "algo": ("ring", "tree", "rsag"),
+    "train_mode": ("ps", "allreduce"),
 }
 
 #: sweep axis -> BenchConfig field (identity unless listed)
@@ -103,8 +121,8 @@ AXIS_FIELD = {"workers": "num_workers"}
 
 
 def _metric(st) -> str:
-    return {"p2p_latency": "rtt_us", "p2p_bandwidth": "MBps"}.get(
-        st.name, "rpcs_per_s")
+    return {"p2p_latency": "rtt_us", "p2p_bandwidth": "MBps",
+            "train_step": "steps_per_s"}.get(st.name, "rpcs_per_s")
 
 
 def _effective_network(cfg) -> Optional[str]:
@@ -139,6 +157,8 @@ def _build_config(args, payload_spec, **overrides):
         stream_chunks=args.stream_chunks, fetch_ratio=args.fetch_ratio,
         deadline_s=args.deadline_s, admission_limit=args.admission_limit,
         cluster_spec=args.cluster_spec, payload_spec=payload_spec,
+        algo=args.algo or "ring",
+        train_mode=args.train_mode or "allreduce",
         trace=args.trace is not None)
     base.update(overrides)
     return BenchConfig(**base)
@@ -155,6 +175,10 @@ def _print_single(st, cfg, args) -> None:
           f"{wm}{extra}]")
     print(f"payload        : {st.spec.n_buffers} iovecs, "
           f"{st.spec.total_bytes/1e6:.3f} MB")
+    if cfg.benchmark in ALGO_BENCHMARKS:
+        tm = (f", train_mode={cfg.train_mode}"
+              if cfg.benchmark == "train_step" else "")
+        print(f"collective     : algo={cfg.algo}{tm}")
     projected = (cfg.benchmark in FABRIC_BENCHMARKS
                  and cfg.transport in ("simulated", "cluster"))
     label = "net projected " if projected else "host measured "
@@ -171,8 +195,8 @@ def _print_single(st, cfg, args) -> None:
     nets = ([args.network] if args.network else
             sorted(st.model_projection))
     for n in nets:
-        unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s"}.get(
-            st.name, "RPC/s")
+        unit = {"p2p_latency": "s RTT", "p2p_bandwidth": "MB/s",
+                "train_step": "steps/s"}.get(st.name, "RPC/s")
         print(f"model {n:12s}: {st.model_projection[n]:.6g} {unit}")
     _print_phases(st)
 
@@ -214,6 +238,11 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
             # benchmarks that read the chunk count — fully_connected
             # would repeat identical rows dressed up as a curve
             vals = tuple(b for b in vals if b in ("ring", "incast"))
+        if ax == "benchmark" and "algo" in axes:
+            # likewise, only the collective families read --algo
+            vals = tuple(b for b in vals if b in ALGO_BENCHMARKS)
+        if ax == "benchmark" and "train_mode" in axes:
+            vals = tuple(b for b in vals if b == "train_step")
         if ax == "payload":
             # the payload axis restricts the generator to ONE size
             # category per cell — a per-category S/M/L curve
@@ -233,6 +262,10 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
             row["workers"] = cfg.num_workers
         if "stream_chunks" in axes:
             row["stream_chunks"] = cfg.stream_chunks
+        if cfg.benchmark in ALGO_BENCHMARKS or "algo" in axes:
+            row["algo"] = cfg.algo
+        if cfg.benchmark == "train_step" or "train_mode" in axes:
+            row["train_mode"] = cfg.train_mode
         if cfg.benchmark in FABRIC_BENCHMARKS:
             row["transport"] = cfg.transport
         try:
@@ -256,7 +289,8 @@ def run_sweep(args, axes: List[str], payload_spec) -> List[dict]:
 def _print_sweep(rows: List[dict]) -> None:
     cols = ["benchmark", "scheme", "mode", "wire_mode", "transport",
             "network"]
-    for extra in ("payload", "workers", "stream_chunks"):  # swept axes
+    for extra in ("payload", "workers", "stream_chunks", "algo",
+                  "train_mode"):                           # swept axes
         if any(extra in r for r in rows):
             cols.append(extra)
     n_id = len(cols)                             # identity columns
@@ -298,6 +332,22 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "homogeneous cluster on --network)")
     ap.add_argument("--stream-chunks", type=int, default=4,
                     help="chunks per stream (ring/incast families)")
+    ap.add_argument("--algo", default=None,
+                    choices=["ring", "tree", "rsag"],
+                    help="allreduce/train_step families: the "
+                         "collective schedule (ring = bandwidth-"
+                         "optimal rotation, tree = binomial "
+                         "reduce+broadcast, rsag = reduce-scatter + "
+                         "allgather; default ring)")
+    ap.add_argument("--train-mode", default=None,
+                    choices=["ps", "allreduce"],
+                    help="train_step family: gradient-synchronization "
+                         "layout — ps shards parameters across "
+                         "--num-ps server endpoints (push/fetch "
+                         "flights), allreduce reduces with the --algo "
+                         "schedule across --num-workers (default "
+                         "allreduce); sweep workers across both to "
+                         "find the crossover")
     ap.add_argument("--fetch-ratio", type=float, default=1.0,
                     help="incast: fetch payload as a fraction/multiple "
                          "of the push payload (1.0 = symmetric)")
@@ -444,6 +494,15 @@ def main(argv: Optional[List[str]] = None) -> None:
         ap.error("--deadline-s/--admission-limit need a fabric "
                  f"benchmark ({', '.join(FABRIC_BENCHMARKS)}); got "
                  f"--benchmark {args.benchmark}")
+    if args.algo is not None and args.benchmark not in ALGO_BENCHMARKS \
+            and args.sweep is None and args.workload is None:
+        ap.error(f"--algo needs a collective benchmark "
+                 f"({', '.join(ALGO_BENCHMARKS)}); got --benchmark "
+                 f"{args.benchmark}")
+    if args.train_mode is not None and args.benchmark != "train_step" \
+            and args.sweep is None and args.workload is None:
+        ap.error(f"--train-mode needs --benchmark train_step; got "
+                 f"--benchmark {args.benchmark}")
     if args.baseline_tolerance <= 0:
         ap.error(f"--baseline-tolerance must be > 0, got "
                  f"{args.baseline_tolerance}")
@@ -493,7 +552,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                           ("--trace", args.trace),
                           ("--baseline", args.baseline),
                           ("--check-baseline", args.check_baseline),
-                          ("--arch", args.arch)):
+                          ("--arch", args.arch),
+                          ("--algo", args.algo),
+                          ("--train-mode", args.train_mode)):
             if val is not None:
                 ap.error(f"--workload is a standalone open-loop run; "
                          f"it cannot combine with {flag}")
@@ -569,6 +630,21 @@ def main(argv: Optional[List[str]] = None) -> None:
             ap.error(f"--sweep stream_chunks needs a streaming "
                      f"benchmark ({', '.join(streaming_ok)}); "
                      f"got --benchmark {args.benchmark}")
+        if "algo" in axes and args.benchmark not in ALGO_BENCHMARKS \
+                and "benchmark" not in axes:
+            ap.error(f"--sweep algo needs a collective benchmark "
+                     f"({', '.join(ALGO_BENCHMARKS)}); got "
+                     f"--benchmark {args.benchmark}")
+        if "train_mode" in axes and args.benchmark != "train_step" \
+                and "benchmark" not in axes:
+            ap.error(f"--sweep train_mode needs --benchmark "
+                     f"train_step; got --benchmark {args.benchmark}")
+        if "stream_chunks" in axes and ("algo" in axes
+                                        or "train_mode" in axes):
+            # no benchmark reads both the chunk count and the
+            # collective axes — the cross-product would be empty
+            ap.error("--sweep stream_chunks cannot cross algo/"
+                     "train_mode: no benchmark reads both")
 
     if args.cluster_spec is not None:
         # parse + consistency in one place, before any work or output

@@ -49,10 +49,17 @@ from repro.rpc.fabric import (BIDI, CLIENT_STREAM, DEADLINE_EXCEEDED,
                               ring_exchange)
 from repro.rpc.cluster import (ClusterSpec, ClusterTransport,
                                EndpointSpec, LinkSpec, as_cluster_spec,
+                               cluster_allreduce_time,
                                cluster_fc_round_time,
                                cluster_incast_round_time,
-                               cluster_ring_round_time, homogeneous,
+                               cluster_ring_allreduce_time,
+                               cluster_ring_round_time,
+                               cluster_rsag_allreduce_time,
+                               cluster_tree_allreduce_time, homogeneous,
                                ps_worker_cluster)
+from repro.rpc.collectives import (ALLREDUCE_ALGOS, CollectiveReport,
+                                   allreduce, ring_allreduce,
+                                   rsag_allreduce, tree_allreduce)
 from repro.rpc.flow import ChunkGate, CreditWindow, FlowStats, WindowConfig
 from repro.rpc.interceptors import (AdmissionInterceptor, CallContext,
                                     ClientInterceptor,
@@ -61,11 +68,13 @@ from repro.rpc.interceptors import (AdmissionInterceptor, CallContext,
                                     RetryInterceptor, ServerContext,
                                     ServerInterceptor, TransientError,
                                     is_resource_exhausted, is_transient)
-from repro.rpc.service import (CONFORMANCE_SERVICE, EXCHANGE_SERVICE,
+from repro.rpc.service import (ALLREDUCE_SERVICE, CONFORMANCE_SERVICE,
+                               EXCHANGE_SERVICE,
                                INCAST_SERVICE, RING_SERVICE, Codec,
                                MethodSpec, ServiceDef, Stub, StubMethod,
                                UnaryCall, conformance_handlers)
-from repro.rpc.bufpool import BufferPool, get_pool, reset_pools
+from repro.rpc.bufpool import (BufferPool, PoolExhausted, get_pool,
+                               release_call, reset_pools)
 from repro.rpc.framing import (FLAG_ERROR, FLAG_FAULT, FLAG_ONE_WAY,
                                FLAG_REPLY, FLAG_SERIALIZED, FLAG_STREAM,
                                FLAG_STREAM_END, FLAG_ZERO_COPY,
@@ -81,8 +90,9 @@ from repro.rpc.transport import (Delivery, FaultInjectionTransport,
                                  spec_of)
 
 __all__ = [
+    "ALLREDUCE_ALGOS", "ALLREDUCE_SERVICE",
     "AdmissionInterceptor", "BIDI", "BidiStream", "BoundedHistogram",
-    "BufferPool", "Call", "CallContext",
+    "BufferPool", "Call", "CallContext", "CollectiveReport",
     "Channel", "ChunkGate", "CLIENT_STREAM", "CONFORMANCE_SERVICE",
     "ClientInterceptor", "ClusterSpec", "ClusterTransport", "Codec",
     "CompletionQueue", "CreditWindow", "DEADLINE_EXCEEDED",
@@ -92,19 +102,24 @@ __all__ = [
     "HistogramRegistry",
     "INCAST_SERVICE", "LINK_FAULT", "LinkSpec", "LoopbackTransport",
     "Message", "MethodSpec", "MetricsInterceptor", "PHASES",
+    "PoolExhausted",
     "RING_SERVICE", "ResourceExhausted", "RetryInterceptor", "RpcError",
     "RpcFabric", "SERVER_STREAM", "Server", "ServerContext",
     "ServerInterceptor", "ServerStream", "ServiceDef",
     "SimulatedTransport", "Span", "StreamHandle", "StreamPump", "Stub",
     "StubMethod",
     "Tracer", "Transport", "TransientError", "UNARY",
-    "UnaryCall", "WIRE_MODES", "WindowConfig", "as_cluster_spec",
+    "UnaryCall", "WIRE_MODES", "WindowConfig", "allreduce",
+    "as_cluster_spec", "cluster_allreduce_time",
     "cluster_fc_round_time", "cluster_incast_round_time",
-    "cluster_ring_round_time", "conformance_handlers", "decode",
+    "cluster_ring_allreduce_time", "cluster_ring_round_time",
+    "cluster_rsag_allreduce_time", "cluster_tree_allreduce_time",
+    "conformance_handlers", "decode",
     "encode", "fully_connected_exchange", "get_pool", "homogeneous",
     "incast_exchange", "is_resource_exhausted", "is_transient",
+    "ring_allreduce", "rsag_allreduce", "tree_allreduce",
     "make_frame", "make_transport", "method_id", "ps_worker_cluster",
-    "reset_pools", "resolve_wire_mode", "ring_exchange",
+    "release_call", "reset_pools", "resolve_wire_mode", "ring_exchange",
     "schedule_rounds", "spec_of", "stream_chunk",
     "FLAG_ERROR", "FLAG_FAULT", "FLAG_ONE_WAY", "FLAG_REPLY",
     "FLAG_SERIALIZED", "FLAG_STREAM", "FLAG_STREAM_END",

@@ -38,8 +38,11 @@ import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.netmodel import (NETWORKS, LinkLoad, NetworkModel,
-                                 cluster_flight_time)
+from repro.core.netmodel import (ALLREDUCE_TAG_BYTES, NETWORKS, LinkLoad,
+                                 NetworkModel, allreduce_chunk_sizes,
+                                 cluster_flight_time,
+                                 ring_allreduce_send_chunk,
+                                 tree_reduce_rounds)
 from repro.core.payload import PayloadSpec, classify, scale_sizes
 from repro.rpc.flow import WindowConfig
 from repro.rpc.transport import (Delivery, Message, Transport,
@@ -445,9 +448,95 @@ def cluster_incast_round_time(cluster: ClusterSpec,
     return cluster_flight_time(push) + cluster_flight_time(fetch)
 
 
+def cluster_ring_allreduce_time(cluster: ClusterSpec, total_bytes: int,
+                                *, itemsize: int = 1,
+                                serialized: bool = False,
+                                mode: Optional[str] = None) -> float:
+    """Ring allreduce on the cluster: 2(n-1) rotation flights, each
+    worker sending one balanced chunk to its successor — per-step link
+    loads summed through ``cluster_flight_time``, matching
+    ``rpc.collectives.ring_allreduce`` over a ClusterTransport."""
+    n = cluster.n_endpoints
+    if n < 2:
+        return 0.0
+    chunks = allreduce_chunk_sizes(total_bytes, n, itemsize=itemsize)
+    total = 0.0
+    for step in range(2 * (n - 1)):
+        loads = [_load(cluster, i, (i + 1) % n,
+                       _payload_spec(
+                           (chunks[ring_allreduce_send_chunk(i, step,
+                                                             n)],)),
+                       1, serialized, mode)
+                 for i in range(n)]
+        total += cluster_flight_time(loads)
+    return total
+
+
+def cluster_tree_allreduce_time(cluster: ClusterSpec, total_bytes: int,
+                                *, serialized: bool = False,
+                                mode: Optional[str] = None) -> float:
+    """Binomial-tree allreduce on the cluster: ceil(log2 n) reduce
+    flights toward endpoint 0, mirrored broadcast flights back out,
+    full payload per pair send."""
+    n = cluster.n_endpoints
+    if n < 2:
+        return 0.0
+    spec = _payload_spec((int(total_bytes),))
+    rounds = tree_reduce_rounds(n)
+    total = 0.0
+    for pairs in rounds:
+        total += cluster_flight_time(
+            [_load(cluster, s, d, spec, 1, serialized, mode)
+             for s, d in pairs])
+    for pairs in reversed(rounds):
+        total += cluster_flight_time(
+            [_load(cluster, d, s, spec, 1, serialized, mode)
+             for s, d in pairs])
+    return total
+
+
+def cluster_rsag_allreduce_time(cluster: ClusterSpec, total_bytes: int,
+                                *, itemsize: int = 1,
+                                serialized: bool = False,
+                                mode: Optional[str] = None) -> float:
+    """Reduce-scatter + allgather on the cluster: two all-to-all
+    flights of source-tagged chunks (every endpoint ingests n-1
+    messages per flight — the cross-link contention case)."""
+    n = cluster.n_endpoints
+    if n < 2:
+        return 0.0
+    chunks = allreduce_chunk_sizes(total_bytes, n, itemsize=itemsize)
+    tag = ALLREDUCE_TAG_BYTES
+    scatter = [_load(cluster, i, j, _payload_spec((tag, chunks[j])), 1,
+                     serialized, mode)
+               for i in range(n) for j in range(n) if j != i]
+    gather = [_load(cluster, j, i, _payload_spec((tag, chunks[j])), 1,
+                    serialized, mode)
+              for j in range(n) for i in range(n) if i != j]
+    return cluster_flight_time(scatter) + cluster_flight_time(gather)
+
+
+def cluster_allreduce_time(cluster: ClusterSpec, algo: str,
+                           total_bytes: int, *, itemsize: int = 1,
+                           serialized: bool = False,
+                           mode: Optional[str] = None) -> float:
+    """Dispatch on the ``netmodel.ALLREDUCE_ALGOS`` name."""
+    forms = {"ring": cluster_ring_allreduce_time,
+             "tree": cluster_tree_allreduce_time,
+             "rsag": cluster_rsag_allreduce_time}
+    if algo not in forms:
+        raise ValueError(f"unknown allreduce algo {algo!r}; "
+                         f"expected one of {tuple(forms)}")
+    kw = {} if algo == "tree" else {"itemsize": itemsize}
+    return forms[algo](cluster, total_bytes, serialized=serialized,
+                       mode=mode, **kw)
+
+
 __all__ = [
     "ClusterSpec", "ClusterTransport", "EndpointSpec", "LinkSpec",
-    "as_cluster_spec", "cluster_fc_round_time",
-    "cluster_incast_round_time", "cluster_ring_round_time",
+    "as_cluster_spec", "cluster_allreduce_time",
+    "cluster_fc_round_time", "cluster_incast_round_time",
+    "cluster_ring_allreduce_time", "cluster_ring_round_time",
+    "cluster_rsag_allreduce_time", "cluster_tree_allreduce_time",
     "homogeneous", "load_cluster_spec", "ps_worker_cluster",
 ]

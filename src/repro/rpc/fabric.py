@@ -73,7 +73,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Set,
 
 import numpy as np
 
-from repro.rpc import framing
+from repro.rpc import bufpool, framing
 from repro.rpc.completion import CompletionQueue, Event
 from repro.rpc.flow import ChunkGate, CreditWindow, WindowConfig
 from repro.rpc.interceptors import (RESOURCE_EXHAUSTED, TRANSIENT_PREFIX,
@@ -979,6 +979,9 @@ class RpcFabric:
         call = self._calls.pop(old_id, None)
         handle = self._handles.pop(old_id, None)
         self._ctx.pop(old_id, None)
+        # the dead attempt's zero-copy placements will never be read;
+        # unpin them before the retry places the frames again
+        bufpool.release_call(old_id)
         backoff = float(ctx.meta.pop("retry_backoff_s", 0.0) or 0.0)
         if backoff > 0.0:
             if self.transport.modeled \
@@ -1035,6 +1038,8 @@ class RpcFabric:
         # the caller holds the Call object; the fabric is done with it
         self._calls.pop(call.call_id, None)
         self._ctx.pop(call.call_id, None)
+        # free-on-complete: unpin this call's zero-copy placements
+        bufpool.release_call(call.call_id)
 
     def _finish_handle(self, handle: StreamHandle,
                        error: Optional[str] = None,
@@ -1056,6 +1061,8 @@ class RpcFabric:
         self._emit(ev)
         self._handles.pop(handle.call_id, None)
         self._ctx.pop(handle.call_id, None)
+        # free-on-complete: unpin this stream's zero-copy placements
+        bufpool.release_call(handle.call_id)
 
     def _grant(self, msg: Message) -> None:
         ch = self._channels.get((msg.src, msg.dst, msg.frame.wire_mode))

@@ -386,7 +386,10 @@ def _encode_descriptors(frame: Frame) -> np.ndarray:
     pool = get_pool()
     desc = np.zeros(3 * len(frame.bufs), dtype="<u8")
     for i, b in enumerate(frame.bufs):
-        offset, size = pool.place(b)
+        # pin the slot to the call: the fabric releases it when the
+        # call completes (free-on-complete), so a wrap can never tear
+        # bytes an in-flight receiver still views
+        offset, size = pool.place(b, owner=frame.call_id)
         desc[3 * i] = pool.pool_id
         desc[3 * i + 1] = offset
         desc[3 * i + 2] = size

@@ -271,6 +271,12 @@ RING_SERVICE = ServiceDef("Ring", (
 INCAST_SERVICE = ServiceDef("Incast", (
     MethodSpec("push_fetch", BIDI),))
 
+#: allreduce family: one store-only unary method every collective
+#: schedule (ring / tree / reduce-scatter+allgather) sends its per-step
+#: chunks through — rpc.collectives drives the flights
+ALLREDUCE_SERVICE = ServiceDef("Allreduce", (
+    MethodSpec("chunk", UNARY),))
+
 #: transport-conformance service: one method per cardinality kind, so a
 #: dispatching transport can be exercised uniformly across endpoints
 #: (the fabric conformance test tier drives it against every transport)
@@ -312,7 +318,8 @@ def conformance_handlers(*, chunk_bytes: int = 128):
 
 
 __all__ = [
-    "BIDI", "CLIENT_STREAM", "CONFORMANCE_SERVICE", "Codec",
+    "ALLREDUCE_SERVICE", "BIDI", "CLIENT_STREAM", "CONFORMANCE_SERVICE",
+    "Codec",
     "EXCHANGE_SERVICE", "INCAST_SERVICE", "KINDS", "MethodSpec",
     "RING_SERVICE", "RpcError", "SERVER_STREAM", "ServiceDef", "Stub",
     "StubMethod", "UNARY", "UnaryCall", "conformance_handlers",

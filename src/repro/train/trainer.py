@@ -27,6 +27,18 @@ from repro.parallel.sharding import ParallelCtx
 
 log = logging.getLogger("repro.trainer")
 
+#: The step fault boundary: what counts as a *node failure* the retry /
+#: restart-from-checkpoint path may absorb. Device and runtime faults
+#: surface as RuntimeError (jaxlib's XlaRuntimeError subclasses it) and
+#: host-side checkpoint/data I/O as OSError. Programming errors
+#: (TypeError, ValueError, ...) propagate — retrying them would loop a
+#: bug through max_step_retries and then "recover" into the same bug
+#: from the checkpoint. This is the one broad catch in
+#: src/repro/train/ — the CI deprecation gate (mirrored in
+#: tests/test_service_api.py) rejects inline blanket Exception handlers
+#: here, exactly like inside src/repro/rpc/.
+STEP_FAULTS = (RuntimeError, OSError)
+
 
 @dataclass
 class TrainerConfig:
@@ -52,14 +64,23 @@ class StepRecord:
 
 class Trainer:
     def __init__(self, ctx: ParallelCtx, acfg: ArchConfig, shape: ShapeSpec,
-                 tcfg: TrainerConfig = TrainerConfig(),
-                 dcfg: DataConfig = DataConfig(),
+                 tcfg: Optional[TrainerConfig] = None,
+                 dcfg: Optional[DataConfig] = None,
                  fault_hook: Optional[Callable[[int], None]] = None):
         """fault_hook(step): test-injection point — raises to simulate a
         node failure at a given step."""
         self.ctx, self.acfg, self.shape = ctx, acfg, shape
-        self.tcfg, self.dcfg = tcfg, dcfg
+        # None -> a fresh instance per Trainer. A dataclass-instance
+        # default (``tcfg=TrainerConfig()``) is evaluated once at class
+        # definition, so every Trainer would share — and mutate — the
+        # same config object.
+        self.tcfg = TrainerConfig() if tcfg is None else tcfg
+        self.dcfg = DataConfig() if dcfg is None else dcfg
         self.fault_hook = fault_hook
+        # checkpoint `extra` metadata restored by resume_or_init; saved
+        # back with every checkpoint so a resume->save cycle preserves
+        # whatever the launcher recorded (run id, data cursor, ...)
+        self.resume_extra: Dict[str, Any] = {}
         self.step_fn = steps_lib.make_train_step(ctx, acfg, donate=False)
         self.history: List[StepRecord] = []
         self.straggler_events: List[int] = []
@@ -84,6 +105,7 @@ class Trainer:
                 params, opt, _ = self.init_state(seed)
                 (params, opt), extra = ckpt_lib.restore(
                     d, last, (params, opt))
+                self.resume_extra = dict(extra or {})
                 log.info("resumed from step %d", last)
                 return params, opt, last
         return self.init_state(seed)
@@ -115,7 +137,7 @@ class Trainer:
                     params_n, opt_n, loss, wall = self._one_step(
                         params, opt, step)
                     break
-                except Exception as e:  # noqa: BLE001 — node-failure path
+                except STEP_FAULTS as e:    # node-failure boundary
                     retries += 1
                     log.warning("step %d failed (%s); retry %d", step, e,
                                 retries)
@@ -144,7 +166,8 @@ class Trainer:
                         slow_streak, step)
                     if self.tcfg.ckpt_dir:
                         ckpt_lib.save(self.tcfg.ckpt_dir, step + 1,
-                                      (params, opt))
+                                      (params, opt),
+                                      extra=self.resume_extra)
                     slow_streak = 0
             else:
                 slow_streak = 0
@@ -163,8 +186,10 @@ class Trainer:
                          wall * 1e3)
             step += 1
             if self.tcfg.ckpt_dir and step % self.tcfg.ckpt_every == 0:
-                ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt))
+                ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt),
+                              extra=self.resume_extra)
                 ckpt_lib.prune(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
         if self.tcfg.ckpt_dir:
-            ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt))
+            ckpt_lib.save(self.tcfg.ckpt_dir, step, (params, opt),
+                          extra=self.resume_extra)
         return params, opt

@@ -1,0 +1,247 @@
+"""Allreduce collectives: closed-form exactness on simulated + cluster
+transports (all three algorithms), real-data correctness on loopback,
+chunk-partition properties, and bit-identical gradients under seeded
+link faults with retry."""
+import numpy as np
+import pytest
+
+import repro.rpc as rpc
+from _hypothesis_support import given, settings, st
+from repro.core.netmodel import (ALLREDUCE_ALGOS, NETWORKS,
+                                 allreduce_chunk_sizes,
+                                 ring_allreduce_send_chunk,
+                                 tree_reduce_rounds)
+
+TOTAL = 262144
+ALGOS = ALLREDUCE_ALGOS
+
+
+def _fabric(transport, total_bytes=TOTAL, **kw):
+    return rpc.RpcFabric(transport, window_bytes=4 * total_bytes,
+                         window_msgs=256, **kw)
+
+
+# ---------------------------------------------------------------------------
+# exactness: simulated transport == netmodel closed forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net_name", ["eth40g", "rdma_edr", "eth10g"])
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("n", [2, 3, 4, 8])
+def test_simulated_matches_closed_form(net_name, algo, n):
+    net = NETWORKS[net_name]
+    for mode in rpc.WIRE_MODES:
+        fab = _fabric(rpc.SimulatedTransport(n, net))
+        rep = rpc.allreduce(fab, algo, TOTAL, wire_mode=mode)
+        assert rep.modeled
+        want = net.allreduce_time(algo, TOTAL, n, mode=mode)
+        assert rep.elapsed_s == want, (mode, rep.elapsed_s, want)
+        assert rep.replies == 0          # one-way: no reply flights
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_simulated_real_data_still_exact(algo):
+    """Real buffers ride the simulated transport unencoded: numerics
+    AND the modeled clock must both be exact in one run."""
+    rng = np.random.default_rng(0)
+    n, elems = 4, 1000
+    net = NETWORKS["eth40g"]
+    data = [rng.standard_normal(elems).astype(np.float32)
+            for _ in range(n)]
+    fab = _fabric(rpc.SimulatedTransport(n, net), elems * 4)
+    rep = rpc.allreduce(fab, algo, data=data, itemsize=4)
+    assert rep.elapsed_s == net.allreduce_time(algo, elems * 4, n,
+                                               itemsize=4)
+    expect = np.sum(data, axis=0)
+    for r in rep.result:
+        np.testing.assert_allclose(r, expect, rtol=1e-5)
+        assert (r == rep.result[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# exactness: cluster transport == cluster closed forms (2 specs)
+# ---------------------------------------------------------------------------
+
+def _homog_spec():
+    return rpc.homogeneous(4, "eth40g")
+
+
+def _hetero_spec():
+    return rpc.ps_worker_cluster(
+        1, 3, ps_network="rdma_edr", worker_network="eth10g",
+        links=[rpc.LinkSpec("worker0", "ps0", bandwidth_Bps=5e8,
+                            latency_s=2e-4)])
+
+
+@pytest.mark.parametrize("spec_fn", [_homog_spec, _hetero_spec],
+                         ids=["homogeneous", "heterogeneous"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_cluster_matches_closed_form(spec_fn, algo):
+    cs = spec_fn()
+    for mode in rpc.WIRE_MODES:
+        fab = _fabric(rpc.ClusterTransport(cs))
+        rep = rpc.allreduce(fab, algo, TOTAL, wire_mode=mode)
+        want = rpc.cluster_allreduce_time(cs, algo, TOTAL, mode=mode)
+        assert rep.elapsed_s == want, (mode, rep.elapsed_s, want)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_homogeneous_cluster_form_equals_simulated_form(algo):
+    cs = _homog_spec()
+    net = NETWORKS["eth40g"]
+    assert rpc.cluster_allreduce_time(cs, algo, TOTAL) \
+        == net.allreduce_time(algo, TOTAL, cs.n_endpoints)
+
+
+def test_cluster_form_sensitive_to_link_override():
+    """The per-link override must actually reach the closed form (a
+    dead-config guard, like the fc/ring by-mutation checks)."""
+    base = rpc.ps_worker_cluster(1, 3)
+    # ps0 -> worker0 (0 -> 1) is on every schedule: the ring successor
+    # hop, the final tree broadcast round, and the rsag all-to-all
+    slow = rpc.ps_worker_cluster(
+        1, 3, links=[rpc.LinkSpec("ps0", "worker0", bandwidth_Bps=1e7)])
+    for algo in ALGOS:
+        assert rpc.cluster_allreduce_time(slow, algo, TOTAL) \
+            > rpc.cluster_allreduce_time(base, algo, TOTAL)
+
+
+# ---------------------------------------------------------------------------
+# loopback: real reduction, every wire mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_mode", rpc.WIRE_MODES)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_loopback_reduction(algo, wire_mode):
+    rng = np.random.default_rng(1)
+    n, elems = 3, 301
+    data = [rng.standard_normal(elems).astype(np.float32)
+            for _ in range(n)]
+    fab = _fabric(rpc.LoopbackTransport(n), elems * 4)
+    rep = rpc.allreduce(fab, algo, data=data, itemsize=4,
+                        wire_mode=wire_mode)
+    assert not rep.modeled
+    expect = np.sum(data, axis=0)
+    for r in rep.result:
+        np.testing.assert_allclose(r, expect, rtol=1e-5)
+        assert (r == rep.result[0]).all()
+
+
+def test_single_endpoint_is_a_no_op():
+    data = [np.arange(8, dtype=np.float32)]
+    fab = _fabric(rpc.LoopbackTransport(1), 32)
+    rep = rpc.ring_allreduce(fab, data=data, itemsize=4)
+    assert rep.steps == 0 and rep.elapsed_s == 0.0
+    np.testing.assert_array_equal(rep.result[0], data[0])
+    for algo in ALGOS:
+        assert NETWORKS["eth40g"].allreduce_time(algo, TOTAL, 1) == 0.0
+
+
+def test_driver_argument_validation():
+    fab = _fabric(rpc.LoopbackTransport(2))
+    with pytest.raises(ValueError, match="exactly one"):
+        rpc.ring_allreduce(fab)
+    with pytest.raises(ValueError, match="exactly one"):
+        rpc.ring_allreduce(fab, TOTAL, data=[np.zeros(2), np.zeros(2)])
+    with pytest.raises(ValueError, match="unknown allreduce algo"):
+        rpc.allreduce(fab, "butterfly", TOTAL)
+    with pytest.raises(ValueError, match="one vector per endpoint"):
+        rpc.ring_allreduce(fab, data=[np.zeros(4, np.float32)])
+    with pytest.raises(ValueError, match="element per worker"):
+        rpc.rsag_allreduce(_fabric(rpc.LoopbackTransport(3)),
+                           data=[np.zeros(2, np.float32)] * 3,
+                           itemsize=4)
+
+
+# ---------------------------------------------------------------------------
+# chunk-partition properties
+# ---------------------------------------------------------------------------
+
+@given(elems=st.integers(min_value=0, max_value=10000),
+       n=st.integers(min_value=1, max_value=64),
+       itemsize=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=200)
+def test_partition_props(elems, n, itemsize):
+    total = elems * itemsize
+    chunks = allreduce_chunk_sizes(total, n, itemsize=itemsize)
+    assert len(chunks) == n
+    assert sum(chunks) == total                      # exact cover
+    assert all(c % itemsize == 0 for c in chunks)    # element-aligned
+    assert max(chunks) - min(chunks) <= itemsize     # balanced
+    assert sorted(chunks, reverse=True) == list(chunks)  # big-first
+
+
+@given(n=st.integers(min_value=2, max_value=33))
+@settings(max_examples=60)
+def test_ring_schedule_props(n):
+    """Every step is a permutation send (one chunk out, one in per
+    worker) and each worker ends having been sent every chunk index
+    exactly twice across the 2(n-1) steps except its own start/end."""
+    for step in range(2 * (n - 1)):
+        sent = [ring_allreduce_send_chunk(i, step, n) for i in range(n)]
+        assert sorted(sent) == list(range(n))    # distinct chunks move
+    # after reduce-scatter, worker i last accumulated chunk (i+1) % n
+    last = [ring_allreduce_send_chunk((i - 1) % n, n - 2, n)
+            for i in range(n)]
+    assert last == [(i + 1) % n for i in range(n)]
+
+
+@given(n=st.integers(min_value=2, max_value=70))
+@settings(max_examples=60)
+def test_tree_schedule_props(n):
+    rounds = tree_reduce_rounds(n)
+    assert len(rounds) == max(1, (n - 1).bit_length())
+    seen_senders = set()
+    for pairs in rounds:
+        eps = [e for p in pairs for e in p]
+        assert len(eps) == len(set(eps))         # disjoint pairs
+        for s, d in pairs:
+            assert 0 <= d < s < n
+            assert s not in seen_senders         # reduced once, stays
+            seen_senders.add(s)
+    assert seen_senders == set(range(1, n))      # all roads lead to 0
+
+
+def test_partition_rejects_bad_args():
+    with pytest.raises(ValueError):
+        allreduce_chunk_sizes(10, 0)
+    with pytest.raises(ValueError):
+        allreduce_chunk_sizes(10, 4, itemsize=0)
+    with pytest.raises(ValueError):
+        allreduce_chunk_sizes(10, 4, itemsize=4)   # not a multiple
+    with pytest.raises(ValueError):
+        ring_allreduce_send_chunk(0, 6, 4)         # step out of range
+
+
+# ---------------------------------------------------------------------------
+# seeded faults: a retried allreduce is bit-identical
+# ---------------------------------------------------------------------------
+
+def _run_all(data, fault_rate, seed=11):
+    n = len(data)
+    inner = rpc.LoopbackTransport(n)
+    transport = rpc.FaultInjectionTransport(
+        inner, seed=seed, fault_rate=fault_rate, max_faults=24) \
+        if fault_rate else inner
+    fab = rpc.RpcFabric(
+        transport, window_bytes=1 << 20, window_msgs=256,
+        client_interceptors=[rpc.RetryInterceptor(max_attempts=8)])
+    out = {}
+    for algo in ALGOS:
+        rep = rpc.allreduce(fab, algo, data=[d.copy() for d in data],
+                            itemsize=4)
+        out[algo] = rep.result
+    faults = transport.faults_injected if fault_rate else 0
+    return out, faults
+
+
+def test_retried_allreduce_bit_identical_under_faults():
+    rng = np.random.default_rng(3)
+    data = [rng.standard_normal(512).astype(np.float32)
+            for _ in range(4)]
+    clean, _ = _run_all(data, 0.0)
+    faulty, n_faults = _run_all(data, 0.15)
+    assert n_faults > 0, "fault schedule never fired — vacuous test"
+    for algo in ALGOS:
+        for a, b in zip(clean[algo], faulty[algo]):
+            assert (a == b).all(), f"{algo}: gradients diverged"

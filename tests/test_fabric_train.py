@@ -1,0 +1,233 @@
+"""FabricTrainStep: data-parallel steps over the fabric in PS and
+allreduce modes — closed-form exactness on the simulated transport,
+run-to-run bit-determinism, PS/allreduce numerical agreement,
+bit-identical training under seeded link faults with retry, and the
+PS -> allreduce crossover along the workers axis."""
+import numpy as np
+import pytest
+
+import repro.rpc as rpc
+from repro.core.netmodel import ALLREDUCE_TAG_BYTES, NETWORKS
+from repro.rpc.cluster import _payload_spec
+from repro.train.fabric_train import (FabricTrainConfig, FabricTrainStep,
+                                      SyntheticGradEngine,
+                                      allreduce_train_step_time,
+                                      ps_train_step_time, train_step_time)
+
+N_PARAMS = 1024
+
+
+def _fabric(transport, **kw):
+    return rpc.RpcFabric(transport, window_bytes=1 << 20,
+                         window_msgs=256, **kw)
+
+
+def _run(transport, cfg, steps=3):
+    trainer = FabricTrainStep(_fabric(transport), cfg)
+    reports = [trainer.step() for _ in range(steps)]
+    return trainer, reports
+
+
+# ---------------------------------------------------------------------------
+# closed-form exactness on the simulated transport
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", rpc.ALLREDUCE_ALGOS)
+@pytest.mark.parametrize("n", [2, 4])
+def test_simulated_allreduce_step_matches_closed_form(algo, n):
+    net = NETWORKS["eth40g"]
+    for mode in rpc.WIRE_MODES:
+        cfg = FabricTrainConfig(mode="allreduce", algo=algo,
+                                n_params=N_PARAMS, wire_mode=mode)
+        trainer, reports = _run(rpc.SimulatedTransport(n, net), cfg,
+                                steps=2)
+        want = allreduce_train_step_time(net, N_PARAMS * 4, n,
+                                         algo=algo, mode=mode)
+        for rep in reports:
+            assert rep.modeled
+            assert rep.elapsed_s == want, (mode, rep.elapsed_s, want)
+
+
+@pytest.mark.parametrize("n_ps,n_workers", [(1, 2), (2, 3), (2, 4)])
+def test_simulated_ps_step_matches_closed_form(n_ps, n_workers):
+    net = NETWORKS["rdma_edr"]
+    for mode in rpc.WIRE_MODES:
+        cfg = FabricTrainConfig(mode="ps", n_ps=n_ps,
+                                n_params=N_PARAMS, wire_mode=mode)
+        trainer, reports = _run(
+            rpc.SimulatedTransport(n_ps + n_workers, net), cfg, steps=2)
+        want = ps_train_step_time(net, N_PARAMS * 4, n_ps, n_workers,
+                                  mode=mode)
+        for rep in reports:
+            assert rep.modeled
+            assert rep.elapsed_s == want, (mode, rep.elapsed_s, want)
+            assert rep.flights == 2          # one push + one fetch
+
+
+def test_ps_push_flight_is_ps_round_time():
+    """The push flight's PS ingress is exactly the paper's PS-round
+    model: with one PS, the flight elapsed IS ps_round_time of the
+    tagged shard payload (the PS is the bottleneck endpoint)."""
+    net = NETWORKS["eth40g"]
+    total, n_workers = 65536, 4
+    sizes = (ALLREDUCE_TAG_BYTES, total)
+    push = [(1 + w, 0, sizes) for w in range(n_workers)]
+    for mode in rpc.WIRE_MODES:
+        got = net._flight_elapsed(push, mode)
+        want = net.ps_round_time(_payload_spec(sizes), 1, n_workers,
+                                 mode=mode)
+        assert got == pytest.approx(want, rel=1e-12), (mode, got, want)
+
+
+def test_train_step_time_dispatch():
+    net = NETWORKS["eth40g"]
+    assert train_step_time(net, "ps", 4096, 4, n_ps=2) \
+        == ps_train_step_time(net, 4096, 2, 4)
+    assert train_step_time(net, "allreduce", 4096, 4, algo="tree") \
+        == allreduce_train_step_time(net, 4096, 4, algo="tree")
+    with pytest.raises(ValueError, match="unknown train mode"):
+        train_step_time(net, "hogwild", 4096, 4)
+
+
+def test_ps_allreduce_crossover_on_workers_axis():
+    """The bench_comm crossover claim: at a 64 KiB gradient on eth40g
+    with 2 PS, the PS layout wins in the mid-worker band but its
+    quadratic host-copy contention hands the lead to ring allreduce as
+    workers grow."""
+    net = NETWORKS["eth40g"]
+    total = 65536
+
+    def ps(w):
+        return train_step_time(net, "ps", total, w, n_ps=2)
+
+    def ar(w):
+        return train_step_time(net, "allreduce", total, w, algo="ring")
+
+    assert ps(16) < ar(16)           # PS band
+    assert ar(64) < ps(64)           # allreduce takes over
+    assert ar(128) < ps(128)         # ... and the gap keeps growing
+    assert ps(128) / ar(128) > ps(64) / ar(64)
+
+
+# ---------------------------------------------------------------------------
+# training semantics on loopback (real bytes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    FabricTrainConfig(mode="allreduce", algo="ring", n_params=257),
+    FabricTrainConfig(mode="allreduce", algo="rsag", n_params=257),
+    FabricTrainConfig(mode="ps", n_ps=2, n_params=257),
+], ids=["ring", "rsag", "ps"])
+def test_two_runs_bit_identical(cfg):
+    n = 4 if cfg.mode == "allreduce" else cfg.n_ps + 3
+    _, reports_a = _run(rpc.LoopbackTransport(n), cfg)
+    trainer_a, _ = _run(rpc.LoopbackTransport(n), cfg, steps=0)
+    trainer_b, reports_b = _run(rpc.LoopbackTransport(n), cfg)
+    for _ in range(3):
+        trainer_a.step()
+    assert (trainer_a.params == trainer_b.params).all()
+    for ra, rb in zip(reports_a, reports_b):
+        assert ra.loss == rb.loss and ra.grad_norm == rb.grad_norm
+
+
+def test_ps_and_allreduce_agree_numerically():
+    """Same synthetic engine, same worker count: both modes apply
+    params -= lr * mean(grad) — different summation orders, so
+    allclose rather than bitwise."""
+    n_workers, steps = 3, 3
+    ar = FabricTrainStep(
+        _fabric(rpc.LoopbackTransport(n_workers)),
+        FabricTrainConfig(mode="allreduce", algo="tree", n_params=301))
+    ps = FabricTrainStep(
+        _fabric(rpc.LoopbackTransport(2 + n_workers)),
+        FabricTrainConfig(mode="ps", n_ps=2, n_params=301))
+    for _ in range(steps):
+        ar.step()
+        ps.step()
+    np.testing.assert_allclose(ar.params, ps.params, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_convergence_with_fixed_target():
+    """With a step-independent quadratic target the replicas descend
+    monotonically toward the mean target in every mode."""
+    rng = np.random.default_rng(7)
+    targets = [rng.standard_normal(200).astype(np.float32)
+               for _ in range(3)]
+    goal = np.mean(targets, axis=0)
+    for cfg, n in [
+            (FabricTrainConfig(mode="allreduce", n_params=200, lr=0.4), 3),
+            (FabricTrainConfig(mode="ps", n_ps=1, n_params=200,
+                               lr=0.4), 4)]:
+        trainer = FabricTrainStep(
+            _fabric(rpc.LoopbackTransport(n)), cfg,
+            grad_fn=lambda p, w, t: (p - targets[w]).astype(np.float32))
+        dists = [float(np.linalg.norm(trainer.params - goal))]
+        for _ in range(6):
+            trainer.step()
+            dists.append(float(np.linalg.norm(trainer.params - goal)))
+        assert all(b < a for a, b in zip(dists, dists[1:])), dists
+
+
+def test_engine_is_a_pure_function():
+    a, b = (SyntheticGradEngine(64, seed=5) for _ in range(2))
+    assert (a.init_params() == b.init_params()).all()
+    assert (a.target(1, 3) == b.target(1, 3)).all()
+    assert not (a.target(1, 3) == a.target(2, 3)).all()
+    assert not (a.target(1, 3) == a.target(1, 4)).all()
+    p = a.init_params()
+    assert (a.grad(p, 0, 0) == p - a.target(0, 0)).all()
+    assert a.loss(a.target(0, 0), 0, 0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# seeded faults: a retried step trains bit-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,n", [
+    (FabricTrainConfig(mode="allreduce", algo="rsag", n_params=256), 4),
+    (FabricTrainConfig(mode="ps", n_ps=2, n_params=256), 6),
+], ids=["allreduce", "ps"])
+def test_faulty_training_is_bit_identical(cfg, n):
+    clean, _ = _run(rpc.LoopbackTransport(n), cfg)
+    transport = rpc.FaultInjectionTransport(
+        rpc.LoopbackTransport(n), seed=13, fault_rate=0.2, max_faults=16)
+    fab = _fabric(transport, client_interceptors=[
+        rpc.RetryInterceptor(max_attempts=8)])
+    faulty = FabricTrainStep(fab, cfg)
+    for _ in range(3):
+        faulty.step()
+    assert transport.faults_injected > 0, "no faults fired — vacuous"
+    assert (clean.params == faulty.params).all()
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    fab = _fabric(rpc.LoopbackTransport(4))
+    with pytest.raises(ValueError, match="unknown train mode"):
+        FabricTrainStep(fab, FabricTrainConfig(mode="hogwild"))
+    with pytest.raises(ValueError, match="n_ps < n_endpoints"):
+        FabricTrainStep(fab, FabricTrainConfig(mode="ps", n_ps=4))
+    with pytest.raises(ValueError, match="n_ps < n_endpoints"):
+        FabricTrainStep(fab, FabricTrainConfig(mode="ps", n_ps=0))
+    with pytest.raises(ValueError, match=">= 2 endpoints"):
+        FabricTrainStep(_fabric(rpc.LoopbackTransport(1)),
+                        FabricTrainConfig(mode="allreduce"))
+    with pytest.raises(ValueError, match="cover every shard"):
+        FabricTrainStep(fab, FabricTrainConfig(mode="allreduce",
+                                               n_params=3))
+
+
+def test_report_shape():
+    cfg = FabricTrainConfig(mode="allreduce", algo="ring", n_params=64)
+    trainer, reports = _run(rpc.LoopbackTransport(3), cfg, steps=2)
+    assert [r.step for r in reports] == [0, 1]
+    for r in reports:
+        assert r.mode == "allreduce" and not r.modeled
+        assert r.elapsed_s >= 0.0            # loopback: wall time, not modeled
+        assert np.isfinite(r.loss) and np.isfinite(r.grad_norm)
+        assert r.flights == 2 * (3 - 1)      # one flight per ring step
+    assert trainer.step_count == 2

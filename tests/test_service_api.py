@@ -473,6 +473,24 @@ def test_no_blanket_exception_handlers_inside_rpc():
     assert not offenders, offenders
 
 
+def test_no_blanket_exception_handlers_inside_train():
+    """The same gate extended to src/repro/train/: the trainer's retry
+    loop used to catch blanket ``Exception`` and replay programming
+    bugs as if they were node failures. Broad catches go through the
+    named STEP_FAULTS boundary in train/trainer.py."""
+    root = pathlib.Path(__file__).resolve().parents[1] \
+        / "src" / "repro" / "train"
+    pat = re.compile(r"except +\(? *(Base)?Exception\b")
+    offenders = []
+    for p in sorted(root.rglob("*.py")):
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{p.name}:{i}: {line.strip()}")
+    assert not offenders, offenders
+    from repro.train import trainer as trainer_mod
+    assert trainer_mod.STEP_FAULTS == (RuntimeError, OSError)
+
+
 def test_no_wall_clock_reads_inside_rpc():
     """The CI gate the wall-clock step enforces, as a test: the fabric
     runs on ``RpcFabric.now()`` (the modeled transport clock when there

@@ -245,9 +245,12 @@ def test_baseline_collect_check_and_drift(tmp_path, capsys):
     assert doc["schema"] == bench.BASELINE_SCHEMA
     assert set(doc["families"]) == {
         "p2p_latency", "p2p_bandwidth", "ps_throughput",
-        "fully_connected", "ring", "incast"}
+        "fully_connected", "ring", "incast",
+        "allreduce_ring", "allreduce_tree", "allreduce_rsag",
+        "train_step_ps", "train_step_allreduce"}
     for fam in doc["families"].values():
         assert fam["round_time_s"] > 0 and fam["throughput"] > 0
+    assert doc["train_crossover"]["allreduce_wins_from"] is not None
     # clean check: the numbers are deterministic, zero drift
     bench_comm.main(["--check-baseline", str(base)])
     assert "baseline OK" in capsys.readouterr().out

@@ -83,6 +83,72 @@ def test_deterministic_replay_same_loss(tmp_path):
         assert got[s] == pytest.approx(ref_losses[s], rel=1e-4), s
 
 
+def test_trainer_configs_not_shared_between_instances():
+    """Bugfix: ``tcfg: TrainerConfig = TrainerConfig()`` in the
+    signature was evaluated once at class definition — every Trainer
+    built without explicit configs shared (and mutated) the SAME
+    instance. Defaults are now constructed per instance."""
+    cfg = get_reduced_config("qwen3-8b", n_layers=2)
+    t1 = Trainer(NO_MESH, cfg, _shape())
+    t2 = Trainer(NO_MESH, cfg, _shape())
+    assert t1.tcfg is not t2.tcfg
+    assert t1.dcfg is not t2.dcfg
+    t1.tcfg.total_steps = 999     # DataConfig is frozen; TrainerConfig
+    assert t2.tcfg.total_steps == TrainerConfig().total_steps
+    assert t2.dcfg == DataConfig()
+    # an explicit config is still taken as-is, not copied
+    tcfg = TrainerConfig(total_steps=7)
+    assert Trainer(NO_MESH, cfg, _shape(), tcfg).tcfg is tcfg
+
+
+def test_resume_preserves_checkpoint_extra(tmp_path):
+    """Bugfix: resume_or_init unpacked ``(tree, extra)`` from restore
+    and dropped ``extra`` on the floor — a resume->save cycle erased
+    whatever metadata the launcher had recorded. It now survives on
+    ``trainer.resume_extra`` and is written back with every save."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    tr = _mk_trainer(tmp_path, total=3)
+    params, opt, _ = tr.init_state(0)
+    ckpt_lib.save(str(tmp_path), 1, (params, opt),
+                  extra={"run_id": "r-42", "cursor": 17})
+    tr2 = _mk_trainer(tmp_path, total=3)
+    _, _, start = tr2.resume_or_init()
+    assert start == 1
+    assert tr2.resume_extra == {"run_id": "r-42", "cursor": 17}
+    tr2.train()
+    last = ckpt_lib.latest_step(str(tmp_path))
+    restored, extra = ckpt_lib.restore(str(tmp_path), last, (params, opt))
+    assert extra == {"run_id": "r-42", "cursor": 17}
+
+
+def test_programming_errors_propagate_not_retried(tmp_path):
+    """Bugfix: the retry loop caught blanket ``Exception``, so a
+    TypeError/ValueError (a bug, not a node failure) was retried and
+    then 'recovered' from the checkpoint into the same bug. Only the
+    documented STEP_FAULTS boundary is absorbed now."""
+    def bug(step):
+        if step == 2:
+            raise ValueError("programming error, not a node failure")
+
+    tr = _mk_trainer(tmp_path, total=4, fault_hook=bug,
+                     max_step_retries=3)
+    with pytest.raises(ValueError, match="programming error"):
+        tr.train()
+    # RuntimeError (the node-failure path) is still absorbed
+    fails = {"left": 1}
+
+    def node_fault(step):
+        if step == 2 and fails["left"] > 0:
+            fails["left"] -= 1
+            raise RuntimeError("injected node failure")
+
+    tr2 = _mk_trainer(tmp_path / "b", total=4, fault_hook=node_fault,
+                      max_step_retries=3)
+    tr2.train()
+    assert [r for r in tr2.history if r.step == 2][0].retried == 1
+
+
 def test_straggler_watchdog(tmp_path):
     import time
 

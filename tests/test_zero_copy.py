@@ -100,6 +100,42 @@ def test_pool_registry():
     assert rpc.get_pool(77) is not p
 
 
+def test_pool_owned_placements_pin_their_slots():
+    """Bugfix: an owned (in-flight) span must never be recycled. The
+    allocator skips live spans when it wraps and raises PoolExhausted
+    when no gap fits — the old wrapping bump allocator silently
+    overwrote the slot and the receiver's view read torn bytes."""
+    pool = bufpool.BufferPool(pool_id=94, capacity=4 * framing.LANE)
+    a = np.arange(3 * framing.LANE, dtype=np.uint8) % 251
+    off, size = pool.place(a, owner=1)
+    assert pool.live_bytes() == 3 * framing.LANE
+    view = pool.read(off, size)
+    with pytest.raises(bufpool.PoolExhausted, match="in-flight"):
+        pool.place(np.zeros(2 * framing.LANE, np.uint8), owner=2)
+    assert np.array_equal(view, a)          # survived the failed place
+    # wrap AROUND a live span is fine when a gap fits
+    off2, _ = pool.place(np.zeros(framing.LANE, np.uint8), owner=2)
+    assert off2 == 3 * framing.LANE and np.array_equal(view, a)
+    # completion frees the span; the next placement reuses it
+    assert pool.release(1) == 3 * framing.LANE
+    assert pool.release(1) == 0             # idempotent
+    pool.place(np.zeros(2 * framing.LANE, np.uint8), owner=3)
+    assert pool.live_bytes() == 3 * framing.LANE
+    pool.reset()
+    assert pool.live_bytes() == 0
+
+
+def test_release_call_spans_all_pools():
+    rpc.reset_pools()
+    a, b = rpc.get_pool(1, capacity=1 << 12), rpc.get_pool(2,
+                                                           capacity=1 << 12)
+    a.place(np.zeros(100, np.uint8), owner=7)
+    b.place(np.zeros(50, np.uint8), owner=7)
+    assert rpc.release_call(7) == 2 * framing.LANE
+    assert a.live_bytes() == 0 and b.live_bytes() == 0
+    rpc.reset_pools()
+
+
 # ---------------------------------------------------------------------------
 # framing: three-mode round trips + the bugfix sweep
 # ---------------------------------------------------------------------------
@@ -286,6 +322,67 @@ def test_zero_copy_credits_charged_by_described_bytes():
     assert ch.window.msgs_avail == 4
 
 
+def test_flight_over_pool_capacity_raises_not_tears():
+    """Regression: four 400 kB echo calls in ONE flight through a 1 MiB
+    pool. The old wrapping allocator recycled the first calls' live
+    slots mid-flight and every reply came back with torn bytes (header
+    garbage from later placements). Free-on-complete pins each call's
+    spans until its reply lands, so this now fails loudly instead."""
+    rpc.reset_pools()
+    rpc.get_pool(capacity=1 << 20)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2),
+                        window_bytes=16 << 20, window_msgs=64)
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    ch = fab.channel(0, 1, wire_mode="zero_copy")
+    for i in range(4):
+        ch.call("repro.Conformance/Echo", [np.full(400_000, i, np.uint8)])
+    with pytest.raises(bufpool.PoolExhausted, match="pinned"):
+        fab.flush()
+    rpc.reset_pools()
+
+
+def test_free_on_complete_recycles_slots():
+    """Steady state: sequential zero-copy echoes whose cumulative bytes
+    dwarf the pool — completion releases each call's spans, so every
+    reply is byte-exact and nothing stays pinned."""
+    rpc.reset_pools()
+    pool = rpc.get_pool(capacity=2 << 20)
+    fab = rpc.RpcFabric(rpc.LoopbackTransport(2))
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    stub = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1, wire_mode="zero_copy")
+    for i in range(16):                     # 16 x 700 kB x 2 (req+reply)
+        payload = _bufs([700_000], seed=i)
+        out = stub.echo(payload).result()
+        assert np.array_equal(out[0], payload[0]), f"torn at echo {i}"
+    assert pool.live_bytes() == 0           # everything released
+    assert pool.releases == 16 and pool.placements == 32
+    rpc.reset_pools()
+
+
+def test_retry_releases_dead_attempt_spans():
+    """A faulted attempt's placements are unpinned before the retry
+    re-places the frames — repeated retries through a small pool must
+    not exhaust it, and the final reply is byte-exact."""
+    rpc.reset_pools()
+    pool = rpc.get_pool(capacity=2 << 20)
+    transport = rpc.FaultInjectionTransport(
+        rpc.LoopbackTransport(2), seed=3, fault_rate=0.5, max_faults=12)
+    fab = rpc.RpcFabric(transport, client_interceptors=[
+        rpc.RetryInterceptor(max_attempts=16)])
+    fab.add_server(1).add_service(rpc.CONFORMANCE_SERVICE,
+                                  rpc.conformance_handlers())
+    stub = fab.stub(rpc.CONFORMANCE_SERVICE, 0, 1, wire_mode="zero_copy")
+    for i in range(8):
+        payload = _bufs([600_000], seed=100 + i)
+        out = stub.echo(payload).result()
+        assert np.array_equal(out[0], payload[0])
+    assert transport.faults_injected > 0, "no faults fired — vacuous"
+    assert pool.live_bytes() == 0
+    rpc.reset_pools()
+
+
 # ---------------------------------------------------------------------------
 # bench + CLI surface
 # ---------------------------------------------------------------------------
@@ -338,12 +435,14 @@ def test_bench_comm_collective_zero_copy_cell_skipped(capsys):
     assert "SKIPPED" in table and "zero_copy" in table
 
 
-def test_baseline_schema2_covers_wire_modes():
+def test_baseline_schema3_covers_wire_modes():
     b = bench.collect_baseline(num_workers=2)
-    assert b["schema"] == bench.BASELINE_SCHEMA == 2
+    assert b["schema"] == bench.BASELINE_SCHEMA == 3
     assert set(b["wire_modes"]) == set(framing.WIRE_MODES)
     fams = {"p2p_latency", "p2p_bandwidth", "ps_throughput",
-            "fully_connected", "ring", "incast"}
+            "fully_connected", "ring", "incast",
+            "allreduce_ring", "allreduce_tree", "allreduce_rsag",
+            "train_step_ps", "train_step_allreduce"}
     for wm, entry in b["wire_modes"].items():
         assert set(entry) == fams, wm
         assert all(v["round_time_s"] > 0 for v in entry.values())
@@ -353,4 +452,12 @@ def test_baseline_schema2_covers_wire_modes():
     for fam in fams:
         assert b["families"][fam]["round_time_s"] \
             == sg[fam]["round_time_s"], fam
+    # schema 3: the committed PS -> allreduce crossover sweep
+    cross = b["train_crossover"]
+    assert [p["workers"] for p in cross["points"]] \
+        == list(bench.CROSSOVER_WORKERS)
+    assert cross["allreduce_wins_from"] is not None
+    winners = [p["winner"] for p in cross["points"]]
+    assert "ps" in winners and "allreduce" in winners
+    assert winners[-1] == "allreduce"          # AR holds at scale
     assert not bench.check_baseline(b)         # self-diff is clean
